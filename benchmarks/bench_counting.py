@@ -1,0 +1,82 @@
+"""Paper Figs. 5-7 + Table 2: counting runtimes across wedge-aggregation
+strategies × rankings × modes, with and without the Wang et al. cache
+optimization (§6.3).
+
+Emits CSV rows: name,us_per_call,derived.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+from .common import BENCH_GRAPHS, emit, timeit
+
+from repro.core import count_butterflies
+from repro.core.oracle import global_count
+
+
+AGGS = ("sort", "hash", "histogram", "batch", "batch_wa")
+ORDERS = ("side", "degree", "approx_degree", "approx_complement_degeneracy")
+
+
+def run(graphs, aggs, orders, modes, cache_opt=False, check_small=True):
+    for gname in graphs:
+        g = BENCH_GRAPHS[gname]()
+        want = None
+        if check_small and g.n_u * g.n_v <= 4_000_000:
+            want = global_count(g)
+        for mode in modes:
+            for order in orders:
+                for agg in aggs:
+                    if agg == "histogram" and g.n >= 8_000:
+                        continue  # dense O(n^2) table: small graphs only
+                    try:
+                        t = timeit(
+                            lambda: count_butterflies(
+                                g, order=order, aggregation=agg, mode=mode,
+                                cache_opt=cache_opt,
+                                count_dtype=jnp.int64,
+                            ),
+                            repeats=2,
+                        )
+                    except Exception as e:  # noqa: BLE001
+                        emit(
+                            f"count/{gname}/{mode}/{order}/{agg}"
+                            f"{'/cacheopt' if cache_opt else ''}",
+                            -1.0,
+                            f"ERROR:{type(e).__name__}",
+                        )
+                        continue
+                    derived = ""
+                    if want is not None and mode == "global":
+                        r = count_butterflies(
+                            g, order=order, aggregation=agg, mode="global",
+                            cache_opt=cache_opt, count_dtype=jnp.int64,
+                        )
+                        derived = (
+                            f"count={int(r.total)},"
+                            f"{'OK' if int(r.total) == want else 'MISMATCH'}"
+                        )
+                    emit(
+                        f"count/{gname}/{mode}/{order}/{agg}"
+                        f"{'/cacheopt' if cache_opt else ''}",
+                        t * 1e6,
+                        derived,
+                    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--graphs", nargs="*", default=["pl_small", "pl_medium"])
+    ap.add_argument("--aggs", nargs="*", default=list(AGGS))
+    ap.add_argument("--orders", nargs="*", default=list(ORDERS))
+    ap.add_argument("--modes", nargs="*", default=["global", "vertex", "edge"])
+    ap.add_argument("--cache-opt", action="store_true")
+    args = ap.parse_args(argv)
+    run(args.graphs, args.aggs, args.orders, args.modes, args.cache_opt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Distributed-engine scaling: butterfly counting over an 8-way host
+mesh vs 1 device (self-relative layout check; real scaling numbers come
+from the production-mesh dry-run + roofline)."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from .common import emit, timeit
+
+from repro.core.distributed import distributed_count
+from repro.data.graphs import powerlaw_bipartite
+
+
+def main(argv=None):
+    g = powerlaw_bipartite(8_000, 6_000, 60_000, seed=5)
+    n_dev = len(jax.devices())
+    shape = (n_dev,)
+    mesh = jax.make_mesh(
+        shape, ("data",), axis_types=(jax.sharding.AxisType.Auto,)
+    )
+    out, rg = distributed_count(g, mesh, mode="global")
+    t = timeit(lambda: distributed_count(g, mesh, mode="global")[0])
+    emit(
+        f"distributed/global/dev{n_dev}",
+        t * 1e6,
+        f"count={int(out)}",
+    )
+    out_v, _ = distributed_count(g, mesh, mode="vertex")
+    t = timeit(lambda: distributed_count(g, mesh, mode="vertex")[0])
+    emit(f"distributed/vertex/dev{n_dev}", t * 1e6, "")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Pallas kernel micro-benchmarks (interpret mode on CPU = correctness
+cost; TPU timings come from the roofline model, not this container).
+Reports ref-path timings + kernel/ref agreement."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .common import emit, timeit
+
+from repro.kernels import ops, ref
+from repro.kernels.wedge_count import wedge_histogram_pallas
+
+
+def main(argv=None):
+    rng = np.random.default_rng(0)
+    for n, b in [(1 << 14, 1 << 12), (1 << 16, 1 << 14)]:
+        keys = jnp.asarray(rng.integers(0, b, n).astype(np.int32))
+        valid = jnp.ones(n, jnp.int32)
+        t_ref = timeit(
+            lambda: ref.wedge_histogram_ref(keys, valid, b).block_until_ready()
+        )
+        got = wedge_histogram_pallas(keys, valid, b)
+        want = ref.wedge_histogram_ref(keys, valid, b)
+        agree = bool(jnp.array_equal(got, want))
+        emit(
+            f"kernel/wedge_histogram/n{n}_b{b}",
+            t_ref * 1e6,
+            f"pallas_interpret_agrees={agree}",
+        )
+    d = jnp.asarray(rng.integers(0, 100, 1 << 14).astype(np.int32))
+    rep = jnp.asarray((rng.random(1 << 14) < 0.3).astype(np.int32))
+    v = jnp.ones(1 << 14, jnp.int32)
+    t = timeit(lambda: ref.butterfly_combine_ref(d, rep, v)[2].block_until_ready())
+    g1, g2, gt = ops.butterfly_combine(d, rep, v, use_pallas=True)
+    w1, w2, wt = ref.butterfly_combine_ref(d, rep, v)
+    emit(
+        "kernel/butterfly_combine/n16k",
+        t * 1e6,
+        f"pallas_interpret_agrees={bool(jnp.array_equal(g1, w1)) and float(gt)==float(wt)}",
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Paper Table 4 + Figs. 12-13: tip/wing decomposition runtimes across
+wedge-aggregation methods; reports ρ (peeling complexity) per graph."""
+from __future__ import annotations
+
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+from .common import BENCH_GRAPHS, emit, timeit
+
+from repro.core import count_butterflies
+from repro.core.peel import peel_tips, peel_wings
+from repro.data.graphs import powerlaw_bipartite
+
+PEEL_GRAPHS = {
+    "peel_small": lambda: powerlaw_bipartite(600, 500, 4_000, seed=7),
+    "peel_medium": lambda: powerlaw_bipartite(3_000, 2_500, 18_000, seed=8),
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--graphs", nargs="*", default=list(PEEL_GRAPHS))
+    args = ap.parse_args(argv)
+    for gname in args.graphs:
+        g = PEEL_GRAPHS[gname]()
+        rv = count_butterflies(g, mode="vertex", count_dtype=jnp.int64)
+        re_ = count_butterflies(g, mode="edge", count_dtype=jnp.int64)
+        side = 0 if g.wedge_totals()[0] <= g.wedge_totals()[1] else 1
+        counts_v = rv.per_u if side == 0 else rv.per_v
+        for agg in ("sort", "hash"):
+            res = peel_tips(g, counts=counts_v, side=side, aggregation=agg)
+            t = timeit(
+                lambda: peel_tips(
+                    g, counts=counts_v, side=side, aggregation=agg
+                ),
+                repeats=1,
+            )
+            emit(
+                f"peel_tips/{gname}/{agg}",
+                t * 1e6,
+                f"rho_v={res.rounds},max_tip={int(res.numbers.max())}",
+            )
+        # WPEEL-V: stored-wedge work/space trade-off (paper Alg. 7)
+        from repro.core.peel import peel_tips_stored
+
+        res = peel_tips_stored(g, counts=counts_v, side=side)
+        t = timeit(
+            lambda: peel_tips_stored(g, counts=counts_v, side=side),
+            repeats=1,
+        )
+        emit(
+            f"peel_tips_stored/{gname}",
+            t * 1e6,
+            f"rho_v={res.rounds},max_tip={int(res.numbers.max())}",
+        )
+        res = peel_wings(g, counts=re_.per_edge)
+        t = timeit(lambda: peel_wings(g, counts=re_.per_edge), repeats=1)
+        emit(
+            f"peel_wings/{gname}",
+            t * 1e6,
+            f"rho_e={res.rounds},max_wing={int(res.numbers.max())}",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Paper Table 3: the wedge-reduction metric f = (w_s - w_r) / w_s per
+ranking, plus ranking construction time (the paper's point that exact
+complement degeneracy is too slow to be worth it)."""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from .common import BENCH_GRAPHS, emit
+
+from repro.core import RANKINGS, make_order, preprocess
+from repro.core.wedges import host_wedge_counts
+
+
+def wedges_under(g, order) -> int:
+    rg = preprocess(g, order)
+    return int(host_wedge_counts(rg).sum())
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--graphs", nargs="*", default=["pl_small", "pl_medium", "pl_skewed"])
+    args = ap.parse_args(argv)
+    for gname in args.graphs:
+        g = BENCH_GRAPHS[gname]()
+        w_side = wedges_under(g, make_order(g, "side"))
+        for rname in RANKINGS:
+            t0 = time.perf_counter()
+            order = make_order(g, rname)
+            t_rank = time.perf_counter() - t0
+            w = wedges_under(g, order)
+            f = (w_side - w) / max(w_side, 1)
+            emit(
+                f"ranking/{gname}/{rname}",
+                t_rank * 1e6,
+                f"wedges={w},f={f:.4f}",
+            )
+
+
+if __name__ == "__main__":
+    main()

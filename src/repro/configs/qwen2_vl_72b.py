@@ -1,0 +1,19 @@
+"""qwen2-vl-72b [vlm]: M-RoPE, dynamic resolution. The vision frontend is
+a STUB — input_specs() provides precomputed patch embeddings; the 80L
+backbone is fully implemented. [arXiv:2409.12191; hf]
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-72b",
+    family="vlm",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=29568,
+    vocab=152064,
+    mrope=True,
+    frontend_stub=True,
+    rope_theta=1e6,
+)

@@ -1,0 +1,20 @@
+"""seamless-m4t-large-v2 [audio]: encoder-decoder, multimodal. The audio
+frontend is a STUB — input_specs() provides precomputed frame
+embeddings; the 24L encoder + 24L decoder transformer is fully
+implemented. [arXiv:2308.11596; hf]
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="seamless-m4t-large-v2",
+    family="audio",
+    n_layers=24,  # decoder layers
+    enc_layers=24,  # encoder layers
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=8192,
+    vocab=256206,
+    frontend_stub=True,
+    rope_theta=1e4,
+)

@@ -1,0 +1,22 @@
+"""zamba2-7b [hybrid]: Mamba2 backbone + shared attention block applied
+every k layers (weights shared across applications — the Zamba trick).
+ssm_state=64. [arXiv:2411.15242; unverified]
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=14336,
+    vocab=32000,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_conv=4,
+    ssm_chunk=128,
+    attn_every=6,  # shared attention block interleaved every 6 mamba layers
+    sliding_window=4096,  # shared block uses a bounded window at 500k ctx
+)

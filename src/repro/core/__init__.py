@@ -1,0 +1,16 @@
+"""ParButterfly core: the paper's counting + peeling framework in JAX."""
+from .graph import BipartiteGraph, RankedGraph, preprocess
+from .ranking import RANKINGS, make_order, wedges_processed
+from .count import CountResult, count_butterflies, count_from_ranked
+
+__all__ = [
+    "BipartiteGraph",
+    "RankedGraph",
+    "preprocess",
+    "RANKINGS",
+    "make_order",
+    "wedges_processed",
+    "CountResult",
+    "count_butterflies",
+    "count_from_ranked",
+]

@@ -1,0 +1,321 @@
+"""Butterfly counting: global, per-vertex, per-edge (paper Algs. 3-4).
+
+Given the group multiplicity ``d`` of each endpoint pair (x1, x2):
+  - each endpoint gets C(d, 2) butterflies,
+  - each wedge's center gets d - 1,
+  - each wedge's two edges get d - 1  (Lemma 4.2).
+
+Counts are accumulated over *rank-space* vertex ids and undirected edge
+ids, then mapped back to original (U, V) ids by the public API.
+
+Overflow note: butterfly counts on large graphs exceed int32; enable
+x64 (``jax.config.update("jax_enable_x64", True)``) and pass
+``count_dtype=jnp.int64`` — the benchmarks do this.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .aggregate import Groups, aggregate_dense, aggregate_hash, aggregate_sort
+from .graph import BipartiteGraph, RankedGraph, preprocess
+from .ranking import make_order
+from .wedges import (
+    DeviceGraph,
+    Wedges,
+    device_graph,
+    gather_wedges,
+    host_wedge_counts,
+    slot_wedge_counts,
+)
+
+__all__ = ["CountResult", "count_butterflies", "count_from_ranked"]
+
+
+class CountResult(NamedTuple):
+    mode: str
+    total: Optional[np.ndarray]  # scalar (global mode)
+    per_u: Optional[np.ndarray]  # (n_u,)
+    per_v: Optional[np.ndarray]  # (n_v,)
+    per_edge: Optional[np.ndarray]  # (m,) aligned with g.edges rows
+    aggregation: str
+    order: str
+
+
+def _choose2(d: jax.Array, dtype) -> jax.Array:
+    dd = d.astype(dtype)
+    return dd * (dd - 1) // 2
+
+
+def _accumulate(
+    dg: DeviceGraph,
+    w: Wedges,
+    groups: Groups,
+    mode: str,
+    dtype,
+):
+    """Turn group multiplicities into butterfly counts (Lemma 4.2)."""
+    d = groups.d_per_wedge
+    dm1 = jnp.where(w.valid & (d > 0), (d - 1).astype(dtype), 0)
+    if mode == "global":
+        # Every group of d wedges = C(d,2) butterflies, each counted once
+        # thanks to the rank filter.
+        return jnp.sum(jnp.where(groups.valid, _choose2(groups.d, dtype), 0))
+    if mode == "vertex":
+        bv = jnp.zeros((dg.n_pad,), dtype)
+        g_add = jnp.where(groups.valid, _choose2(groups.d, dtype), 0)
+        bv = bv.at[groups.x1].add(g_add)
+        bv = bv.at[groups.x2].add(g_add)
+        # centers: w.y holds an out-of-range sentinel for invalid wedges;
+        # JAX scatter drops OOB updates.
+        bv = bv.at[w.y].add(dm1)
+        return bv
+    if mode == "edge":
+        be = jnp.zeros((dg.m,), dtype)
+        be = be.at[dg.undirected_id[w.center_slot]].add(dm1)
+        be = be.at[dg.undirected_id[w.second_slot]].add(dm1)
+        return be
+    raise ValueError(f"mode must be global|vertex|edge, got {mode}")
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("w_cap", "aggregation", "mode", "direction", "dtype"),
+)
+def _count_device(
+    dg: DeviceGraph,
+    *,
+    w_cap: int,
+    aggregation: str,
+    mode: str,
+    direction: str,
+    dtype,
+):
+    cnt = slot_wedge_counts(dg, direction)
+    w = gather_wedges(dg, cnt, w_cap, direction)
+    if aggregation == "sort":
+        groups, w = aggregate_sort(w)
+    elif aggregation == "hash":
+        groups = aggregate_hash(w)
+    elif aggregation == "histogram":
+        groups = aggregate_dense(w, dg.n_pad)
+    else:
+        raise ValueError(f"bad aggregation {aggregation}")
+    return _accumulate(dg, w, groups, mode, dtype), groups.ok
+
+
+def _batch_bounds(
+    wv: np.ndarray, n: int, wedge_aware: bool, rows: int, target: int
+) -> tuple[np.ndarray, int]:
+    """Vertex-block boundaries for batching.
+
+    simple: fixed ``rows`` vertices per block. wedge-aware: greedy blocks
+    of <= rows vertices capped at ~``target`` wedges (paper §3.1.2).
+    Returns (boundaries array (n_blocks+1,), max wedges per block).
+    """
+    if not wedge_aware:
+        bounds = list(range(0, n, rows)) + [n]
+    else:
+        bounds = [0]
+        acc = 0
+        for v in range(n):
+            if (v - bounds[-1]) >= rows or (
+                acc + wv[v] > target and v > bounds[-1]
+            ):
+                bounds.append(v)
+                acc = 0
+            acc += int(wv[v])
+        bounds.append(n)
+    bounds = np.unique(np.asarray(bounds, dtype=np.int64))
+    woff = np.concatenate([[0], np.cumsum(wv[:n])])
+    per_block = woff[bounds[1:]] - woff[bounds[:-1]]
+    return bounds, int(per_block.max(initial=1))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("chunk_cap", "rows", "mode", "direction", "dtype"),
+)
+def _count_batch_device(
+    dg: DeviceGraph,
+    bounds: jax.Array,  # (n_blocks + 1,) vertex boundaries
+    *,
+    chunk_cap: int,
+    rows: int,
+    mode: str,
+    direction: str,
+    dtype,
+):
+    """Batch aggregation (paper's simple/wedge-aware batching).
+
+    Each block owns the wedges of a contiguous vertex range (wedge ids
+    follow CSR order, so the range is contiguous in wedge space). A
+    dense (rows, n_pad) table plays the per-worker array of the paper;
+    the group-representative trick (scatter-min of wedge ids) replaces
+    the serial 'first time I see this endpoint' test.
+    """
+    cnt = slot_wedge_counts(dg, direction)
+    w_off = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(cnt.astype(jnp.int32))]
+    )
+    n_blocks = bounds.shape[0] - 1
+    n_pad = dg.n_pad
+
+    if mode == "global":
+        acc0 = jnp.zeros((), dtype)
+    elif mode == "vertex":
+        acc0 = jnp.zeros((n_pad,), dtype)
+    else:
+        acc0 = jnp.zeros((dg.m,), dtype)
+
+    def body(i, acc):
+        v0 = bounds[i]
+        v1 = bounds[i + 1]
+        ws = w_off[dg.offsets[v0]]
+        we = w_off[dg.offsets[v1]]
+        wid = ws + jnp.arange(chunk_cap, dtype=jnp.int32)
+        valid = wid < we
+        wc = jnp.minimum(wid, jnp.maximum(we - 1, 0))
+        e = jnp.searchsorted(w_off, wc, side="right").astype(jnp.int32) - 1
+        e = jnp.clip(e, 0, dg.e_pad - 1)
+        j = wc - w_off[e]
+        y = dg.neighbors[e]
+        y_safe = jnp.minimum(y, n_pad - 1)
+        if direction == "low":
+            x1 = dg.edge_src[e]
+            pos = dg.offsets[y_safe + 1] - cnt[e] + j
+            x2 = dg.neighbors[jnp.clip(pos, 0, dg.e_pad - 1)]
+        else:
+            x2 = dg.edge_src[e]
+            pos = dg.offsets[y_safe] + j
+            x1 = dg.neighbors[jnp.clip(pos, 0, dg.e_pad - 1)]
+        pos = jnp.clip(pos, 0, dg.e_pad - 1)
+        # Blocks follow the *iterated* endpoint (= edge_src): x1 under
+        # "low", x2 under the cache-optimized "high" direction. The
+        # table column is the other endpoint.
+        if direction == "low":
+            row, col = x1 - v0, x2
+        else:
+            row, col = x2 - v0, x1
+        tkey = row * n_pad + col
+        tkey = jnp.where(valid, tkey, rows * n_pad)  # OOB -> dropped
+        table = jnp.zeros((rows * n_pad,), jnp.int32).at[tkey].add(1)
+        lid = jnp.arange(chunk_cap, dtype=jnp.int32)
+        rep_t = (
+            jnp.full((rows * n_pad,), chunk_cap, jnp.int32).at[tkey].min(lid)
+        )
+        tkey_safe = jnp.minimum(tkey, rows * n_pad - 1)
+        d = jnp.where(valid, table[tkey_safe], 0)
+        rep = valid & (rep_t[tkey_safe] == lid)
+        dm1 = jnp.where(valid & (d > 0), (d - 1).astype(dtype), 0)
+        if mode == "global":
+            # explicit cast: under x64 jnp.sum may widen and break the
+            # fori_loop carry dtype
+            return (acc + jnp.sum(jnp.where(rep, _choose2(d, dtype), 0))).astype(dtype)
+        if mode == "vertex":
+            g_add = jnp.where(rep, _choose2(d, dtype), 0)
+            acc = acc.at[jnp.where(rep, x1, n_pad)].add(g_add)
+            acc = acc.at[jnp.where(rep, x2, n_pad)].add(g_add)
+            acc = acc.at[jnp.where(valid, y, n_pad)].add(dm1)
+            return acc
+        acc = acc.at[dg.undirected_id[e]].add(dm1)
+        acc = acc.at[dg.undirected_id[pos]].add(dm1)
+        return acc
+
+    return jax.lax.fori_loop(0, n_blocks, body, acc0)
+
+
+def count_from_ranked(
+    rg: RankedGraph,
+    *,
+    aggregation: str = "sort",
+    mode: str = "global",
+    cache_opt: bool = False,
+    count_dtype=None,
+    batch_rows: int = 8,
+    batch_target: int = 1 << 14,
+):
+    """Count butterflies on a preprocessed graph. Returns rank-space
+    device arrays (or a scalar for global mode)."""
+    dtype = count_dtype or jnp.int32
+    direction = "high" if cache_opt else "low"
+    dg = device_graph(rg)
+    wv_slots = host_wedge_counts(rg, direction)
+    if aggregation in ("batch", "batch_wa"):
+        # per-vertex wedge counts (by iterating endpoint)
+        n = rg.n
+        src = rg.edge_src[: 2 * rg.m]
+        wv = np.zeros(rg.n_pad, dtype=np.int64)
+        np.add.at(wv, src, wv_slots[: 2 * rg.m])
+        bounds, chunk = _batch_bounds(
+            wv, rg.n_pad, aggregation == "batch_wa", batch_rows, batch_target
+        )
+        chunk_cap = max(128, ((chunk + 127) // 128) * 128)
+        out = _count_batch_device(
+            dg,
+            jnp.asarray(bounds, jnp.int32),
+            chunk_cap=chunk_cap,
+            rows=batch_rows,
+            mode=mode,
+            direction=direction,
+            dtype=dtype,
+        )
+        return out
+    w_total = int(wv_slots.sum())
+    w_cap = max(128, ((w_total + 127) // 128) * 128)
+    out, ok = _count_device(
+        dg,
+        w_cap=w_cap,
+        aggregation=aggregation,
+        mode=mode,
+        direction=direction,
+        dtype=dtype,
+    )
+    if aggregation == "hash" and not bool(ok):
+        # bounded-probe overflow: fall back to sort (documented delta #3)
+        out, _ = _count_device(
+            dg,
+            w_cap=w_cap,
+            aggregation="sort",
+            mode=mode,
+            direction=direction,
+            dtype=dtype,
+        )
+    return out
+
+
+def count_butterflies(
+    g: BipartiteGraph,
+    *,
+    order: str = "degree",
+    aggregation: str = "sort",
+    mode: str = "global",
+    cache_opt: bool = False,
+    count_dtype=None,
+    batch_rows: int = 8,
+) -> CountResult:
+    """Public entry point: rank -> retrieve -> aggregate -> count."""
+    ordering = make_order(g, order)
+    rg = preprocess(g, ordering, order_name=order)
+    out = count_from_ranked(
+        rg,
+        aggregation=aggregation,
+        mode=mode,
+        cache_opt=cache_opt,
+        count_dtype=count_dtype,
+        batch_rows=batch_rows,
+    )
+    out = np.asarray(jax.device_get(out))
+    if mode == "global":
+        return CountResult(mode, out, None, None, None, aggregation, order)
+    if mode == "vertex":
+        per_u = np.zeros(g.n_u, out.dtype)
+        per_v = np.zeros(g.n_v, out.dtype)
+        per_u[:] = out[rg.rank_of_u]
+        per_v[:] = out[rg.rank_of_v]
+        return CountResult(mode, None, per_u, per_v, None, aggregation, order)
+    return CountResult(mode, None, None, None, out, aggregation, order)

@@ -1,0 +1,192 @@
+"""Distributed butterfly counting with shard_map (DESIGN.md §2, §4).
+
+Mapping of the paper onto an SPMD mesh:
+
+  - The flat wedge index space is partitioned into per-device slices
+    whose boundaries are *vertex-aligned* and *wedge-balanced* — the
+    paper's wedge-aware batching promoted to the cross-chip partition
+    strategy. Vertex alignment guarantees every endpoint-pair group is
+    device-local (all wedges anchored at x1 live on x1's device), so
+    local aggregation is exact and the only communication is the final
+    count combine.
+  - Each device materializes its wedge slice (binary search over the
+    replicated prefix array), aggregates locally (sort strategy), and
+    computes local butterfly contributions.
+  - Contributions are combined with one ``psum`` (global counts) or a
+    ``psum`` over the dense count vector (per-vertex / per-edge). On a
+    multi-pod mesh the psum spans all axes, lowering to hierarchical
+    all-reduce: in-pod ICI reduction then cross-pod combine.
+
+The graph CSR is replicated (real deployments of this engine would
+additionally shard the adjacency of very large graphs; the wedge space —
+the O(αm) object that dominates — is what we partition).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from .aggregate import aggregate_sort
+from .count import _accumulate  # shared Lemma 4.2 math
+from .graph import BipartiteGraph, RankedGraph, preprocess
+from .ranking import make_order
+from .wedges import (
+    device_graph,
+    host_wedge_counts,
+    slot_wedge_counts,
+    wedge_offsets,
+    wedges_at,
+)
+
+__all__ = ["plan_partition", "distributed_count", "distributed_count_fn"]
+
+
+def plan_partition(rg: RankedGraph, n_dev: int, direction: str = "low"):
+    """Wedge-balanced, vertex-aligned device partition (host planning).
+
+    Returns (w_start (n_dev,), w_cap) where device d owns global wedge
+    ids [w_start[d], w_start[d+1]) padded to the common capacity w_cap.
+    Greedy boundary placement: walk vertices, cut when the running wedge
+    load reaches the ideal share — the wedge-aware batching heuristic.
+    """
+    cnt = host_wedge_counts(rg, direction)
+    src = rg.edge_src[: 2 * rg.m]
+    wv = np.zeros(rg.n_pad + 1, dtype=np.int64)
+    np.add.at(wv, src, cnt[: 2 * rg.m])
+    voff = np.concatenate([[0], np.cumsum(wv[: rg.n_pad])])
+    total = int(voff[-1])
+    ideal = total / max(n_dev, 1)
+    starts = [0]
+    for d in range(1, n_dev):
+        # first vertex boundary with cumulative wedges >= d * ideal
+        b = int(np.searchsorted(voff, d * ideal, side="left"))
+        starts.append(min(b, rg.n_pad))
+    starts.append(rg.n_pad)
+    w_start = voff[np.asarray(starts)]
+    per_dev = np.diff(w_start)
+    cap = int(per_dev.max(initial=1))
+    cap = max(128, ((cap + 127) // 128) * 128)
+    return w_start.astype(np.int32), cap
+
+
+def distributed_count_fn(
+    mesh: Mesh,
+    axis_names: Sequence[str],
+    *,
+    w_cap: int,
+    mode: str,
+    direction: str = "low",
+    dtype=jnp.int32,
+    precomputed_offsets: bool = False,
+    combine: str = "all",
+):
+    """Build the jitted shard_mapped counting step for a mesh.
+
+    The returned function takes (dg, w_bounds[, w_off]) where
+    ``w_bounds`` is an (n_dev, 2) int32 array of per-device [start, end)
+    wedge ids, sharded over the flattened mesh axes; ``dg`` is
+    replicated.
+
+    ``precomputed_offsets``: pass the global wedge-prefix array as a
+    replicated input instead of recomputing the O(e_pad · log deg)
+    rank-filtered counts *per device* — the §Perf-3 fix (the prefix is a
+    byproduct of host partition planning anyway).
+    ``combine``: "all" -> psum (replicated counts); "scatter" ->
+    psum_scatter (vertex-mode counts stay sharded over devices — halves
+    the wire bytes and the production deployment keeps them sharded).
+    """
+    axes = tuple(axis_names)
+    repl = P()
+    sharded = P(axes)
+    n_dev = int(np.prod([mesh.shape[a] for a in axes]))
+
+    def _count(dg, bounds, cnt, w_off):
+        start = bounds[0, 0]
+        end = bounds[0, 1]
+        wid = start + jnp.arange(w_cap, dtype=jnp.int32)
+        valid = wid < end
+        w = wedges_at(dg, cnt, w_off, wid, valid, direction)
+        groups, w = aggregate_sort(w)
+        out = _accumulate(dg, w, groups, mode, dtype)
+        if combine == "scatter" and mode in ("vertex", "edge"):
+            pad = (-out.shape[0]) % n_dev
+            out = jnp.pad(out, (0, pad))
+            return jax.lax.psum_scatter(
+                out, axes, scatter_dimension=0, tiled=True
+            )
+        return jax.lax.psum(out, axes)
+
+    if precomputed_offsets:
+        def local(dg, bounds, w_off):
+            return _count(dg, bounds, None, w_off)
+
+        in_specs = (repl, sharded, repl)
+    else:
+        def local(dg, bounds):
+            cnt = slot_wedge_counts(dg, direction)
+            w_off = wedge_offsets(cnt)
+            return _count(dg, bounds, cnt, w_off)
+
+        in_specs = (repl, sharded)
+
+    out_specs = sharded if combine == "scatter" and mode != "global" else repl
+    fn = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        check_rep=False,
+    )
+    return jax.jit(fn)
+
+
+def distributed_count(
+    g: BipartiteGraph,
+    mesh: Mesh,
+    axis_names: Optional[Sequence[str]] = None,
+    *,
+    order: str = "degree",
+    mode: str = "global",
+    cache_opt: bool = False,
+    count_dtype=None,
+    precomputed_offsets: bool = True,
+    combine: str = "all",
+):
+    """End-to-end distributed counting on an existing mesh."""
+    axis_names = tuple(axis_names or mesh.axis_names)
+    n_dev = int(np.prod([mesh.shape[a] for a in axis_names]))
+    direction = "high" if cache_opt else "low"
+    ordering = make_order(g, order)
+    rg = preprocess(g, ordering, order_name=order)
+    w_start, cap = plan_partition(rg, n_dev, direction)
+    bounds = np.stack([w_start[:-1], w_start[1:]], axis=1).astype(np.int32)
+    dg = device_graph(rg)
+    fn = distributed_count_fn(
+        mesh,
+        axis_names,
+        w_cap=cap,
+        mode=mode,
+        direction=direction,
+        dtype=count_dtype or jnp.int32,
+        precomputed_offsets=precomputed_offsets,
+        combine=combine,
+    )
+    sharding = NamedSharding(mesh, P(axis_names))
+    bounds_dev = jax.device_put(jnp.asarray(bounds), sharding)
+    dg_repl = jax.device_put(dg, NamedSharding(mesh, P()))
+    if precomputed_offsets:
+        cnt_host = host_wedge_counts(rg, direction)
+        w_off = np.concatenate([[0], np.cumsum(cnt_host)]).astype(np.int32)
+        w_off_dev = jax.device_put(
+            jnp.asarray(w_off), NamedSharding(mesh, P())
+        )
+        out = fn(dg_repl, bounds_dev, w_off_dev)
+    else:
+        out = fn(dg_repl, bounds_dev)
+    return out, rg

@@ -1,0 +1,206 @@
+"""Bipartite graph representations for the ParButterfly engine.
+
+Host-side construction is numpy (cheap, O(m log m)); all counting/peeling
+compute runs on device over the padded, statically-shaped ``RankedGraph``.
+
+Vertex convention after preprocessing (paper Alg. 1 PREPROCESS):
+  - vertices are relabeled so that ``id == rank`` (0 = first in the order,
+    i.e. highest priority / processed first),
+  - a wedge (x1, x2, y) with endpoints x1 < x2 and center y is *retrieved*
+    by x1 iff ``y > x1`` and ``x2 > x1`` (both later in the order),
+  - adjacency lists are sorted ascending, so the retrievable neighbors of
+    any vertex form a suffix of its adjacency list.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+__all__ = [
+    "BipartiteGraph",
+    "RankedGraph",
+    "preprocess",
+]
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((int(x) + mult - 1) // mult) * mult
+
+
+@dataclasses.dataclass
+class BipartiteGraph:
+    """An undirected simple bipartite graph G = (U, V, E), host-side.
+
+    ``edges`` is an (m, 2) int array of (u, v) pairs with ``0 <= u < n_u``
+    and ``0 <= v < n_v``. Self-loops are impossible by construction;
+    duplicate edges are removed on construction (paper §6.1).
+    """
+
+    n_u: int
+    n_v: int
+    edges: np.ndarray  # (m, 2) int64
+
+    def __post_init__(self):
+        e = np.asarray(self.edges, dtype=np.int64)
+        if e.ndim != 2 or e.shape[1] != 2:
+            raise ValueError(f"edges must be (m, 2), got {e.shape}")
+        if e.shape[0]:
+            if e[:, 0].min() < 0 or e[:, 0].max() >= self.n_u:
+                raise ValueError("u endpoint out of range")
+            if e[:, 1].min() < 0 or e[:, 1].max() >= self.n_v:
+                raise ValueError("v endpoint out of range")
+        # de-duplicate
+        key = e[:, 0] * max(self.n_v, 1) + e[:, 1]
+        _, idx = np.unique(key, return_index=True)
+        self.edges = e[np.sort(idx)]
+
+    @property
+    def m(self) -> int:
+        return int(self.edges.shape[0])
+
+    @property
+    def n(self) -> int:
+        return int(self.n_u + self.n_v)
+
+    def degrees(self) -> tuple[np.ndarray, np.ndarray]:
+        du = np.bincount(self.edges[:, 0], minlength=self.n_u)
+        dv = np.bincount(self.edges[:, 1], minlength=self.n_v)
+        return du, dv
+
+    def wedge_totals(self) -> tuple[int, int]:
+        """(#wedges with endpoints in U, #wedges with endpoints in V).
+
+        Wedges with endpoints in U have centers in V and vice versa.
+        """
+        du, dv = self.degrees()
+        w_u = int((dv.astype(np.int64) * (dv - 1) // 2).sum())
+        w_v = int((du.astype(np.int64) * (du - 1) // 2).sum())
+        return w_u, w_v
+
+
+@dataclasses.dataclass
+class RankedGraph:
+    """Preprocessed (ranked + relabeled) graph in padded CSR form.
+
+    All arrays are numpy on the host; engine entry points move them to
+    device. Shapes are padded to static capacities so downstream jitted
+    code never recompiles across graphs of the same padded size.
+
+    Attributes:
+      n: number of real vertices (ids ``0..n-1`` are real; ``n..n_pad-1``
+         are padding with degree 0).
+      m: number of undirected edges. Directed edge slots ``0..2m-1`` are
+         real; the rest padding.
+      offsets: (n_pad + 1,) int32 CSR offsets into ``neighbors``.
+      neighbors: (e_pad,) int32, ascending within each vertex; padded
+         entries hold ``n_pad`` (an out-of-range sentinel).
+      edge_src: (e_pad,) int32 source of each directed edge slot.
+      undirected_id: (e_pad,) int32 undirected edge id in [0, m) for real
+         slots, ``m`` sentinel for padding.
+      side_of: (n_pad,) int8: 0 if the vertex came from U, 1 from V,
+         -1 padding.
+      orig_id: (n_pad,) int32 original vertex id *within its side*.
+      rank_of_u / rank_of_v: (n_u,) / (n_v,) int32 mapping original ids
+         to new ids (ranks).
+      n_u, n_v: original side sizes.
+    """
+
+    n: int
+    m: int
+    offsets: np.ndarray
+    neighbors: np.ndarray
+    edge_src: np.ndarray
+    undirected_id: np.ndarray
+    side_of: np.ndarray
+    orig_id: np.ndarray
+    rank_of_u: np.ndarray
+    rank_of_v: np.ndarray
+    n_u: int
+    n_v: int
+    order_name: str = "side"
+
+    @property
+    def n_pad(self) -> int:
+        return int(self.side_of.shape[0])
+
+    @property
+    def e_pad(self) -> int:
+        return int(self.neighbors.shape[0])
+
+    def degrees(self) -> np.ndarray:
+        return (self.offsets[1:] - self.offsets[:-1]).astype(np.int32)
+
+
+def preprocess(
+    g: BipartiteGraph,
+    order: np.ndarray,
+    order_name: str = "custom",
+    pad_vertices: int = 8,
+    pad_edges: int = 128,
+) -> RankedGraph:
+    """Paper Alg. 1 PREPROCESS: relabel vertices by rank, build padded CSR.
+
+    ``order`` is a permutation of global vertex ids (U ids are
+    ``0..n_u-1``, V ids are ``n_u..n_u+n_v-1``) listing vertices from
+    first-processed (rank 0) to last.
+    """
+    n, m = g.n, g.m
+    order = np.asarray(order, dtype=np.int64)
+    if order.shape != (n,):
+        raise ValueError(f"order must be a permutation of {n} vertices")
+    rank = np.empty(n, dtype=np.int64)
+    rank[order] = np.arange(n)
+
+    # Global ids: u -> u, v -> n_u + v.
+    gu = g.edges[:, 0]
+    gv = g.edges[:, 1] + g.n_u
+    ru, rv = rank[gu], rank[gv]
+
+    # Directed edges (both directions), relabeled to ranks.
+    src = np.concatenate([ru, rv])
+    dst = np.concatenate([rv, ru])
+    uid = np.concatenate([np.arange(m), np.arange(m)]).astype(np.int64)
+
+    n_pad = _round_up(max(n, 1), pad_vertices)
+    e_pad = _round_up(max(2 * m, 1), pad_edges)
+
+    # CSR sorted by (src, dst) ascending.
+    perm = np.lexsort((dst, src))
+    src, dst, uid = src[perm], dst[perm], uid[perm]
+    deg = np.bincount(src, minlength=n_pad)
+    offsets = np.zeros(n_pad + 1, dtype=np.int64)
+    np.cumsum(deg, out=offsets[1:])
+
+    neighbors = np.full(e_pad, n_pad, dtype=np.int32)
+    neighbors[: 2 * m] = dst.astype(np.int32)
+    edge_src = np.full(e_pad, n_pad, dtype=np.int32)
+    edge_src[: 2 * m] = src.astype(np.int32)
+    undirected_id = np.full(e_pad, m, dtype=np.int32)
+    undirected_id[: 2 * m] = uid.astype(np.int32)
+
+    side_of = np.full(n_pad, -1, dtype=np.int8)
+    orig_id = np.full(n_pad, -1, dtype=np.int32)
+    glob = np.concatenate([np.arange(g.n_u), np.arange(g.n_v)])
+    side = np.concatenate(
+        [np.zeros(g.n_u, dtype=np.int8), np.ones(g.n_v, dtype=np.int8)]
+    )
+    side_of[rank[np.arange(n)]] = side
+    orig_id[rank[np.arange(n)]] = glob.astype(np.int32)
+
+    return RankedGraph(
+        n=n,
+        m=m,
+        offsets=offsets.astype(np.int32),
+        neighbors=neighbors,
+        edge_src=edge_src,
+        undirected_id=undirected_id,
+        side_of=side_of,
+        orig_id=orig_id,
+        rank_of_u=rank[: g.n_u].astype(np.int32),
+        rank_of_v=rank[g.n_u :].astype(np.int32),
+        n_u=g.n_u,
+        n_v=g.n_v,
+        order_name=order_name,
+    )

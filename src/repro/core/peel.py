@@ -1,0 +1,402 @@
+"""Butterfly peeling: tip (vertex) and wing (edge) decomposition
+(paper §4.3, Algs. 5-6).
+
+Round structure (host-driven, device-aggregated):
+  κ <- max(κ, min butterfly count among alive)   [bucketing extract-min]
+  A <- all alive with count <= κ                 [peel whole bucket]
+  enumerate wedges/butterflies incident to A     [numpy prefix-sum
+                                                  expansion of the CSR —
+                                                  the paper's parallel
+                                                  wedge retrieval]
+  aggregate + subtract contributions             [device: same sort/hash
+                                                  strategies as counting]
+
+The SPMD bucketing replaces the Fibonacci heap (see fibheap.py and
+DESIGN.md §8) with a dense masked min-reduction — the semantics of
+extract-min + batch decrease-key are preserved; Julienne's
+skip-empty-buckets optimization is inherent (min jumps gaps in O(1)
+rounds).
+
+Double-count avoidance (paper §4.3.1/§4.3.2): peeled-set members are
+processed against a virtual rank order (their id); an element of the
+current peel set A is "present" for a lower-id member's enumeration and
+"absent" for a higher-id member's.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .aggregate import aggregate_hash, aggregate_sort
+from .graph import BipartiteGraph
+from .count import count_butterflies
+from .wedges import Wedges
+
+__all__ = ["PeelResult", "peel_tips", "peel_tips_stored", "peel_wings"]
+
+
+class PeelResult(NamedTuple):
+    numbers: np.ndarray  # tip number per side-vertex, or wing per edge
+    side: Optional[int]  # 0 = U peeled, 1 = V peeled (tips only)
+    rounds: int  # ρ (peeling complexity)
+    round_sizes: np.ndarray  # peeled per round
+
+
+def _ranges(starts: np.ndarray, lens: np.ndarray) -> np.ndarray:
+    """Concatenate [s, s+len) ranges — vectorized segment arange."""
+    total = int(lens.sum())
+    if total == 0:
+        return np.empty(0, dtype=np.int64)
+    ends = np.cumsum(lens)
+    idx = np.arange(total, dtype=np.int64)
+    seg = np.repeat(np.arange(lens.shape[0], dtype=np.int64), lens)
+    base = np.concatenate([[0], ends[:-1]])
+    return starts[seg] + idx - base[seg]
+
+
+def _pow2_pad(x: int, floor: int = 128) -> int:
+    c = floor
+    while c < x:
+        c <<= 1
+    return c
+
+
+def _csr(g: BipartiteGraph):
+    """Global-id CSR (U ids then V ids), neighbors ascending."""
+    n = g.n
+    src = np.concatenate([g.edges[:, 0], g.n_u + g.edges[:, 1]])
+    dst = np.concatenate([g.n_u + g.edges[:, 1], g.edges[:, 0]])
+    uid = np.concatenate([np.arange(g.m), np.arange(g.m)]).astype(np.int64)
+    perm = np.lexsort((dst, src))
+    src, dst, uid = src[perm], dst[perm], uid[perm]
+    off = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(np.bincount(src, minlength=n), out=off[1:])
+    return off, dst, uid
+
+
+@functools.partial(jax.jit, static_argnames=("aggregation", "n_pad"))
+def _subtract_pair_groups(
+    u1: jax.Array,
+    u2: jax.Array,
+    valid: jax.Array,
+    b: jax.Array,
+    aggregation: str,
+    n_pad: int,
+):
+    """Aggregate (u1, u2) wedge pairs -> subtract C(d,2) from B[u2]."""
+    sent = jnp.int32(n_pad)
+    w = Wedges(
+        x1=jnp.where(valid, u1, sent),
+        x2=jnp.where(valid, u2, sent),
+        y=jnp.where(valid, u1, sent),
+        center_slot=u1,
+        second_slot=u1,
+        valid=valid,
+    )
+    if aggregation == "hash":
+        groups = aggregate_hash(w)
+    else:
+        groups, w = aggregate_sort(w)
+    d = groups.d.astype(b.dtype)
+    dec = jnp.where(groups.valid, d * (d - 1) // 2, 0)
+    return b.at[groups.x2].add(-dec), groups.ok
+
+
+@jax.jit
+def _subtract_triples(idx: jax.Array, valid: jax.Array, b: jax.Array):
+    """Scatter -1 at idx (flattened butterfly edge triples)."""
+    return b.at[jnp.where(valid, idx, b.shape[0])].add(
+        -jnp.ones_like(idx, b.dtype)
+    )
+
+
+def peel_tips(
+    g: BipartiteGraph,
+    counts: Optional[np.ndarray] = None,
+    side: Optional[int] = None,
+    aggregation: str = "sort",
+    count_kwargs: Optional[dict] = None,
+) -> PeelResult:
+    """Tip decomposition (PEEL-V, Alg. 5).
+
+    Peels the bipartition producing fewer wedges-as-endpoints unless
+    ``side`` is forced. ``counts`` are per-vertex butterfly counts for
+    the peeled side (computed if omitted).
+    """
+    w_u, w_v = g.wedge_totals()
+    if side is None:
+        side = 0 if w_u <= w_v else 1
+    if counts is None:
+        r = count_butterflies(
+            g, mode="vertex", count_dtype=jnp.int64
+            if jax.config.jax_enable_x64
+            else jnp.int32, **(count_kwargs or {})
+        )
+        counts = r.per_u if side == 0 else r.per_v
+    counts = np.asarray(counts).copy()
+    off, nbr, _ = _csr(g)
+    n = g.n
+    n_side = g.n_u if side == 0 else g.n_v
+    base = 0 if side == 0 else g.n_u  # global id offset of peeled side
+
+    alive = np.ones(n_side, dtype=bool)
+    tip = np.zeros(n_side, dtype=counts.dtype)
+    b_dev = jnp.asarray(counts)
+    kappa = 0
+    rounds = 0
+    sizes = []
+    while alive.any():
+        cnt_host = np.asarray(jax.device_get(b_dev))
+        cur = np.where(alive, cnt_host, np.iinfo(cnt_host.dtype).max)
+        kappa = max(kappa, int(cur.min()))
+        a_ids = np.flatnonzero(alive & (cur <= kappa))
+        tip[a_ids] = kappa
+        alive[a_ids] = False
+        rounds += 1
+        sizes.append(a_ids.size)
+        if not alive.any():
+            break
+        # -- wedge enumeration from peeled set (GET-V-WEDGES) --
+        ga = a_ids + base
+        deg1 = off[ga + 1] - off[ga]
+        u1_rep = np.repeat(a_ids, deg1)
+        v_rep = nbr[_ranges(off[ga], deg1)]
+        deg2 = off[v_rep + 1] - off[v_rep]
+        u1_w = np.repeat(u1_rep, deg2)
+        u2_w = nbr[_ranges(off[v_rep], deg2)] - base
+        # keep wedges whose second endpoint is still alive
+        ok = alive[u2_w]
+        u1_w, u2_w = u1_w[ok], u2_w[ok]
+        if u1_w.size == 0:
+            continue
+        cap = _pow2_pad(u1_w.size)
+        u1p = np.full(cap, n_side, np.int32)
+        u2p = np.full(cap, n_side, np.int32)
+        u1p[: u1_w.size] = u1_w
+        u2p[: u2_w.size] = u2_w
+        valid = np.zeros(cap, bool)
+        valid[: u1_w.size] = True
+        b_new, ok = _subtract_pair_groups(
+            jnp.asarray(u1p),
+            jnp.asarray(u2p),
+            jnp.asarray(valid),
+            b_dev,
+            aggregation,
+            n_side,
+        )
+        if aggregation == "hash" and not bool(ok):
+            b_new, _ = _subtract_pair_groups(
+                jnp.asarray(u1p),
+                jnp.asarray(u2p),
+                jnp.asarray(valid),
+                b_dev,
+                "sort",
+                n_side,
+            )
+        b_dev = b_new
+    return PeelResult(tip, side, rounds, np.asarray(sizes))
+
+
+def peel_tips_stored(
+    g: BipartiteGraph,
+    counts: Optional[np.ndarray] = None,
+    side: Optional[int] = None,
+    aggregation: str = "sort",
+    count_kwargs: Optional[dict] = None,
+) -> PeelResult:
+    """WPEEL-V (paper Alg. 7): store all side-oriented wedges upfront,
+    then per round subtract via pure index lookups — O(b)-style work,
+    O(Σ deg²_side) = O(αm-class) space (the paper's work/space
+    trade-off). One orientation suffices: every butterfly on the peeled
+    side U is accounted by its U-endpoint wedge group (Lemma 4.2);
+    the paper's W_c store handles the same butterflies from the other
+    orientation of its ranked wedge set.
+    """
+    w_u, w_v = g.wedge_totals()
+    if side is None:
+        side = 0 if w_u <= w_v else 1
+    if counts is None:
+        r = count_butterflies(
+            g, mode="vertex", count_dtype=jnp.int64
+            if jax.config.jax_enable_x64
+            else jnp.int32, **(count_kwargs or {})
+        )
+        counts = r.per_u if side == 0 else r.per_v
+    counts = np.asarray(counts).copy()
+    off, nbr, _ = _csr(g)
+    n_side = g.n_u if side == 0 else g.n_v
+    base = 0 if side == 0 else g.n_u
+
+    # ---- store all wedges keyed by their first endpoint (W_e) ----
+    ids = np.arange(n_side) + base
+    deg1 = off[ids + 1] - off[ids]
+    u1_rep = np.repeat(np.arange(n_side), deg1)
+    v_rep = nbr[_ranges(off[ids], deg1)]
+    deg2 = off[v_rep + 1] - off[v_rep]
+    w_u1 = np.repeat(u1_rep, deg2)
+    w_u2 = nbr[_ranges(off[v_rep], deg2)] - base
+    keep = w_u2 != w_u1
+    w_u1, w_u2 = w_u1[keep], w_u2[keep]
+    # CSR over first endpoint (already sorted by construction)
+    woff = np.zeros(n_side + 1, dtype=np.int64)
+    np.cumsum(np.bincount(w_u1, minlength=n_side), out=woff[1:])
+
+    alive = np.ones(n_side, dtype=bool)
+    tip = np.zeros(n_side, dtype=counts.dtype)
+    b_dev = jnp.asarray(counts)
+    kappa = 0
+    rounds = 0
+    sizes = []
+    while alive.any():
+        cnt_host = np.asarray(jax.device_get(b_dev))
+        cur = np.where(alive, cnt_host, np.iinfo(cnt_host.dtype).max)
+        kappa = max(kappa, int(cur.min()))
+        a_ids = np.flatnonzero(alive & (cur <= kappa))
+        tip[a_ids] = kappa
+        alive[a_ids] = False
+        rounds += 1
+        sizes.append(a_ids.size)
+        if not alive.any():
+            break
+        # stored-wedge lookup instead of 2-hop re-enumeration
+        lens = woff[a_ids + 1] - woff[a_ids]
+        pos = _ranges(woff[a_ids], lens)
+        u1_w = np.repeat(a_ids, lens)
+        u2_w = w_u2[pos]
+        ok = alive[u2_w]
+        u1_w, u2_w = u1_w[ok], u2_w[ok]
+        if u1_w.size == 0:
+            continue
+        cap = _pow2_pad(u1_w.size)
+        u1p = np.full(cap, n_side, np.int32)
+        u2p = np.full(cap, n_side, np.int32)
+        u1p[: u1_w.size] = u1_w
+        u2p[: u2_w.size] = u2_w
+        valid = np.zeros(cap, bool)
+        valid[: u1_w.size] = True
+        b_dev, _ = _subtract_pair_groups(
+            jnp.asarray(u1p),
+            jnp.asarray(u2p),
+            jnp.asarray(valid),
+            b_dev,
+            aggregation,
+            n_side,
+        )
+    return PeelResult(tip, side, rounds, np.asarray(sizes))
+
+
+def peel_wings(
+    g: BipartiteGraph,
+    counts: Optional[np.ndarray] = None,
+    count_kwargs: Optional[dict] = None,
+) -> PeelResult:
+    """Wing decomposition (PEEL-E, Alg. 6).
+
+    Butterflies incident to peeled edges are located individually via
+    min-degree-side intersections (binary search membership on the
+    lexsorted directed edge array), matching the paper's
+    Σ min(deg(u), deg(u')) work bound.
+    """
+    if counts is None:
+        r = count_butterflies(
+            g, mode="edge", count_dtype=jnp.int64
+            if jax.config.jax_enable_x64
+            else jnp.int32, **(count_kwargs or {})
+        )
+        counts = r.per_edge
+    counts = np.asarray(counts).copy()
+    off, nbr, uid = _csr(g)
+    n, m = g.n, g.m
+    # lexsorted composite keys for edge-membership binary search
+    src = np.repeat(np.arange(n), np.diff(off))
+    comp = src * np.int64(n) + nbr
+    deg = np.diff(off)
+
+    # edge endpoints in global ids
+    eu = g.edges[:, 0].astype(np.int64)
+    ev = (g.edges[:, 1] + g.n_u).astype(np.int64)
+
+    alive = np.ones(m, dtype=bool)
+    wing = np.zeros(m, dtype=counts.dtype)
+    b_dev = jnp.asarray(counts)
+    kappa = 0
+    rounds = 0
+    sizes = []
+    while alive.any():
+        cnt_host = np.asarray(jax.device_get(b_dev))
+        cur = np.where(alive, cnt_host, np.iinfo(cnt_host.dtype).max)
+        kappa = max(kappa, int(cur.min()))
+        a_ids = np.flatnonzero(alive & (cur <= kappa))
+        wing[a_ids] = kappa
+        in_a = np.zeros(m, dtype=bool)
+        in_a[a_ids] = True
+        rounds += 1
+        sizes.append(a_ids.size)
+
+        # presence of edge x w.r.t. peeled edge a (ids break ties):
+        #   alive_before[x] and (x not in A or x > a)
+        def present(x, a):
+            return alive[x] & (~in_a[x] | (x > a))
+
+        # level 1: (a=(u1,v1), u2 in N(v1))
+        u1s, v1s = eu[a_ids], ev[a_ids]
+        d1 = deg[v1s]
+        a_rep = np.repeat(a_ids, d1)
+        u1_rep = np.repeat(u1s, d1)
+        v1_rep = np.repeat(v1s, d1)
+        pos_b = _ranges(off[v1s], d1)
+        u2_rep = nbr[pos_b]
+        b_edge = uid[pos_b]
+        keep = (u2_rep != u1_rep) & present(b_edge, a_rep)
+        a_rep, u1_rep, v1_rep, u2_rep, b_edge = (
+            a_rep[keep],
+            u1_rep[keep],
+            v1_rep[keep],
+            u2_rep[keep],
+            b_edge[keep],
+        )
+        if a_rep.size:
+            # level 2: scan the smaller of N(u1), N(u2)
+            small = np.where(deg[u1_rep] <= deg[u2_rep], u1_rep, u2_rep)
+            other = np.where(deg[u1_rep] <= deg[u2_rep], u2_rep, u1_rep)
+            d2 = deg[small]
+            a2 = np.repeat(a_rep, d2)
+            u1_2 = np.repeat(u1_rep, d2)
+            v1_2 = np.repeat(v1_rep, d2)
+            u2_2 = np.repeat(u2_rep, d2)
+            b_2 = np.repeat(b_edge, d2)
+            oth2 = np.repeat(other, d2)
+            pos_s = _ranges(off[small], d2)
+            v2 = nbr[pos_s]
+            e_small = uid[pos_s]
+            # membership: (other, v2) must be an edge
+            p = np.searchsorted(comp, oth2 * np.int64(n) + v2)
+            p = np.minimum(p, comp.shape[0] - 1)
+            hit = comp[p] == oth2 * np.int64(n) + v2
+            e_other = uid[p]
+            # c = (u1, v2), d2e = (u2, v2): map small/other back
+            small_is_u1 = np.repeat(deg[u1_rep] <= deg[u2_rep], d2)
+            c_edge = np.where(small_is_u1, e_small, e_other)
+            d_edge = np.where(small_is_u1, e_other, e_small)
+            ok = (
+                hit
+                & (v2 != v1_2)
+                & present(c_edge, a2)
+                & present(d_edge, a2)
+            )
+            tri = np.stack([b_2, c_edge, d_edge], axis=1)[ok].ravel()
+            if tri.size:
+                cap = _pow2_pad(tri.size)
+                trip = np.full(cap, m, np.int64)
+                trip[: tri.size] = tri
+                validp = np.zeros(cap, bool)
+                validp[: tri.size] = True
+                b_dev = _subtract_triples(
+                    jnp.asarray(trip), jnp.asarray(validp), b_dev
+                )
+        alive[a_ids] = False
+    return PeelResult(wing, None, rounds, np.asarray(sizes))

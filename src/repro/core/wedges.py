@@ -1,0 +1,280 @@
+"""Vectorized rank-filtered wedge retrieval (paper Alg. 2 GET-WEDGES).
+
+The paper's nested parallel-for over (vertex, neighbor, 2nd-neighbor) is
+re-thought for SPMD hardware as a *flat wedge index space*:
+
+  - every directed edge slot ``e = (x1 -> y)`` contributes
+    ``cnt[e] = |{x2 in N(y) : rank(x2) > rank(x1)}|`` wedges when
+    ``rank(y) > rank(x1)`` (and 0 otherwise),
+  - a global prefix sum over ``cnt`` assigns each wedge a dense id
+    ``w in [0, W)``,
+  - wedge ``w`` is materialized with two gathers and one binary search:
+    ``e = upper_bound(w_off, w) - 1``, ``j = w - w_off[e]``.
+
+This gives O(1) span per wedge and O(αm) work with degree-style
+orderings — the same bounds as the paper — while being fully
+vectorizable on VPU/MXU hardware. The exponential search of the paper
+(adjacency suffix length) becomes a batched binary search.
+
+``direction="low"`` iterates from the lowest-ranked endpoint (paper
+default); ``direction="high"`` iterates from the highest-ranked endpoint
+(the Wang et al. cache optimization, paper §3.1.4) — the wedge *set* is
+identical, the access pattern differs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import RankedGraph
+
+__all__ = [
+    "DeviceGraph",
+    "Wedges",
+    "device_graph",
+    "slot_wedge_counts",
+    "host_wedge_counts",
+    "wedge_capacity",
+    "wedge_offsets",
+    "wedges_at",
+    "gather_wedges",
+]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DeviceGraph:
+    """RankedGraph arrays on device. All int32, statically shaped.
+
+    ``n`` and ``m`` (real vertex / undirected edge counts) are static
+    pytree aux data so jitted engine code can use them as shapes.
+    """
+
+    offsets: jax.Array  # (n_pad + 1,)
+    neighbors: jax.Array  # (e_pad,)
+    edge_src: jax.Array  # (e_pad,)
+    undirected_id: jax.Array  # (e_pad,)
+    side_of: jax.Array  # (n_pad,) int8
+    n: int  # static: real vertex count
+    m: int  # static: real undirected edge count
+
+    @property
+    def n_pad(self) -> int:
+        return self.side_of.shape[0]
+
+    @property
+    def e_pad(self) -> int:
+        return self.neighbors.shape[0]
+
+    def tree_flatten(self):
+        children = (
+            self.offsets,
+            self.neighbors,
+            self.edge_src,
+            self.undirected_id,
+            self.side_of,
+        )
+        return children, (self.n, self.m)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, n=aux[0], m=aux[1])
+
+
+def device_graph(rg: RankedGraph) -> DeviceGraph:
+    return DeviceGraph(
+        offsets=jnp.asarray(rg.offsets, jnp.int32),
+        neighbors=jnp.asarray(rg.neighbors, jnp.int32),
+        edge_src=jnp.asarray(rg.edge_src, jnp.int32),
+        undirected_id=jnp.asarray(rg.undirected_id, jnp.int32),
+        side_of=jnp.asarray(rg.side_of, jnp.int8),
+        n=rg.n,
+        m=rg.m,
+    )
+
+
+class Wedges(NamedTuple):
+    """A padded batch of wedges (x1, x2, y): endpoints x1 < x2, center y.
+
+    ``center_slot`` is the directed-edge slot of (x1 -> y) under
+    ``direction="low"`` (resp. (x2 -> y) under "high");
+    ``second_slot`` is the neighbor-array position of x2 within N(y)
+    (resp. x1), i.e. the directed edge (y -> x2). Both index
+    ``undirected_id`` for per-edge butterfly scatter.
+    ``valid`` masks padding.
+    """
+
+    x1: jax.Array
+    x2: jax.Array
+    y: jax.Array
+    center_slot: jax.Array
+    second_slot: jax.Array
+    valid: jax.Array
+
+
+def _upper_bound_ragged(values: jax.Array, lo: jax.Array, hi: jax.Array, x: jax.Array) -> jax.Array:
+    """Batched upper_bound: for each i, first index in sorted
+    ``values[lo[i]:hi[i]]`` strictly greater than ``x[i]`` (absolute idx).
+
+    O(log e_pad) span; fully vectorized (replaces the paper's per-edge
+    exponential search).
+    """
+    steps = max(1, int(np.ceil(np.log2(max(int(values.shape[0]), 2)))) + 1)
+
+    def body(_, carry):
+        lo_, hi_ = carry
+        mid = (lo_ + hi_) >> 1
+        take = (lo_ < hi_) & (values[mid] <= x)
+        new_lo = jnp.where(take, mid + 1, lo_)
+        new_hi = jnp.where((lo_ < hi_) & ~take, mid, hi_)
+        return new_lo, new_hi
+
+    lo_f, _ = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    return lo_f
+
+
+def _lower_bound_ragged(values: jax.Array, lo: jax.Array, hi: jax.Array, x: jax.Array) -> jax.Array:
+    """First index with values[idx] >= x (absolute)."""
+    steps = max(1, int(np.ceil(np.log2(max(int(values.shape[0]), 2)))) + 1)
+
+    def body(_, carry):
+        lo_, hi_ = carry
+        mid = (lo_ + hi_) >> 1
+        take = (lo_ < hi_) & (values[mid] < x)
+        new_lo = jnp.where(take, mid + 1, lo_)
+        new_hi = jnp.where((lo_ < hi_) & ~take, mid, hi_)
+        return new_lo, new_hi
+
+    lo_f, _ = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    return lo_f
+
+
+def slot_wedge_counts(dg: DeviceGraph, direction: str = "low") -> jax.Array:
+    """Per directed-edge-slot wedge counts (device). int32 (e_pad,)."""
+    src = dg.edge_src
+    dst = dg.neighbors
+    lo = dg.offsets[jnp.minimum(dst, dg.n_pad - 1)]
+    hi = dg.offsets[jnp.minimum(dst, dg.n_pad - 1) + 1]
+    real = (src < dg.n) & (dst < dg.n)
+    if direction == "low":
+        # e = (x1 -> y), need rank(y) > rank(x1); eligible x2 in N(y)
+        # with x2 > x1: suffix of the ascending adjacency list.
+        eligible = real & (dst > src)
+        ub = _upper_bound_ragged(dg.neighbors, lo, hi, src)
+        cnt = hi - ub
+    elif direction == "high":
+        # e = (x2 -> y) from the *highest* endpoint: wedge (x1, x2, y)
+        # with x1 < min(x2, y). Eligible x1 in N(y) with x1 < min(src,dst):
+        # prefix of the adjacency list. Every wedge is produced exactly
+        # once: x2 and y are determined by the directed edge.
+        eligible = real
+        lb = _lower_bound_ragged(dg.neighbors, lo, hi, jnp.minimum(src, dst))
+        cnt = lb - lo
+    else:
+        raise ValueError(f"direction must be low|high, got {direction}")
+    return jnp.where(eligible, cnt, 0).astype(jnp.int32)
+
+
+def host_wedge_counts(rg: RankedGraph, direction: str = "low") -> np.ndarray:
+    """Numpy mirror of slot_wedge_counts, for capacity planning.
+
+    Vectorized via composite keys: CSR entries are globally lexsorted by
+    (src, dst), so a per-slice searchsorted is a global searchsorted on
+    ``src * n_pad1 + dst``.
+    """
+    src = rg.edge_src.astype(np.int64)
+    dst = rg.neighbors.astype(np.int64)
+    n_real = 2 * rg.m
+    n_pad1 = np.int64(rg.n_pad + 1)
+    off = rg.offsets.astype(np.int64)
+    comp = src[:n_real] * n_pad1 + dst[:n_real]  # ascending
+    s, d = src[:n_real], dst[:n_real]
+    cnt = np.zeros(src.shape[0], dtype=np.int64)
+    if direction == "low":
+        # |{x2 in N(y) : x2 > x1}| for slots with y > x1
+        ub = np.searchsorted(comp, d * n_pad1 + s, side="right")
+        cnt[:n_real] = np.where(d > s, off[np.minimum(d, rg.n_pad - 1) + 1] - ub, 0)
+    else:
+        lb = np.searchsorted(comp, d * n_pad1 + np.minimum(s, d), side="left")
+        cnt[:n_real] = lb - off[np.minimum(d, rg.n_pad - 1)]
+    return cnt
+
+
+def wedge_capacity(rg: RankedGraph, direction: str = "low", pad: int = 128) -> int:
+    """Exact wedge total, padded. Host-side, O(m log m)."""
+    w = int(host_wedge_counts(rg, direction).sum())
+    return max(pad, ((w + pad - 1) // pad) * pad)
+
+
+def wedge_offsets(cnt: jax.Array) -> jax.Array:
+    """Exclusive prefix sum over per-slot wedge counts: (e_pad + 1,)."""
+    return jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(cnt.astype(jnp.int32))]
+    )
+
+
+def wedges_at(
+    dg: DeviceGraph,
+    cnt: Optional[jax.Array],
+    w_off: jax.Array,
+    wid: jax.Array,
+    valid: jax.Array,
+    direction: str = "low",
+) -> Wedges:
+    """Materialize wedges for an arbitrary array of flat wedge ids.
+
+    Used by the single-device path (contiguous ids), the batch
+    aggregation (per-block chunks), and the shard_map distributed engine
+    (per-device slices of the global wedge space). ``cnt`` may be None:
+    per-slot wedge counts are then recovered as w_off[e+1] - w_off[e]
+    (the distributed engine passes only the precomputed prefix array —
+    EXPERIMENTS.md §Perf-3).
+    """
+    idx_t = jnp.int32
+    total = w_off[-1]
+    wc = jnp.clip(wid.astype(idx_t), 0, jnp.maximum(total - 1, 0))
+    e = jnp.searchsorted(w_off, wc, side="right").astype(idx_t) - 1
+    e = jnp.clip(e, 0, dg.e_pad - 1)
+    j = wc - w_off[e]
+    cnt_e = (w_off[e + 1] - w_off[e]) if cnt is None else cnt[e]
+    y = dg.neighbors[e]
+    y_safe = jnp.minimum(y, dg.n_pad - 1)
+    if direction == "low":
+        x1 = dg.edge_src[e]
+        # eligible x2 = suffix of N(y) of length cnt[e]
+        pos = dg.offsets[y_safe + 1] - cnt_e + j
+        x2 = dg.neighbors[jnp.clip(pos, 0, dg.e_pad - 1)]
+    elif direction == "high":
+        x2 = dg.edge_src[e]
+        # eligible x1 = prefix of N(y) of length cnt[e]
+        pos = dg.offsets[y_safe] + j
+        x1 = dg.neighbors[jnp.clip(pos, 0, dg.e_pad - 1)]
+    else:
+        raise ValueError(f"direction must be low|high, got {direction}")
+    pos = jnp.clip(pos, 0, dg.e_pad - 1)
+    sent = jnp.int32(dg.n_pad)
+    return Wedges(
+        x1=jnp.where(valid, x1, sent),
+        x2=jnp.where(valid, x2, sent),
+        y=jnp.where(valid, y, sent),
+        center_slot=jnp.where(valid, e, dg.e_pad - 1),
+        second_slot=jnp.where(valid, pos, dg.e_pad - 1),
+        valid=valid,
+    )
+
+
+def gather_wedges(
+    dg: DeviceGraph,
+    cnt: jax.Array,
+    w_cap: int,
+    direction: str = "low",
+) -> Wedges:
+    """Materialize the flat wedge space (device, static shape (w_cap,))."""
+    w_off = wedge_offsets(cnt)
+    wid = jnp.arange(w_cap, dtype=jnp.int32)
+    valid = wid < w_off[-1]
+    return wedges_at(dg, cnt, w_off, wid, valid, direction)

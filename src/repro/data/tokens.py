@@ -1,0 +1,64 @@
+"""Deterministic synthetic token pipeline.
+
+Every batch is a pure function of (step, shard_index) — the property
+that makes elastic scaling and worker replacement coordination-free
+(DESIGN.md §6): a replacement host recomputes exactly the shard a lost
+host would have produced, and resuming on a different DP width re-slices
+the same global batch.
+
+Two streams:
+  - ``lm``:   hashed pseudo-random tokens (throughput / dry-run shapes)
+  - ``copy``: position-shifted copy task — a real learnable signal used
+    by the convergence tests (loss must drop).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+__all__ = ["TokenStream"]
+
+
+def _mix(x: np.ndarray) -> np.ndarray:
+    x = (x ^ (x >> 33)) * np.uint64(0xFF51AFD7ED558CCD)
+    x = (x ^ (x >> 33)) * np.uint64(0xC4CEB9FE1A85EC53)
+    return x ^ (x >> 33)
+
+
+@dataclasses.dataclass
+class TokenStream:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    kind: str = "copy"  # lm | copy
+    seed: int = 0
+
+    def batch(self, step: int, shard: int = 0, n_shards: int = 1) -> np.ndarray:
+        """Tokens (global_batch // n_shards, seq_len) for this shard."""
+        if self.global_batch % n_shards:
+            raise ValueError("global_batch must divide by n_shards")
+        per = self.global_batch // n_shards
+        rows = np.arange(shard * per, (shard + 1) * per, dtype=np.uint64)
+        cols = np.arange(self.seq_len, dtype=np.uint64)
+        base = (
+            np.uint64(self.seed) * np.uint64(0x9E3779B97F4A7C15)
+            + np.uint64(step) * np.uint64(0x100000001B3)
+        )
+        grid = _mix(base + rows[:, None] * np.uint64(1 << 20) + cols[None, :])
+        if self.kind == "lm":
+            return (grid % np.uint64(self.vocab)).astype(np.int32)
+        # copy task: successor sequences (next = cur + 1 mod vocab-1),
+        # random per-row offsets — a local rule tiny models learn in a
+        # handful of steps (the convergence-test signal)
+        pattern = (
+            _mix(base + rows * np.uint64(31))[:, None] + cols[None, :]
+        ) % np.uint64(max(self.vocab - 1, 1))
+        return (pattern + 1).astype(np.int32)  # avoid token 0
+
+    def __iter__(self) -> Iterator[np.ndarray]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: masked min-reduction (bucketing extract-min).
+
+The peeling frameworks' per-round primitive: find the minimum butterfly
+count among alive vertices/edges (the SPMD replacement for the
+Fibonacci heap's delete-min — DESIGN.md §2/§8, paper §5.4.1). Tiled VPU
+reduction with a (1,1) running-min accumulator; Julienne's skip-ahead
+over empty buckets is inherent (the min jumps gaps in one reduction).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import numpy as np
+
+__all__ = ["bucket_min_pallas", "TN"]
+
+TN = 2048
+_INF = np.int32(np.iinfo(np.int32).max)
+
+
+def _min_kernel(counts_ref, alive_ref, out_ref):
+    k = pl.program_id(0)
+    c = counts_ref[...].astype(jnp.int32)
+    alive = alive_ref[...] > 0
+    part = jnp.min(jnp.where(alive, c, _INF)).reshape(1, 1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, _INF)
+
+    out_ref[...] = jnp.minimum(out_ref[...], part)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bucket_min_pallas(
+    counts: jax.Array, alive: jax.Array, interpret: bool = True
+) -> jax.Array:
+    """Min of ``counts`` where ``alive``; INT32_MAX if none. () int32."""
+    n = counts.shape[0]
+    n_pad = ((n + TN - 1) // TN) * TN
+    cp = jnp.pad(counts.astype(jnp.int32), (0, n_pad - n))
+    ap = jnp.pad(alive.astype(jnp.int32), (0, n_pad - n))
+    grid = (n_pad // TN,)
+    out = pl.pallas_call(
+        _min_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TN,), lambda k: (k,)),
+            pl.BlockSpec((TN,), lambda k: (k,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("arbitrary",))
+        )
+        if not interpret
+        else None,
+        interpret=interpret,
+    )(cp, ap)
+    return out[0, 0]

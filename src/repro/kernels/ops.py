@@ -1,0 +1,42 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``use_pallas`` selects the kernel path; on non-TPU backends the kernels
+run in interpret mode (set by default from the backend). The pure-jnp
+reference path is always available for fallback and validation.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref as _ref
+from .bucket_min import bucket_min_pallas
+from .butterfly_combine import butterfly_combine_pallas
+from .wedge_count import wedge_histogram_pallas
+
+__all__ = ["wedge_histogram", "butterfly_combine", "bucket_min"]
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def wedge_histogram(keys, valid, num_buckets: int, use_pallas: bool = False):
+    if use_pallas:
+        return wedge_histogram_pallas(
+            keys, valid, num_buckets, interpret=_interpret_default()
+        )
+    return _ref.wedge_histogram_ref(keys, valid, num_buckets)
+
+
+def butterfly_combine(d, rep, valid, use_pallas: bool = False):
+    if use_pallas:
+        return butterfly_combine_pallas(
+            d, rep, valid, interpret=_interpret_default()
+        )
+    return _ref.butterfly_combine_ref(d, rep, valid)
+
+
+def bucket_min(counts, alive, use_pallas: bool = False):
+    if use_pallas:
+        return bucket_min_pallas(counts, alive, interpret=_interpret_default())
+    return _ref.bucket_min_ref(counts, alive)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["wedge_histogram_ref", "butterfly_combine_ref", "bucket_min_ref"]
+
+
+def wedge_histogram_ref(
+    keys: jax.Array, valid: jax.Array, num_buckets: int
+) -> jax.Array:
+    keys = keys.reshape(-1).astype(jnp.int32)
+    valid = valid.reshape(-1).astype(jnp.int32)
+    safe = jnp.where((keys >= 0) & (keys < num_buckets), keys, num_buckets)
+    return (
+        jnp.zeros((num_buckets + 1,), jnp.int32)
+        .at[safe]
+        .add(valid)[:num_buckets]
+    )
+
+
+def butterfly_combine_ref(d: jax.Array, rep: jax.Array, valid: jax.Array):
+    d = d.astype(jnp.int32)
+    live = (valid.astype(jnp.int32) > 0) & (d > 0)
+    rep = rep.astype(jnp.int32) > 0
+    dm1 = jnp.where(live, d - 1, 0)
+    c2 = jnp.where(live & rep, d * (d - 1) // 2, 0)
+    return dm1, c2, jnp.sum(c2.astype(jnp.float32))
+
+
+def bucket_min_ref(counts: jax.Array, alive: jax.Array) -> jax.Array:
+    inf = jnp.int32(np.iinfo(np.int32).max)
+    return jnp.min(
+        jnp.where(alive.astype(jnp.int32) > 0, counts.astype(jnp.int32), inf)
+    )

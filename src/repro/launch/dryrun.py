@@ -1,0 +1,355 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input-shape) cell this lowers + compiles the
+real step function — train_step (grad + ZeRO-AdamW), prefill, or
+decode_step — against the production mesh, records
+``memory_analysis()`` / ``cost_analysis()`` / HLO collective traffic,
+and fails loudly on sharding bugs.
+
+Two meshes per cell: 16×16 ("data","model") single-pod and 2×16×16
+("pod","data","model") multi-pod — the latter proves the pod axis
+shards. Roofline terms are computed from the single-pod artifacts plus
+depth-1/depth-2 *unrolled* variants (XLA cost_analysis counts scan
+bodies once; see DESIGN.md §7 and roofline/model.py).
+
+The paper's own engine is also dry-run: distributed butterfly counting
+over a production-scale synthetic graph spec on both meshes.
+
+Usage:
+  python -m repro.launch.dryrun [--arch a] [--cell c] [--out d]
+         [--skip-extrapolation] [--single-pod-only]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import ARCH_IDS, SHAPE_CELLS, get_config
+from ..configs.base import ArchConfig, ShapeCell
+from ..launch.mesh import make_production_mesh
+from ..launch.specs import cell_applicable, input_specs
+from ..models import RunConfig, decode_step, loss_fn, param_specs, prefill
+from ..models.model import specs_to_sds
+from ..optim import AdamWConfig, adamw_update
+from ..roofline.hlo import collective_summary
+from ..sharding.rules import (
+    batch_pspec,
+    param_pspecs,
+    state_pspecs,
+    zero_pspecs,
+)
+
+OPT = AdamWConfig()
+
+
+def _batch_shardings(batch_specs, mesh, global_batch):
+    bspec = batch_pspec(mesh, global_batch)
+
+    def shard(leaf):
+        extra = (None,) * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, P(*(tuple(bspec) + extra)))
+
+    return jax.tree.map(shard, batch_specs)
+
+
+def _named(mesh, pspec_tree):
+    return jax.tree.map(
+        lambda ps: NamedSharding(mesh, ps),
+        pspec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def build_lowering(
+    cfg: ArchConfig,
+    cell: ShapeCell,
+    mesh: Mesh,
+    run: RunConfig,
+):
+    """Returns the lowered (not yet compiled) step for one cell."""
+    specs = param_specs(cfg)
+    p_sds = specs_to_sds(specs)
+    p_psp = param_pspecs(specs, cfg, mesh)
+    p_sh = _named(mesh, p_psp)
+    io = input_specs(cfg, cell, run)
+
+    if io["kind"] in ("train",):
+        z_psp = zero_pspecs(specs, cfg, mesh)
+        z_sh = _named(mesh, z_psp)
+        opt_sds = {
+            "m": jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), p_sds
+            ),
+            "v": jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), p_sds
+            ),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+            "master": jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), p_sds
+            ),
+        }
+        opt_sh = {
+            "m": z_sh,
+            "v": z_sh,
+            "step": NamedSharding(mesh, P()),
+            "master": z_sh,
+        }
+        b_sh = _batch_shardings(io["batch"], mesh, cell.global_batch)
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p, batch, cfg, run)
+            )(params)
+            params2, opt2, stats = adamw_update(
+                grads, opt_state, params, OPT, moment_pspecs=z_psp
+            )
+            return params2, opt2, loss
+
+        fn = jax.jit(
+            train_step,
+            in_shardings=(p_sh, opt_sh, b_sh),
+            out_shardings=(p_sh, opt_sh, None),
+            donate_argnums=(0, 1),
+        )
+        return fn.lower(p_sds, opt_sds, io["batch"])
+
+    if io["kind"] == "prefill":
+        b_sh = _batch_shardings(io["batch"], mesh, cell.global_batch)
+
+        def prefill_step(params, batch):
+            return prefill(params, batch, cfg, run)
+
+        fn = jax.jit(prefill_step, in_shardings=(p_sh, b_sh))
+        return fn.lower(p_sds, io["batch"])
+
+    # decode
+    s_psp = state_pspecs(io["state"], cfg, mesh, cell.global_batch)
+    s_sh = _named(mesh, s_psp)
+    t_sh = _batch_shardings(io["token"], mesh, cell.global_batch)
+
+    def dstep(params, state, token):
+        return decode_step(params, state, token, cfg, run)
+
+    fn = jax.jit(
+        dstep,
+        in_shardings=(p_sh, s_sh, t_sh),
+        out_shardings=(None, s_sh),
+        donate_argnums=(1,),
+    )
+    return fn.lower(p_sds, io["state"], io["token"])
+
+
+def _depth_variant(cfg: ArchConfig, depth: int) -> ArchConfig:
+    kw: Dict[str, Any] = {"n_layers": depth}
+    if cfg.is_encdec:
+        kw["enc_layers"] = depth
+    if cfg.family == "hybrid" and cfg.attn_every:
+        # keep one shared-attn application per attn_every mamba layers
+        kw["n_layers"] = depth * cfg.attn_every
+    return dataclasses.replace(cfg, **kw)
+
+
+def analyze(lowered) -> Dict[str, Any]:
+    t0 = time.time()
+    compiled = lowered.compile()
+    dt = time.time() - t0
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    colls = collective_summary(text)
+    return {
+        "compile_s": round(dt, 2),
+        "memory": {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+        },
+        "cost": {
+            "flops": float(ca.get("flops", -1)),
+            "transcendentals": float(ca.get("transcendentals", 0)),
+            "bytes_accessed": float(ca.get("bytes accessed", -1)),
+        },
+        "collectives": colls,
+    }
+
+
+def run_cell(
+    arch_id: str,
+    cell: ShapeCell,
+    multi_pod: bool,
+    extrapolate: bool,
+    run: RunConfig,
+) -> Dict[str, Any]:
+    cfg = get_config(arch_id)
+    rec: Dict[str, Any] = {
+        "arch": arch_id,
+        "cell": cell.name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": cell.kind,
+    }
+    okflag, reason = cell_applicable(cfg, cell)
+    if not okflag:
+        rec["skipped"] = reason
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    try:
+        with mesh:
+            lowered = build_lowering(cfg, cell, mesh, run)
+            rec["full"] = analyze(lowered)
+            rec["ok"] = True
+    except Exception as e:  # sharding/compile failures are bugs: record
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["trace"] = traceback.format_exc(limit=6)
+        return rec
+    if extrapolate and not multi_pod:
+        # depth-1 / depth-2 unrolled for trip-count extrapolation
+        try:
+            runx = dataclasses.replace(run, scan_layers=False)
+            for depth in (1, 2):
+                dcfg = _depth_variant(cfg, depth)
+                with mesh:
+                    lowered = build_lowering(dcfg, cell, mesh, runx)
+                    rec[f"depth{depth}"] = analyze(lowered)
+                    rec[f"depth{depth}"]["n_layers"] = dcfg.n_layers
+        except Exception as e:
+            rec["extrapolation_error"] = f"{type(e).__name__}: {e}"
+    return rec
+
+
+def run_butterfly_cell(multi_pod: bool, optimized: bool = False) -> Dict[str, Any]:
+    """Dry-run the paper's distributed counting engine at production
+    scale: 50M-vertex / 200M-edge synthetic graph spec, wedge space
+    sharded over all mesh axes.
+
+    ``optimized``: §Perf-3 variant — precomputed wedge-prefix input
+    (no per-device O(e_pad) recount) + reduce-scattered vertex counts.
+    """
+    from ..core.distributed import distributed_count_fn
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    n_pad, e_pad, m = 50_000_000, 400_000_128, 200_000_000
+    w_cap = 2_097_152  # 2M wedges per device slice
+    rec = {
+        "arch": "parbutterfly-opt" if optimized else "parbutterfly-engine",
+        "cell": "count_50Mv_200Me",
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": "graph-count",
+    }
+    try:
+        from ..core.wedges import DeviceGraph
+
+        dg = DeviceGraph(
+            offsets=jax.ShapeDtypeStruct((n_pad + 1,), jnp.int32),
+            neighbors=jax.ShapeDtypeStruct((e_pad,), jnp.int32),
+            edge_src=jax.ShapeDtypeStruct((e_pad,), jnp.int32),
+            undirected_id=jax.ShapeDtypeStruct((e_pad,), jnp.int32),
+            side_of=jax.ShapeDtypeStruct((n_pad,), jnp.int8),
+            n=n_pad,
+            m=m,
+        )
+        bounds = jax.ShapeDtypeStruct((n_dev, 2), jnp.int32)
+        with mesh:
+            fn = distributed_count_fn(
+                mesh,
+                mesh.axis_names,
+                w_cap=w_cap,
+                mode="vertex",
+                dtype=jnp.int32,
+                precomputed_offsets=optimized,
+                combine="scatter" if optimized else "all",
+            )
+            if optimized:
+                w_off = jax.ShapeDtypeStruct((e_pad + 1,), jnp.int32)
+                lowered = fn.lower(dg, bounds, w_off)
+            else:
+                lowered = fn.lower(dg, bounds)
+            rec["full"] = analyze(lowered)
+            rec["ok"] = True
+    except Exception as e:
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["trace"] = traceback.format_exc(limit=6)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="single arch id")
+    ap.add_argument("--cell", default=None, help="single cell name")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-extrapolation", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--skip-butterfly", action="store_true")
+    ap.add_argument("--attn-chunk", type=int, default=None,
+                    help="online-softmax KV chunk (perf iterations)")
+    ap.add_argument("--remat", default="block")
+    ap.add_argument("--moe-chunk", type=int, default=0)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    run = RunConfig(attn_chunk=args.attn_chunk, remat=args.remat,
+                    moe_expert_chunk=args.moe_chunk)
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    cells = [c for c in SHAPE_CELLS if not args.cell or c.name == args.cell]
+    meshes = [False] if args.single_pod_only else [False, True]
+
+    results = []
+    for arch in archs:
+        for cell in cells:
+            for mp in meshes:
+                tag = f"{arch}__{cell.name}__{'mp' if mp else 'sp'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"skip (exists) {tag}")
+                    with open(path) as f:
+                        results.append(json.load(f))
+                    continue
+                t0 = time.time()
+                rec = run_cell(
+                    arch, cell, mp, not args.skip_extrapolation, run
+                )
+                rec["wall_s"] = round(time.time() - t0, 1)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = (
+                    "SKIP " + rec.get("skipped", "")
+                    if "skipped" in rec
+                    else ("OK" if rec.get("ok") else "FAIL " + rec.get("error", ""))
+                )
+                print(f"{tag:60s} {status}  [{rec['wall_s']}s]", flush=True)
+                results.append(rec)
+    if not args.skip_butterfly and not args.arch:
+        for mp in meshes:
+            for opt in (False, True):
+                name = "parbutterfly-opt" if opt else "parbutterfly"
+                tag = f"{name}__count__{'mp' if mp else 'sp'}"
+                path = os.path.join(args.out, tag + ".json")
+                if not os.path.exists(path):
+                    rec = run_butterfly_cell(mp, optimized=opt)
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    print(f"{tag:60s} "
+                          f"{'OK' if rec.get('ok') else 'FAIL ' + rec.get('error','')}",
+                          flush=True)
+    n_ok = sum(1 for r in results if r.get("ok"))
+    n_skip = sum(1 for r in results if "skipped" in r)
+    n_fail = sum(1 for r in results if r.get("ok") is False)
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped, {n_fail} FAILED")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,59 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape) cell.
+
+``input_specs(cfg, cell)`` returns (kind, batch-or-state specs) with no
+device allocation — the shannon/kernels dry-run pattern. Modality
+frontends are stubs: vlm cells get precomputed patch embeddings, audio
+cells get precomputed frame embeddings (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeCell
+from ..models import RunConfig, decode_state_specs
+from ..models.model import specs_to_sds
+
+__all__ = ["input_specs", "cell_applicable", "VIS_PREFIX"]
+
+VIS_PREFIX = 256
+
+
+def cell_applicable(cfg: ArchConfig, cell: ShapeCell) -> Tuple[bool, str]:
+    """(runnable, reason-if-not). long_500k needs sub-quadratic attention
+    (DESIGN.md §5 shape-cell skips)."""
+    if cell.name == "long_500k" and not cfg.subquadratic:
+        return False, "pure full-attention arch: 500k decode skipped"
+    return True, ""
+
+
+def input_specs(
+    cfg: ArchConfig, cell: ShapeCell, run: RunConfig = RunConfig()
+) -> Dict[str, Any]:
+    b, s = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    dt = jnp.bfloat16
+    sds = jax.ShapeDtypeStruct
+
+    if cell.kind in ("train", "prefill"):
+        if cfg.is_encdec:
+            batch = {
+                "src_embeds": sds((b, s, cfg.d_model), dt),
+                "tgt_tokens": sds((b, s), i32),
+            }
+        elif cfg.family == "vlm":
+            vis = min(run.vis_prefix, s // 2)
+            batch = {
+                "tokens": sds((b, s - vis), i32),
+                "vis_embeds": sds((b, vis, cfg.d_model), dt),
+            }
+        else:
+            batch = {"tokens": sds((b, s), i32)}
+        return {"kind": cell.kind, "batch": batch}
+
+    # decode: one new token against a seq_len cache
+    state = specs_to_sds(decode_state_specs(cfg, b, s))
+    token = sds((b, 1), i32)
+    return {"kind": "decode", "state": state, "token": token}

@@ -1,0 +1,21 @@
+from .model import (
+    RunConfig,
+    decode_state_specs,
+    decode_step,
+    init_decode_state,
+    init_params,
+    loss_fn,
+    param_specs,
+    prefill,
+)
+
+__all__ = [
+    "RunConfig",
+    "decode_state_specs",
+    "decode_step",
+    "init_decode_state",
+    "init_params",
+    "loss_fn",
+    "param_specs",
+    "prefill",
+]

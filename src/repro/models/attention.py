@@ -1,0 +1,222 @@
+"""GQA attention with QKV bias, qk-norm, RoPE / M-RoPE, sliding windows,
+and a decode path over a merged-layout KV cache.
+
+Projections are stored merged-2D ((D, H*hd) etc.) so tensor-parallel
+sharding splits the fused feature dim — head counts (40, 56, 24...) need
+not divide the TP degree (DESIGN.md; a real constraint of the assigned
+configs on a 16-wide model axis).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import apply_mrope, apply_rope, rms_norm, rope
+
+__all__ = ["attention_params_spec", "init_attention", "attention", "decode_attention"]
+
+NEG_INF = -1e30
+
+
+def attention_params_spec(cfg, dtype):
+    d, hd = cfg.d_model, cfg.head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    spec = {
+        "wq": ((d, h * hd), dtype),
+        "wk": ((d, kv * hd), dtype),
+        "wv": ((d, kv * hd), dtype),
+        "wo": ((h * hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        spec.update(
+            bq=((h * hd,), dtype), bk=((kv * hd,), dtype), bv=((kv * hd,), dtype)
+        )
+    if cfg.qk_norm:
+        spec.update(qnorm=((hd,), dtype), knorm=((hd,), dtype))
+    return spec
+
+
+def init_attention(key, cfg, dtype):
+    from .layers import dense_init
+
+    spec = attention_params_spec(cfg, dtype)
+    keys = jax.random.split(key, len(spec))
+    out = {}
+    for (name, (shape, dt)), k in zip(spec.items(), keys):
+        if name.startswith(("b",)):
+            out[name] = jnp.zeros(shape, dt)
+        elif name.endswith("norm"):
+            out[name] = jnp.ones(shape, dt)
+        else:
+            out[name] = dense_init(k, shape, dtype=dt)
+    return out
+
+
+def _project_qkv(p, x, cfg, pos=None, pos3=None):
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["qnorm"])
+        k = rms_norm(k, p["knorm"])
+    if cfg.mrope and pos3 is not None:
+        q = apply_mrope(q, pos3, cfg.rope_theta)
+        k = apply_mrope(k, pos3, cfg.rope_theta)
+    elif pos is not None:
+        cos, sin = rope(pos, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg):
+    """Grouped scaled-dot-product attention: q (B,S,H,hd), k/v (B,T,KV,hd)."""
+    b, s, h, hd = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    q = q.reshape(b, s, kvh, g, hd)
+    scores = jnp.einsum("bsngk,btnk->bnsgt", q, k) / np.sqrt(hd)
+    scores = jnp.where(mask[:, None, :, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bnsgt,btnk->bsngk", probs, v)
+    return out.reshape(b, s, h * hd)
+
+
+def _sdpa_chunked(q, k, v, cfg, chunk: int, window=None):
+    """Online-softmax (flash-style) causal attention, unrolled over KV
+    chunks: the (S × T) score tensor is never materialized — peak temp
+    drops by T/chunk (EXPERIMENTS.md §Perf iteration 5). Causal,
+    self-attention only."""
+    b, s, h, hd = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, hd)
+    qpos = jnp.arange(s, dtype=jnp.int32)
+    acc = jnp.zeros((b, kvh, s, g, hd), jnp.float32)
+    m = jnp.full((b, kvh, s, g), -jnp.inf, jnp.float32)
+    l = jnp.zeros((b, kvh, s, g), jnp.float32)
+    n_chunks = (t + chunk - 1) // chunk
+    for ci in range(n_chunks):
+        lo = ci * chunk
+        kc = jax.lax.dynamic_slice_in_dim(k, lo, min(chunk, t - lo), 1)
+        vc = jax.lax.dynamic_slice_in_dim(v, lo, min(chunk, t - lo), 1)
+        cw = kc.shape[1]
+        sc = jnp.einsum("bsngk,btnk->bnsgt", qg, kc) / np.sqrt(hd)
+        kpos = lo + jnp.arange(cw, dtype=jnp.int32)
+        msk = kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            msk &= kpos[None, :] > qpos[:, None] - window
+        sc = jnp.where(msk[None, None, :, None, :], sc.astype(jnp.float32),
+                       -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+        # guard fully-masked rows (m_new == -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(sc - m_safe[..., None])
+        p = jnp.where(jnp.isfinite(sc), p, 0.0)
+        alpha = jnp.where(
+            jnp.isfinite(m), jnp.exp(m - m_safe), 0.0
+        )
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bnsgt,btnk->bnsgk", p.astype(q.dtype), vc
+        ).astype(jnp.float32)
+        m = m_new
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = jnp.moveaxis(out, 1, 2).reshape(b, s, h * hd)
+    return out.astype(q.dtype)
+
+
+def attention(
+    p,
+    x: jax.Array,
+    cfg,
+    *,
+    causal: bool = True,
+    pos: Optional[jax.Array] = None,
+    pos3: Optional[jax.Array] = None,
+    kv_override: Optional[tuple] = None,
+    window: Optional[int] = None,
+    chunk: Optional[int] = None,
+) -> jax.Array:
+    """Full-sequence attention (train / prefill). ``kv_override`` feeds
+    cross-attention (encoder memory k, v). ``chunk`` selects the
+    online-softmax path (never materializes S×T scores)."""
+    b, s, _ = x.shape
+    if pos is None and not cfg.mrope:
+        pos = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, axis=0)
+    q, k, v = _project_qkv(p, x, cfg, pos=pos, pos3=pos3)
+    if kv_override is not None:
+        k, v = kv_override
+    t = k.shape[1]
+    if chunk is not None and causal and kv_override is None and t > chunk:
+        out = _sdpa_chunked(q, k, v, cfg, chunk, window=window)
+        return out @ p["wo"]
+    qpos = jnp.arange(s, dtype=jnp.int32)[:, None]
+    kpos = jnp.arange(t, dtype=jnp.int32)[None, :]
+    if causal and kv_override is None:
+        mask = kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+    else:
+        mask = jnp.ones((s, t), jnp.bool_)
+    mask = jnp.broadcast_to(mask[None], (b, s, t))
+    out = _sdpa(q, k, v, mask, cfg)
+    return out @ p["wo"]
+
+
+class KVCache(NamedTuple):
+    """Merged-layout cache: k/v (B, S_max, KV*hd) per layer stack
+    (L, B, S_max, KV*hd) — the merged feature dim shards over the model
+    axis even when KV-head counts don't divide the TP degree."""
+
+    k: jax.Array
+    v: jax.Array
+    length: jax.Array  # () int32 current fill
+
+
+def decode_attention(
+    p,
+    x: jax.Array,  # (B, 1, D)
+    cache_k: jax.Array,  # (B, S_max, KV*hd)
+    cache_v: jax.Array,
+    length: jax.Array,  # () int32
+    cfg,
+    *,
+    window: Optional[int] = None,
+):
+    """One-token decode against a KV cache; returns (out, new_k, new_v)."""
+    b = x.shape[0]
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    pos = jnp.full((b, 1), length, jnp.int32)
+    pos3 = None
+    if cfg.mrope:
+        pos3 = jnp.broadcast_to(pos[None], (3, b, 1))
+    q, k, v = _project_qkv(p, x, cfg, pos=pos, pos3=pos3)
+    s_max = cache_k.shape[1]
+    ck = jax.lax.dynamic_update_slice(
+        cache_k, k.reshape(b, 1, kv * hd), (0, length, 0)
+    )
+    cv = jax.lax.dynamic_update_slice(
+        cache_v, v.reshape(b, 1, kv * hd), (0, length, 0)
+    )
+    kf = ck.reshape(b, s_max, kv, hd)
+    vf = cv.reshape(b, s_max, kv, hd)
+    kpos = jnp.arange(s_max, dtype=jnp.int32)
+    mask = kpos <= length
+    if window is not None:
+        mask &= kpos > length - window
+    mask = jnp.broadcast_to(mask[None, None, :], (b, 1, s_max))
+    out = _sdpa(q, kf, vf, mask, cfg)
+    return out @ p["wo"], ck, cv

@@ -1,0 +1,111 @@
+"""Shared neural blocks: norms, rotary embeddings, MLPs, initializers.
+
+Everything is functional: params are plain dict pytrees; per-layer
+params are stacked along a leading L axis and consumed by
+``jax.lax.scan`` so the lowered HLO stays one-layer-sized (fast AOT
+compiles, latency-hiding-friendly loops on TPU).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "rms_norm",
+    "swiglu",
+    "rope",
+    "apply_rope",
+    "mrope_positions",
+    "dense_init",
+    "DTYPES",
+]
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(dt)
+
+
+def swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array) -> jax.Array:
+    h = (x @ w1) * jax.nn.silu(x @ w3)
+    return h @ w2
+
+
+def rope(
+    positions: jax.Array,  # (..., S) int32
+    head_dim: int,
+    theta: float,
+    dtype=jnp.float32,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (cos, sin) of shape (..., S, head_dim // 2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, half, dtype=jnp.float32) / half)
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, hd); cos/sin: (B, S, hd//2) or (S, hd//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def mrope_positions(
+    b: int, s: int, sections=(16, 24, 24)
+) -> jax.Array:
+    """M-RoPE (qwen2-vl): three position streams (temporal, h, w) that
+    share the rotary dims by section. The stub frontend supplies linear
+    positions for all three streams; real pipelines would pass grid
+    coordinates for vision tokens. Shape: (3, B, S)."""
+    pos = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, axis=0)
+    return jnp.stack([pos, pos, pos], axis=0)
+
+
+def apply_mrope(
+    x: jax.Array, pos3: jax.Array, theta: float, sections=(0.25, 0.375, 0.375)
+) -> jax.Array:
+    """Apply M-RoPE: split rotary dims into per-stream sections."""
+    b, s, h, hd = x.shape
+    half = hd // 2
+    cuts = [int(half * sections[0]), int(half * (sections[0] + sections[1]))]
+    outs = []
+    start = 0
+    for i, end in enumerate(cuts + [half]):
+        width = end - start
+        if width <= 0:
+            continue
+        freqs = 1.0 / (
+            theta ** ((jnp.arange(start, end, dtype=jnp.float32)) / half)
+        )
+        ang = pos3[i].astype(jnp.float32)[..., None] * freqs  # (B,S,w)
+        outs.append((jnp.cos(ang), jnp.sin(ang)))
+        start = end
+    cos = jnp.concatenate([c for c, _ in outs], axis=-1)
+    sin = jnp.concatenate([s_ for _, s_ in outs], axis=-1)
+    return apply_rope(x, cos[:, :, :], sin[:, :, :])
+
+
+def dense_init(key, shape, scale: Optional[float] = None, dtype=jnp.float32):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)

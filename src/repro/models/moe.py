@@ -1,0 +1,171 @@
+"""Mixture-of-Experts layer: top-k router + capacity-padded sort-based
+dispatch (MegaBlocks-style, gather/scatter instead of the GShard
+(N, E, C) one-hot cube), plus the arctic dense-residual branch.
+
+Expert weights carry a leading E dim sharded over the ``model`` axis
+(expert parallelism); GSPMD inserts the token all-to-all at the
+dispatch/return boundaries.
+
+The router's (token -> expert) top-k assignment is a bipartite graph —
+``routing_assignment()`` exports it for the paper's butterfly
+co-routing diagnostic (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sharding.constraints import constrain
+
+__all__ = ["moe_params_spec", "init_moe", "moe_mlp", "routing_assignment"]
+
+
+def moe_params_spec(cfg, dtype):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    spec = {
+        "router": ((d, e), jnp.float32),
+        "w1": ((e, d, f), dtype),
+        "w3": ((e, d, f), dtype),
+        "w2": ((e, f, d), dtype),
+    }
+    if cfg.dense_residual:
+        spec.update(
+            w1d=((d, f), dtype), w3d=((d, f), dtype), w2d=((f, d), dtype)
+        )
+    return spec
+
+
+def init_moe(key, cfg, dtype):
+    from .layers import dense_init
+
+    spec = moe_params_spec(cfg, dtype)
+    keys = jax.random.split(key, len(spec))
+    return {
+        name: dense_init(k, shape, dtype=dt)
+        for (name, (shape, dt)), k in zip(spec.items(), keys)
+    }
+
+
+def _topk_route(logits: jax.Array, k: int):
+    """Returns (weights (N,k) f32, experts (N,k) i32)."""
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, idx = jax.lax.top_k(gates, k)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    return w, idx.astype(jnp.int32)
+
+
+def moe_mlp(p, x: jax.Array, cfg, return_assignment: bool = False,
+            expert_chunk: int = 0):
+    """x: (B, S, D) -> (B, S, D) [+ (tokens, experts) assignment].
+
+    Grouped sort-based dispatch (GShard groups × MegaBlocks sort): each
+    batch row is a dispatch group, so top-k, the stable sort, and the
+    capacity scatter are all *batch-local* — they shard over the data
+    axes with zero communication. Only the (G, E, C, D) expert buffer
+    crosses the mesh: one sharding constraint flips it from
+    group-sharded (dp) to expert-sharded (model), which GSPMD lowers as
+    the canonical MoE all-to-all (EXPERIMENTS.md §Perf iterations 1-2).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = int(np.ceil(cfg.capacity_factor * k * s / e))
+    cap = max(4, ((cap + 3) // 4) * 4)
+    dp = ("pod", "data")
+
+    x = constrain(x, dp, None, None)
+    logits = x.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    weights, experts = _topk_route(logits, k)  # (B, S, k)
+
+    flat_e = experts.reshape(b, s * k)
+    flat_w = weights.reshape(b, s * k)
+    flat_t = jnp.repeat(
+        jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0), k, axis=1
+    ).reshape(b, s * k)
+    # token order within each group: stable sort by expert id
+    order = jnp.argsort(flat_e, axis=1, stable=True)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    idx = jnp.arange(s * k, dtype=jnp.int32)[None, :]
+    starts = jnp.concatenate(
+        [
+            jnp.ones((b, 1), jnp.bool_),
+            sorted_e[:, 1:] != sorted_e[:, :-1],
+        ],
+        axis=1,
+    )
+    start_idx = jax.lax.cummax(jnp.where(starts, idx, 0), axis=1)
+    pos_in_run = idx - start_idx
+    keep = pos_in_run < cap
+    slot = jnp.where(keep, sorted_e * cap + pos_in_run, e * cap)
+
+    tok_sorted = jnp.take_along_axis(flat_t, order, axis=1)
+    xg = jnp.take_along_axis(x, tok_sorted[..., None], axis=1)
+
+    def ffn_slice(e_lo: int, e_n: int):
+        """Dispatch + expert FFN + return for experts [e_lo, e_lo+e_n):
+        batch-local scatter into (B, e_n*C, D), all-to-all to
+        expert-sharded layout, einsum, all-to-all back. Chunking the
+        expert range streams the dispatch buffer (§Perf iteration 5)."""
+        s_rel = slot - e_lo * cap
+        in_rng = (slot >= e_lo * cap) & (slot < (e_lo + e_n) * cap)
+        s_rel = jnp.where(in_rng, s_rel, e_n * cap)  # OOB -> dropped
+        buf = jnp.zeros((b, e_n * cap, d), x.dtype)
+        buf = jax.vmap(lambda bb, ss, xx: bb.at[ss].add(xx))(buf, s_rel, xg)
+        buf = constrain(buf.reshape(b, e_n, cap, d), dp, None, None, None)
+        # the MoE all-to-all: keep groups on dp AND shard experts on
+        # model (constraining only E replicates G = 16x redundant
+        # compute — §Perf iteration 3)
+        buf = constrain(buf, dp, "model", None, None)
+        w1 = jax.lax.dynamic_slice_in_dim(p["w1"], e_lo, e_n, 0)
+        w3 = jax.lax.dynamic_slice_in_dim(p["w3"], e_lo, e_n, 0)
+        w2 = jax.lax.dynamic_slice_in_dim(p["w2"], e_lo, e_n, 0)
+        h = jnp.einsum("gecd,edf->gecf", buf, w1) * jax.nn.silu(
+            jnp.einsum("gecd,edf->gecf", buf, w3)
+        )
+        h = constrain(h, dp, "model", None, None)
+        ob = jnp.einsum("gecf,efd->gecd", h, w2)
+        ob = constrain(ob, dp, "model", None, None)
+        # return all-to-all: expert-sharded -> group-local layout
+        ob = constrain(ob, dp, None, None, None).reshape(b, e_n * cap, d)
+        g = jnp.take_along_axis(
+            ob, jnp.minimum(jnp.where(in_rng, s_rel, 0),
+                            e_n * cap - 1)[..., None], axis=1,
+        )
+        return jnp.where(in_rng[..., None], g, 0)
+
+    if expert_chunk and expert_chunk < e:
+        gathered = jnp.zeros((b, s * k, d), x.dtype)
+        for e_lo in range(0, e, expert_chunk):
+            gathered = gathered + ffn_slice(e_lo, min(expert_chunk, e - e_lo))
+    else:
+        gathered = ffn_slice(0, e)
+    gathered = jnp.where(keep[..., None], gathered, 0)
+    w_sorted = jnp.take_along_axis(flat_w, order, axis=1)
+    contrib = gathered * w_sorted[..., None].astype(x.dtype)
+    out = jnp.zeros((b, s, d), x.dtype)
+    out = jax.vmap(lambda oo, tt, cc: oo.at[tt].add(cc))(
+        out, tok_sorted, contrib
+    )
+    out = constrain(out, dp, None, None)
+
+    if cfg.dense_residual:
+        dense = (x @ p["w1d"]) * jax.nn.silu(x @ p["w3d"])
+        out = out + dense @ p["w2d"]
+    if return_assignment:
+        return out, (flat_t, flat_e, flat_w)
+    return out
+
+
+def routing_assignment(p, x: jax.Array, cfg):
+    """(tokens, experts) bipartite edges of the router's top-k choice —
+    the input graph for the butterfly co-routing diagnostic."""
+    b, s, d = x.shape
+    n = b * s
+    logits = x.reshape(n, d).astype(jnp.float32) @ p["router"].astype(
+        jnp.float32
+    )
+    _, experts = _topk_route(logits, cfg.top_k)
+    tokens = jnp.repeat(jnp.arange(n, dtype=jnp.int32), cfg.top_k)
+    return tokens, experts.reshape(-1)

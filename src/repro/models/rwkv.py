@@ -1,0 +1,225 @@
+"""RWKV6 (Finch) block: attention-free time-mix with data-dependent
+decay + channel-mix. O(1) state per token (the wkv matrix state), which
+is what lights up the 500k-decode cell for this arch.
+
+Train/prefill runs a ``lax.scan`` over time carrying
+(shift, wkv-state); decode is the single-step recurrence.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rms_norm
+
+__all__ = [
+    "rwkv_params_spec",
+    "init_rwkv",
+    "rwkv_block",
+    "rwkv_decode",
+    "RWKVState",
+]
+
+_LORA = 64
+
+
+def rwkv_params_spec(cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    h, hd = cfg.n_heads, cfg.head_dim
+    assert h * hd == d, "rwkv requires n_heads*head_dim == d_model"
+    return {
+        "ln1": ((d,), dtype),
+        "ln2": ((d,), dtype),
+        "mu": ((5, d), dtype),  # r,k,v,g,w token-shift mixes
+        "w0": ((d,), jnp.float32),
+        "a_w": ((d, _LORA), dtype),
+        "b_w": ((_LORA, d), dtype),
+        "wr": ((d, d), dtype),
+        "wk": ((d, d), dtype),
+        "wv": ((d, d), dtype),
+        "wg": ((d, d), dtype),
+        "wo": ((d, d), dtype),
+        "u": ((h, hd), jnp.float32),  # time-first bonus
+        "ln_x": ((d,), dtype),
+        "mu_c": ((2, d), dtype),  # channel-mix shifts (k, r)
+        "wck": ((d, f), dtype),
+        "wcv": ((f, d), dtype),
+        "wcr": ((d, d), dtype),
+    }
+
+
+def init_rwkv(key, cfg, dtype):
+    from .layers import dense_init
+
+    spec = rwkv_params_spec(cfg, dtype)
+    keys = jax.random.split(key, len(spec))
+    out = {}
+    for (name, (shape, dt)), k in zip(spec.items(), keys):
+        if name.startswith("ln") or name == "u":
+            out[name] = jnp.ones(shape, dt)
+        elif name.startswith("mu"):
+            out[name] = jnp.full(shape, 0.5, dt)
+        elif name == "w0":
+            out[name] = jnp.full(shape, -1.0, jnp.float32)
+        else:
+            out[name] = dense_init(k, shape, dtype=dt)
+    return out
+
+
+class RWKVState(NamedTuple):
+    shift_a: jax.Array  # (B, D) last input to time-mix
+    shift_c: jax.Array  # (B, D) last input to channel-mix
+    wkv: jax.Array  # (B, H, hd, hd) f32
+
+
+def init_rwkv_state(cfg, bsz, dtype) -> RWKVState:
+    d = cfg.d_model
+    h, hd = cfg.n_heads, cfg.head_dim
+    return RWKVState(
+        shift_a=jnp.zeros((bsz, d), dtype),
+        shift_c=jnp.zeros((bsz, d), dtype),
+        wkv=jnp.zeros((bsz, h, hd, hd), jnp.float32),
+    )
+
+
+def _time_mix_step(p, cfg, x_t, prev_x, wkv):
+    """One token of time-mix. x_t, prev_x: (B, D); wkv (B, H, hd, hd)."""
+    h, hd = cfg.n_heads, cfg.head_dim
+    bsz, d = x_t.shape
+    xx = prev_x - x_t
+    mr, mk, mv, mg, mw = [p["mu"][i] for i in range(5)]
+    xr, xk, xv, xg, xw = [x_t + xx * m for m in (mr, mk, mv, mg, mw)]
+    # data-dependent decay (the Finch contribution)
+    wdelta = jnp.tanh(xw @ p["a_w"]) @ p["b_w"]
+    logw = -jnp.exp(
+        p["w0"] + wdelta.astype(jnp.float32)
+    )  # (B, D) negative
+    w = jnp.exp(logw).reshape(bsz, h, hd)
+    r = (xr @ p["wr"]).reshape(bsz, h, hd).astype(jnp.float32)
+    k = (xk @ p["wk"]).reshape(bsz, h, hd).astype(jnp.float32)
+    v = (xv @ p["wv"]).reshape(bsz, h, hd).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"])
+    kv = k[:, :, :, None] * v[:, :, None, :]  # (B,H,hd,hd)
+    y = jnp.einsum("bhi,bhij->bhj", r, wkv + p["u"][None, :, :, None] * kv)
+    wkv_new = w[:, :, :, None] * wkv + kv
+    y = y.reshape(bsz, d).astype(x_t.dtype)
+    y = rms_norm(y, p["ln_x"]) * g
+    return y @ p["wo"], wkv_new
+
+
+def _channel_mix_step(p, x_t, prev_x):
+    xx = prev_x - x_t
+    xk = x_t + xx * p["mu_c"][0]
+    xr = x_t + xx * p["mu_c"][1]
+    kk = jnp.square(jax.nn.relu(xk @ p["wck"]))
+    return jax.nn.sigmoid(xr @ p["wcr"]) * (kk @ p["wcv"])
+
+
+def rwkv_block(p, x: jax.Array, cfg, state: RWKVState | None = None):
+    """Full-sequence RWKV6 block. x: (B, S, D) -> (B, S, D)."""
+    bsz, s, d = x.shape
+    if state is None:
+        state = init_rwkv_state(cfg, bsz, x.dtype)
+
+    def step(carry, x_t):
+        sa, sc, wkv = carry
+        xa = rms_norm(x_t, p["ln1"])
+        att, wkv = _time_mix_step(p, cfg, xa, sa, wkv)
+        x_mid = x_t + att
+        xc = rms_norm(x_mid, p["ln2"])
+        ffn = _channel_mix_step(p, xc, sc)
+        out = x_mid + ffn
+        return (xa, xc, wkv), out
+
+    (_, _, _), ys = jax.lax.scan(
+        step,
+        (state.shift_a, state.shift_c, state.wkv),
+        jnp.moveaxis(x, 1, 0),
+    )
+    return jnp.moveaxis(ys, 0, 1)
+
+
+def _time_mix_chunked(p, cfg, x, chunk: int = 64):
+    """Chunked-parallel Finch time-mix: the per-channel decay is
+    *separable* (exp(lw[t-1] - lw[j])), so intra-chunk scores become an
+    MXU matmul of decay-premultiplied r and k; only the (hd × hd) wkv
+    state crosses chunk boundaries via a short scan. All heavy compute
+    is vectorized over chunks (correct cost_analysis, no S-step scan).
+    """
+    h, hd = cfg.n_heads, cfg.head_dim
+    bsz, s, d = x.shape
+    q = min(chunk, s)
+    nc = s // q
+    prev = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+    xx = prev - x
+    mr, mk, mv, mg, mw = [p["mu"][i] for i in range(5)]
+    xr, xk, xv, xg, xw = [x + xx * m for m in (mr, mk, mv, mg, mw)]
+    wdelta = jnp.tanh(xw @ p["a_w"]) @ p["b_w"]
+    logw = -jnp.exp(
+        jnp.clip(p["w0"] + wdelta.astype(jnp.float32), -20.0, 10.0)
+    )  # (B,S,D) <= 0
+    logw = jnp.clip(logw, -30.0, 0.0)
+    r = (xr @ p["wr"]).reshape(bsz, nc, q, h, hd).astype(jnp.float32)
+    k = (xk @ p["wk"]).reshape(bsz, nc, q, h, hd).astype(jnp.float32)
+    v = (xv @ p["wv"]).reshape(bsz, nc, q, h, hd).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"])
+    lw = logw.reshape(bsz, nc, q, h, hd)
+    lw_cum = jnp.cumsum(lw, axis=2)  # inclusive
+    lw_prev = lw_cum - lw  # exclusive: sum_{r<t} within chunk
+    lw_tot = lw_cum[:, :, -1]  # (B,nc,H,hd)
+    # clip the growing exponent for the separable form
+    r_dec = r * jnp.exp(jnp.clip(lw_prev, -30.0, 30.0))
+    k_dec = k * jnp.exp(jnp.clip(-lw_cum, -30.0, 30.0))
+    scores = jnp.einsum("bcihn,bcjhn->bchij", r_dec, k_dec)
+    mask = jnp.tril(jnp.ones((q, q), jnp.bool_), k=-1)
+    scores = jnp.where(mask[None, None, None], scores, 0.0)
+    bonus = jnp.einsum("bcihn,bcihn->bcih", r, p["u"][None, None, None] * k)
+    y_intra = jnp.einsum("bchij,bcjhn->bcihn", scores, v)
+    y_intra = y_intra + bonus[..., None] * v
+    # inter-chunk state recurrence
+    k_tail = k * jnp.exp(jnp.clip(lw_tot[:, :, None] - lw_cum, -30.0, 30.0))
+    s_c = jnp.einsum("bcjhn,bcjhm->bchnm", k_tail, v)  # (B,nc,H,hd,hd)
+
+    def step(state, inp):
+        s_chunk, dec = inp  # (B,H,hd,hd), (B,H,hd)
+        new = state * jnp.exp(dec)[..., None] + s_chunk
+        return new, state  # state entering the chunk
+
+    s0 = jnp.zeros((bsz, h, hd, hd), jnp.float32)
+    _, s_in = jax.lax.scan(
+        step, s0, (jnp.moveaxis(s_c, 1, 0), jnp.moveaxis(lw_tot, 1, 0))
+    )
+    s_in = jnp.moveaxis(s_in, 0, 1)  # (B,nc,H,hd,hd)
+    y_cross = jnp.einsum(
+        "bcihn,bchnm->bcihm", r * jnp.exp(jnp.clip(lw_prev, -30.0, 30.0)), s_in
+    )
+    y = (y_intra + y_cross).reshape(bsz, s, d).astype(x.dtype)
+    y = rms_norm(y, p["ln_x"]) * g
+    return y @ p["wo"]
+
+
+def rwkv_block_chunked(p, x: jax.Array, cfg, chunk: int = 64):
+    """Full residual block with the chunked time-mix (train/prefill)."""
+    xa = rms_norm(x, p["ln1"])
+    x = x + _time_mix_chunked(p, cfg, xa, chunk)
+    xc = rms_norm(x, p["ln2"])
+    prev = jnp.concatenate([jnp.zeros_like(xc[:, :1]), xc[:, :-1]], axis=1)
+    xx = prev - xc
+    xk = xc + xx * p["mu_c"][0]
+    xr = xc + xx * p["mu_c"][1]
+    kk = jnp.square(jax.nn.relu(xk @ p["wck"]))
+    return x + jax.nn.sigmoid(xr @ p["wcr"]) * (kk @ p["wcv"])
+
+
+def rwkv_decode(p, x: jax.Array, cfg, state: RWKVState):
+    """x: (B, 1, D) -> ((B, 1, D), new_state)."""
+    x_t = x[:, 0]
+    xa = rms_norm(x_t, p["ln1"])
+    att, wkv = _time_mix_step(p, cfg, xa, state.shift_a, state.wkv)
+    x_mid = x_t + att
+    xc = rms_norm(x_mid, p["ln2"])
+    ffn = _channel_mix_step(p, xc, state.shift_c)
+    out = x_mid + ffn
+    return out[:, None, :], RWKVState(shift_a=xa, shift_c=xc, wkv=wkv)

@@ -1,0 +1,212 @@
+"""Mamba2 (SSD) block: chunked state-space scan for train/prefill and a
+recurrent O(1)-per-token decode path.
+
+Chunked SSD (seq split into Q-length chunks):
+  intra-chunk: masked (Q×Q) decay-weighted "attention" on the MXU,
+  inter-chunk: a (S/Q)-step ``lax.scan`` carrying the (H, P, N) state.
+
+The chunk dimension keeps the quadratic term bounded (Q=128) — this is
+what makes the 500k-token cells feasible for the hybrid/ssm archs
+(DESIGN.md §5 shape-cell table).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import rms_norm
+
+__all__ = [
+    "ssm_params_spec",
+    "init_ssm",
+    "mamba2_forward",
+    "mamba2_decode",
+    "SSMState",
+]
+
+_P = 64  # mamba2 head dim
+
+
+def _dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n_heads = d_in // _P
+    conv_dim = d_in + 2 * cfg.ssm_state  # x, B, C share the conv (G=1)
+    return d_in, n_heads, conv_dim
+
+
+def ssm_params_spec(cfg, dtype):
+    d = cfg.d_model
+    n = cfg.ssm_state
+    d_in, h, conv_dim = _dims(cfg)
+    return {
+        "in_proj": ((d, 2 * d_in + 2 * n + h), dtype),
+        "conv_w": ((conv_dim, cfg.ssm_conv), dtype),
+        "conv_b": ((conv_dim,), dtype),
+        "a_log": ((h,), jnp.float32),
+        "dt_bias": ((h,), jnp.float32),
+        "d_skip": ((h,), jnp.float32),
+        "gate_norm": ((d_in,), dtype),
+        "out_proj": ((d_in, d), dtype),
+    }
+
+
+def init_ssm(key, cfg, dtype):
+    from .layers import dense_init
+
+    spec = ssm_params_spec(cfg, dtype)
+    keys = jax.random.split(key, len(spec))
+    out = {}
+    for (name, (shape, dt)), k in zip(spec.items(), keys):
+        if name == "a_log":
+            out[name] = jnp.log(
+                jnp.linspace(1.0, 16.0, shape[0], dtype=jnp.float32)
+            )
+        elif name == "dt_bias":
+            out[name] = jnp.full(shape, -2.0, jnp.float32)
+        elif name in ("d_skip",):
+            out[name] = jnp.ones(shape, jnp.float32)
+        elif name == "gate_norm":
+            out[name] = jnp.ones(shape, dt)
+        elif name == "conv_b":
+            out[name] = jnp.zeros(shape, dt)
+        else:
+            out[name] = dense_init(k, shape, dtype=dt)
+    return out
+
+
+def _split_proj(p, x, cfg):
+    d_in, h, conv_dim = _dims(cfg)
+    n = cfg.ssm_state
+    proj = x @ p["in_proj"]  # (B, S, 2*d_in + 2n + h)
+    z, xbc, dt = jnp.split(proj, [d_in, d_in + d_in + 2 * n], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b, state=None):
+    """Depthwise causal conv1d; xbc (B, S, C), w (C, K).
+
+    Returns (out, new_state) where state holds the trailing K-1 inputs.
+    """
+    bsz, s, c = xbc.shape
+    k = w.shape[1]
+    if state is None:
+        state = jnp.zeros((bsz, k - 1, c), xbc.dtype)
+    full = jnp.concatenate([state, xbc], axis=1)  # (B, S+K-1, C)
+    out = jnp.zeros((bsz, s, c), xbc.dtype)
+    for i in range(k):
+        out = out + full[:, i : i + s, :] * w[:, i]
+    new_state = full[:, -(k - 1) :, :]
+    return jax.nn.silu(out + b), new_state
+
+
+def mamba2_forward(p, x: jax.Array, cfg):
+    """Full-sequence SSD. x: (B, S, D) -> (B, S, D). S % chunk == 0."""
+    bsz, s, d = x.shape
+    d_in, h, conv_dim = _dims(cfg)
+    n = cfg.ssm_state
+    q = min(cfg.ssm_chunk, s)
+    nc = s // q
+    z, xbc, dt = _split_proj(p, x, cfg)
+    xbc, _ = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs, bmat, cmat = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+    xs = xs.reshape(bsz, nc, q, h, _P)
+    bmat = bmat.reshape(bsz, nc, q, n).astype(jnp.float32)
+    cmat = cmat.reshape(bsz, nc, q, n).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    dt = dt.reshape(bsz, nc, q, h)
+    a = -jnp.exp(p["a_log"])  # (H,) negative
+    la = dt * a  # (B,nc,q,H) log-decay per step
+    la_cum = jnp.cumsum(la, axis=2)  # inclusive
+    # intra-chunk: y[i] = sum_{j<=i} exp(la_cum[i]-la_cum[j]) dt[j]
+    #                     (C_i · B_j) x[j]
+    li = la_cum[:, :, :, None, :]  # (B,nc,i,1,H)
+    lj = la_cum[:, :, None, :, :]  # (B,nc,1,j,H)
+    mask = jnp.tril(jnp.ones((q, q), jnp.bool_))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(li - lj), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", cmat, bmat)  # (B,nc,q,q)
+    w_ij = cb[..., None] * decay * dt[:, :, None, :, :]  # (B,nc,i,j,H)
+    y_intra = jnp.einsum(
+        "bcijh,bcjhp->bcihp", w_ij.astype(x.dtype), xs
+    )  # (B,nc,q,H,P)
+    # chunk summaries: S_c = sum_j exp(la_sum - la_cum[j]) dt_j B_j ⊗ x_j
+    la_sum = la_cum[:, :, -1, :]  # (B,nc,H)
+    tail = jnp.exp(la_sum[:, :, None, :] - la_cum) * dt  # (B,nc,q,H)
+    s_c = jnp.einsum(
+        "bcjh,bcjn,bcjhp->bchpn",
+        tail.astype(jnp.float32),
+        bmat,
+        xs.astype(jnp.float32),
+    )  # (B,nc,H,P,N)
+
+    def step(hstate, inp):
+        s_chunk, la_tot = inp  # (B,H,P,N), (B,H)
+        new = hstate * jnp.exp(la_tot)[:, :, None, None] + s_chunk
+        return new, hstate  # emit state *entering* the chunk
+
+    h0 = jnp.zeros((bsz, h, _P, n), jnp.float32)
+    _, h_in = jax.lax.scan(
+        step,
+        h0,
+        (
+            jnp.moveaxis(s_c, 1, 0),
+            jnp.moveaxis(la_sum, 1, 0),
+        ),
+    )
+    h_in = jnp.moveaxis(h_in, 0, 1)  # (B,nc,H,P,N) state entering chunk
+    y_inter = jnp.einsum(
+        "bcin,bcih,bchpn->bcihp",
+        cmat,
+        jnp.exp(la_cum),
+        h_in,
+    ).astype(x.dtype)
+    y = (y_intra + y_inter).reshape(bsz, s, h, _P)
+    y = y + xs.reshape(bsz, s, h, _P) * p["d_skip"].astype(x.dtype)[
+        None, None, :, None
+    ]
+    y = y.reshape(bsz, s, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"])
+    return y @ p["out_proj"]
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array  # (B, K-1, conv_dim)
+    h: jax.Array  # (B, H, P, N) f32
+
+
+def init_ssm_state(cfg, bsz, dtype) -> SSMState:
+    d_in, h, conv_dim = _dims(cfg)
+    return SSMState(
+        conv=jnp.zeros((bsz, cfg.ssm_conv - 1, conv_dim), dtype),
+        h=jnp.zeros((bsz, h, _P, cfg.ssm_state), jnp.float32),
+    )
+
+
+def mamba2_decode(p, x: jax.Array, state: SSMState, cfg):
+    """One-token recurrence. x: (B, 1, D) -> ((B, 1, D), new_state)."""
+    bsz = x.shape[0]
+    d_in, h, conv_dim = _dims(cfg)
+    n = cfg.ssm_state
+    z, xbc, dt = _split_proj(p, x, cfg)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"], state.conv)
+    xs, bvec, cvec = jnp.split(xbc[:, 0], [d_in, d_in + n], axis=-1)
+    xs = xs.reshape(bsz, h, _P)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dtv * a)  # (B,H)
+    upd = jnp.einsum(
+        "bh,bn,bhp->bhpn",
+        dtv,
+        bvec.astype(jnp.float32),
+        xs.astype(jnp.float32),
+    )
+    hnew = state.h * decay[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", cvec.astype(jnp.float32), hnew).astype(
+        x.dtype
+    )
+    y = y + xs * p["d_skip"].astype(x.dtype)[None, :, None]
+    y = y.reshape(bsz, 1, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"])
+    return y @ p["out_proj"], SSMState(conv=conv_state, h=hnew)

@@ -1,0 +1,13 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update, global_norm, schedule
+from .compress import ef_init, ef_psum, ef_quantize
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "global_norm",
+    "schedule",
+    "ef_init",
+    "ef_psum",
+    "ef_quantize",
+]

@@ -1,0 +1,132 @@
+"""AdamW with ZeRO-1 sharded moments and an fp32 master copy.
+
+Layout (per leaf):
+  params: model dtype (bf16 in production)
+  master: fp32 (optional; required for stable bf16 training)
+  m, v:   fp32, sharded over the data axes per ``zero_pspecs``
+
+The update is purely functional; sharding is induced by
+``with_sharding_constraint`` on the moments so XLA reduce-scatters
+gradients into the ZeRO layout instead of all-reducing (the classic
+distributed-optimization trick; see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    use_master: bool = True
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to 10% of peak."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.55 + 0.45 * jnp.cos(jnp.pi * frac)
+    return cfg.lr_peak * warm * cos
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_init(params, cfg: AdamWConfig, moment_pspecs=None):
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    m = jax.tree.map(f32, params)
+    v = jax.tree.map(f32, params)
+    state = {
+        "m": m,
+        "v": v,
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if cfg.use_master:
+        # copy=True: an f32 param would otherwise alias its master and
+        # break donation (donate(params) + donate(master) twice)
+        state["master"] = jax.tree.map(
+            lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params
+        )
+    if moment_pspecs is not None:
+        state["m"] = jax.lax.with_sharding_constraint(state["m"], moment_pspecs)
+        state["v"] = jax.lax.with_sharding_constraint(state["v"], moment_pspecs)
+        if cfg.use_master:
+            state["master"] = jax.lax.with_sharding_constraint(
+                state["master"], moment_pspecs
+            )
+    return state
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig, moment_pspecs=None):
+    """One optimizer step; returns (new_params, new_state, stats)."""
+    if moment_pspecs is not None:
+        # ZeRO-2 flavor: constrain incoming grads to the moment layout so
+        # XLA lowers the DP gradient reduction as reduce-scatter (half
+        # the all-reduce wire) — EXPERIMENTS.md §Perf iteration 7.
+        try:
+            grads = jax.lax.with_sharding_constraint(grads, moment_pspecs)
+        except Exception:
+            pass
+    step = state["step"] + 1
+    lr = schedule(cfg, step.astype(jnp.float32))
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    def upd(g, m, v, ref):
+        g = g.astype(jnp.float32) * scale
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m2 / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vh = v2 / (1 - cfg.b2 ** step.astype(jnp.float32))
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * ref.astype(
+            jnp.float32
+        )
+        return m2, v2, delta
+
+    ref_tree = state.get("master", params)
+    mvd = jax.tree.map(upd, grads, state["m"], state["v"], ref_tree)
+    m2 = jax.tree.map(lambda t: t[0], mvd, is_leaf=lambda x: isinstance(x, tuple))
+    v2 = jax.tree.map(lambda t: t[1], mvd, is_leaf=lambda x: isinstance(x, tuple))
+    delta = jax.tree.map(lambda t: t[2], mvd, is_leaf=lambda x: isinstance(x, tuple))
+    if moment_pspecs is not None:
+        m2 = jax.lax.with_sharding_constraint(m2, moment_pspecs)
+        v2 = jax.lax.with_sharding_constraint(v2, moment_pspecs)
+    new_state = {"m": m2, "v": v2, "step": step}
+    if "master" in state:
+        master = jax.tree.map(
+            lambda ref, d: ref - lr * d, state["master"], delta
+        )
+        if moment_pspecs is not None:
+            master = jax.lax.with_sharding_constraint(master, moment_pspecs)
+        new_state["master"] = master
+        new_params = jax.tree.map(
+            lambda mst, p: mst.astype(p.dtype), master, params
+        )
+    else:
+        new_params = jax.tree.map(
+            lambda p, d: (p.astype(jnp.float32) - lr * d).astype(p.dtype),
+            params,
+            delta,
+        )
+    stats = {"lr": lr, "grad_norm": gnorm}
+    return new_params, new_state, stats

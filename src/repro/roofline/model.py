@@ -1,0 +1,198 @@
+"""Roofline terms from dry-run artifacts (deliverable g).
+
+Hardware model (TPU v5e, per chip):
+  peak_flops  = 197e12 (bf16)
+  hbm_bw      = 819e9  B/s
+  ici_bw      = 50e9   B/s per link (we charge all collective wire bytes
+                against ONE link — worst case; axis-disjoint collectives
+                on a 2D torus can overlap up to 2 links, noted per cell)
+
+Trip-count correction: XLA cost_analysis counts scan bodies once, so
+per-cell totals are reconstructed from depth-1/depth-2 *unrolled*
+lowerings:
+
+    total(L) = c(d1) + (G - 1) · (c(d2) - c(d1)),   G = L / L_d1
+
+which is exact for homogeneous stacks (dense/moe/ssm/vlm/audio) and a
+group-level fit for the zamba2 hybrid (one shared-attn application per
+``attn_every`` mamba layers = one group). All quantities are per-device
+post-SPMD (verified convention of XLA-CPU cost_analysis).
+
+MODEL_FLOPS = 6·N·D (train) or 2·N·D (inference), N = active params.
+The "useful fraction" MODEL_FLOPS / HLO_FLOPS exposes remat/dispatch
+waste; the roofline fraction is useful-compute-time / max(term).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from ..configs import get_config
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+__all__ = ["cell_roofline", "PEAK_FLOPS", "HBM_BW", "ICI_BW"]
+
+
+def _extrapolate(rec: Dict[str, Any], key_path) -> Optional[float]:
+    def get(d, *ks):
+        for k in ks:
+            if d is None:
+                return None
+            d = d.get(k)
+        return d
+
+    d1 = get(rec, "depth1", *key_path)
+    d2 = get(rec, "depth2", *key_path)
+    if d1 is None or d2 is None:
+        return None
+    cfg = get_config(rec["arch"])
+    l_d1 = rec["depth1"].get("n_layers", 1)
+    groups = cfg.n_layers / max(l_d1, 1)
+    return float(d1) + (groups - 1.0) * (float(d2) - float(d1))
+
+
+def _model_flops_per_device(rec: Dict[str, Any], n_chips: int) -> float:
+    cfg = get_config(rec["arch"])
+    n_active = cfg.active_param_count()
+    cell_kind = rec.get("kind", "train")
+    # tokens processed per step (global)
+    from ..configs import SHAPE_CELLS
+
+    cell = next(c for c in SHAPE_CELLS if c.name == rec["cell"])
+    if cell_kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        per_tok = 6 * n_active
+    elif cell_kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        per_tok = 2 * n_active
+    else:  # decode: one token per sequence
+        tokens = cell.global_batch
+        per_tok = 2 * n_active
+    return per_tok * tokens / n_chips
+
+
+def _useful_bytes_per_device(rec: Dict[str, Any], n_chips: int) -> float:
+    """Decode steps are memory-bound by construction: the minimal HBM
+    traffic is (params touched + KV/state cache read+written) once."""
+    cfg = get_config(rec["arch"])
+    from ..configs import SHAPE_CELLS
+    from ..models.model import decode_state_specs, _is_spec_leaf
+    import jax
+
+    cell = next(c for c in SHAPE_CELLS if c.name == rec["cell"])
+    param_bytes = cfg.param_count() * 2  # bf16 weights resident
+    state = decode_state_specs(cfg, cell.global_batch, cell.seq_len)
+    leaves = jax.tree_util.tree_leaves(state, is_leaf=_is_spec_leaf)
+    cache_bytes = 0
+    for shape, dtype in leaves:
+        n = int(np.prod(shape)) if shape else 1
+        try:
+            isz = np.dtype(dtype).itemsize
+        except TypeError:
+            isz = 2  # bfloat16
+        cache_bytes += n * isz
+    return (param_bytes + cache_bytes) / n_chips
+
+
+def _butterfly_roofline(rec: Dict[str, Any]) -> Dict[str, Any]:
+    """The graph engine has no layer scan — the compiled program IS the
+    whole step, so no extrapolation is needed. Useful work = one pass
+    over the per-device wedge slice (int ops don't hit the MXU; the
+    engine is memory/sort-bound by construction, like all graph
+    analytics — the interesting number is the collective share)."""
+    full = rec["full"]
+    flops = full["cost"]["flops"]
+    byts = full["cost"]["bytes_accessed"]
+    wire = full["collectives"]["wire_bytes"]
+    t_comp = flops / PEAK_FLOPS
+    t_mem = byts / HBM_BW
+    t_coll = wire / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    # useful bytes: each wedge materialization reads ~4 int32 gathers +
+    # sort traffic lower bound of one read+write of the slice
+    w_cap = 2_097_152
+    useful_bytes = w_cap * 4 * 6
+    t_useful = useful_bytes / HBM_BW
+    return {
+        "arch": rec["arch"],
+        "cell": rec["cell"],
+        "mesh": rec["mesh"],
+        "kind": rec.get("kind"),
+        "basis": "whole-program (no scan)",
+        "flops_dev": flops,
+        "bytes_dev": byts,
+        "wire_dev": wire,
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "dominant": max(terms, key=terms.get),
+        "model_flops_dev": 0.0,
+        "useful_flops_frac": useful_bytes / byts if byts else 0.0,
+        "roofline_frac": t_useful / max(terms.values())
+        if max(terms.values()) > 0
+        else 0.0,
+        "temp_gib": full["memory"]["temp_bytes"] / 2**30,
+        "args_gib": full["memory"]["argument_bytes"] / 2**30,
+    }
+
+
+def cell_roofline(rec: Dict[str, Any]) -> Optional[Dict[str, Any]]:
+    """Compute the three terms + bottleneck for one dry-run record.
+
+    Roofline rows are single-pod only (the multi-pod pass proves the pod
+    axis shards; it carries no depth extrapolation)."""
+    if not rec.get("ok") or rec.get("skipped"):
+        return None
+    if rec["mesh"] != "16x16":
+        return None
+    if rec["arch"].startswith("parbutterfly"):
+        return _butterfly_roofline(rec)
+    n_chips = 256
+    flops = _extrapolate(rec, ("cost", "flops"))
+    byts = _extrapolate(rec, ("cost", "bytes_accessed"))
+    wire = _extrapolate(rec, ("collectives", "wire_bytes"))
+    basis = "depth-extrapolated"
+    if flops is None:
+        # fall back to the (undercounted) scanned full program
+        flops = rec["full"]["cost"]["flops"]
+        byts = rec["full"]["cost"]["bytes_accessed"]
+        wire = rec["full"]["collectives"]["wire_bytes"]
+        basis = "scan-body-only (UNDERCOUNT)"
+    t_comp = flops / PEAK_FLOPS
+    t_mem = byts / HBM_BW
+    t_coll = wire / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = _model_flops_per_device(rec, n_chips)
+    useful = mf / flops if flops else 0.0
+    if rec.get("kind") == "decode":
+        # memory-roofline reference for decode
+        ub = _useful_bytes_per_device(rec, n_chips)
+        t_useful = ub / HBM_BW
+        useful = ub / byts if byts else 0.0
+    else:
+        t_useful = mf / PEAK_FLOPS
+    frac = t_useful / max(terms.values()) if max(terms.values()) > 0 else 0.0
+    return {
+        "arch": rec["arch"],
+        "cell": rec["cell"],
+        "mesh": rec["mesh"],
+        "kind": rec.get("kind"),
+        "basis": basis,
+        "flops_dev": flops,
+        "bytes_dev": byts,
+        "wire_dev": wire,
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_dev": mf,
+        "useful_flops_frac": useful,
+        "roofline_frac": frac,
+        "temp_gib": rec["full"]["memory"]["temp_bytes"] / 2**30,
+        "args_gib": rec["full"]["memory"]["argument_bytes"] / 2**30,
+    }

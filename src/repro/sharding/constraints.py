@@ -1,0 +1,79 @@
+"""Mesh-context-aware sharding constraints usable from model code.
+
+``constrain(x, *axes)`` applies ``with_sharding_constraint`` against the
+*current* mesh context, dropping axes the mesh doesn't have and axes
+that don't divide the dim — so the same model code runs on a 1-device
+test mesh, the 16×16 pod, and the 2×16×16 multi-pod mesh unchanged.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["constrain", "current_axes"]
+
+
+def _ambient_mesh():
+    """The mesh visible to model code: the explicit-sharding abstract
+    mesh if set, else the legacy ``with mesh:`` context mesh."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is not None and getattr(mesh, "axis_names", None):
+            return mesh
+    except Exception:
+        pass
+    try:  # legacy global mesh context (pjit/shard_map)
+        from jax._src import mesh as mesh_lib
+
+        pm = mesh_lib.thread_resources.env.physical_mesh
+        if pm is not None and not pm.empty:
+            return pm
+    except Exception:
+        pass
+    return None
+
+
+def current_axes() -> tuple:
+    mesh = _ambient_mesh()
+    return tuple(mesh.axis_names) if mesh is not None else ()
+
+
+def _axis_size(mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([dict(mesh.shape)[a] for a in axes]))
+
+
+def constrain(x: jax.Array, *spec) -> jax.Array:
+    """Best-effort with_sharding_constraint under the ambient mesh."""
+    mesh = _ambient_mesh()
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+    entries = []
+    for dim, axes in zip(x.shape, tuple(spec) + (None,) * len(x.shape)):
+        if axes is None:
+            entries.append(None)
+            continue
+        tup = (axes,) if isinstance(axes, str) else tuple(axes)
+        tup = tuple(a for a in tup if a in names)
+        while tup and dim % _axis_size(mesh, tup) != 0:
+            tup = tup[:-1]
+        entries.append(
+            tup[0] if len(tup) == 1 else (tuple(tup) if tup else None)
+        )
+    if all(e is None for e in entries):
+        return x
+    try:
+        from jax.sharding import Mesh, NamedSharding
+
+        if isinstance(mesh, Mesh):
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(*entries))
+            )
+        return jax.lax.with_sharding_constraint(x, P(*entries))
+    except Exception:
+        return x

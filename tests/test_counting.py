@@ -1,0 +1,153 @@
+"""Counting engine vs the dense oracle: every strategy × ranking × mode,
+plus hypothesis property tests on the system invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    BipartiteGraph,
+    RANKINGS,
+    count_butterflies,
+    make_order,
+    preprocess,
+    wedges_processed,
+)
+from repro.core.oracle import global_count, per_edge_counts, per_vertex_counts
+from repro.core.wedges import host_wedge_counts
+
+
+def rand_graph(nu, nv, m, seed):
+    rng = np.random.default_rng(seed)
+    e = np.stack([rng.integers(0, nu, m), rng.integers(0, nv, m)], axis=1)
+    return BipartiteGraph(nu, nv, e)
+
+
+AGGS = ("sort", "hash", "histogram", "batch", "batch_wa")
+
+
+@pytest.mark.parametrize("order", sorted(RANKINGS))
+@pytest.mark.parametrize("agg", AGGS)
+def test_global_counts_match_oracle(order, agg):
+    for seed in range(3):
+        g = rand_graph(14, 11, 45, seed)
+        want = global_count(g)
+        r = count_butterflies(g, order=order, aggregation=agg, mode="global")
+        assert int(r.total) == want, (seed, order, agg)
+
+
+@pytest.mark.parametrize("agg", AGGS)
+@pytest.mark.parametrize("cache_opt", [False, True])
+def test_vertex_and_edge_counts(agg, cache_opt):
+    g = rand_graph(13, 9, 40, 1)
+    pu, pv = per_vertex_counts(g)
+    pe = per_edge_counts(g)
+    rv = count_butterflies(
+        g, order="degree", aggregation=agg, mode="vertex", cache_opt=cache_opt
+    )
+    assert np.array_equal(rv.per_u, pu)
+    assert np.array_equal(rv.per_v, pv)
+    re_ = count_butterflies(
+        g, order="degree", aggregation=agg, mode="edge", cache_opt=cache_opt
+    )
+    assert np.array_equal(re_.per_edge, pe)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nu=st.integers(2, 16),
+    nv=st.integers(2, 16),
+    m=st.integers(1, 60),
+    seed=st.integers(0, 10_000),
+    order=st.sampled_from(sorted(RANKINGS)),
+)
+def test_property_global_count_invariant_to_strategy(nu, nv, m, seed, order):
+    """Invariant: every (ranking × aggregation) combination returns the
+    oracle count."""
+    g = rand_graph(nu, nv, m, seed)
+    want = global_count(g)
+    for agg in ("sort", "hash", "batch"):
+        r = count_butterflies(g, order=order, aggregation=agg, mode="global")
+        assert int(r.total) == want
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nu=st.integers(2, 14),
+    nv=st.integers(2, 14),
+    m=st.integers(1, 50),
+    seed=st.integers(0, 10_000),
+)
+def test_property_sum_identities(nu, nv, m, seed):
+    """Σ per-vertex counts = 4·B; Σ per-edge counts = 4·B (each butterfly
+    has 4 vertices and 4 edges)."""
+    g = rand_graph(nu, nv, m, seed)
+    b = global_count(g)
+    rv = count_butterflies(g, mode="vertex")
+    assert int(rv.per_u.sum()) + int(rv.per_v.sum()) == 4 * b
+    re_ = count_butterflies(g, mode="edge")
+    assert int(re_.per_edge.sum()) == 4 * b
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    nu=st.integers(2, 12),
+    nv=st.integers(2, 12),
+    m=st.integers(1, 40),
+    seed=st.integers(0, 10_000),
+)
+def test_property_wedge_bound_work_efficiency(nu, nv, m, seed):
+    """Degree-ordered wedge count obeys the Chiba-Nishizeki bound
+    Σ_(u,v)∈E min(deg u, deg v) — the O(αm) certificate (Thm 4.11)."""
+    g = rand_graph(nu, nv, m, seed)
+    order = make_order(g, "degree")
+    rg = preprocess(g, order)
+    wedges = int(host_wedge_counts(rg).sum())
+    du, dv = g.degrees()
+    bound = int(
+        np.minimum(du[g.edges[:, 0]], dv[g.edges[:, 1]]).sum()
+    )
+    assert wedges <= bound
+
+
+def test_wedges_processed_matches_device_count():
+    g = rand_graph(20, 18, 80, 3)
+    for name in RANKINGS:
+        order = make_order(g, name)
+        rg = preprocess(g, order)
+        assert wedges_processed(g, order) == int(
+            host_wedge_counts(rg).sum()
+        )
+
+
+def test_empty_and_degenerate_graphs():
+    g = BipartiteGraph(3, 3, np.zeros((0, 2), dtype=np.int64))
+    assert int(count_butterflies(g).total) == 0
+    # single butterfly
+    e = np.array([[0, 0], [0, 1], [1, 0], [1, 1]])
+    g = BipartiteGraph(2, 2, e)
+    assert int(count_butterflies(g).total) == 1
+    rv = count_butterflies(g, mode="vertex")
+    assert np.array_equal(rv.per_u, [1, 1])
+    assert np.array_equal(rv.per_v, [1, 1])
+
+
+def test_duplicate_edges_removed():
+    e = np.array([[0, 0], [0, 0], [0, 1], [1, 0], [1, 1]])
+    g = BipartiteGraph(2, 2, e)
+    assert g.m == 4
+    assert int(count_butterflies(g).total) == 1
+
+
+def test_device_ranking_matches_host():
+    """The lax.while_loop parallel approx-complement-degeneracy ranking
+    equals the host reference (same round semantics + id tie-break)."""
+    from repro.core.ranking import (
+        approx_complement_degeneracy_order,
+        approx_complement_degeneracy_order_device,
+    )
+
+    for seed in range(3):
+        g = rand_graph(25, 20, 120, seed)
+        host = approx_complement_degeneracy_order(g)
+        dev = approx_complement_degeneracy_order_device(g)
+        assert np.array_equal(host, dev)

@@ -1,0 +1,138 @@
+"""Tip/wing decomposition vs a recompute-from-scratch oracle, plus the
+host Fibonacci heap (paper §5) unit tests."""
+import numpy as np
+import pytest
+
+from repro.core import BipartiteGraph
+from repro.core.fibheap import BucketStructure, FibHeap
+from repro.core.oracle import per_edge_counts, per_vertex_counts
+from repro.core.peel import peel_tips, peel_wings
+
+
+def rand_graph(nu, nv, m, seed):
+    rng = np.random.default_rng(seed)
+    e = np.stack([rng.integers(0, nu, m), rng.integers(0, nv, m)], axis=1)
+    return BipartiteGraph(nu, nv, e)
+
+
+def oracle_tip(g, side):
+    n_side = g.n_u if side == 0 else g.n_v
+    alive = np.ones(n_side, bool)
+    edges = g.edges.copy()
+    tip = np.zeros(n_side, np.int64)
+    kappa = 0
+    while alive.any():
+        sub = edges[np.isin(edges[:, side], np.flatnonzero(alive))]
+        if len(sub) == 0:
+            tip[alive] = kappa
+            break
+        gg = BipartiteGraph(g.n_u, g.n_v, sub)
+        pu, pv = per_vertex_counts(gg)
+        c = pu if side == 0 else pv
+        cur = np.where(alive, c, np.iinfo(np.int64).max)
+        kappa = max(kappa, int(cur.min()))
+        peel = alive & (cur <= kappa)
+        tip[peel] = kappa
+        alive[peel] = False
+        edges = edges[~np.isin(edges[:, side], np.flatnonzero(peel))]
+    return tip
+
+
+def oracle_wing(g):
+    alive = np.ones(g.m, bool)
+    wing = np.zeros(g.m, np.int64)
+    kappa = 0
+    while alive.any():
+        gg = BipartiteGraph(g.n_u, g.n_v, g.edges[alive])
+        pe = np.zeros(g.m, np.int64)
+        pe[np.flatnonzero(alive)] = per_edge_counts(gg)
+        cur = np.where(alive, pe, np.iinfo(np.int64).max)
+        kappa = max(kappa, int(cur.min()))
+        peel = alive & (cur <= kappa)
+        wing[peel] = kappa
+        alive[peel] = False
+    return wing
+
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("side", [0, 1])
+def test_tip_decomposition(seed, side):
+    g = rand_graph(10, 8, 30, seed)
+    got = peel_tips(g, side=side)
+    assert np.array_equal(got.numbers, oracle_tip(g, side))
+    assert got.rounds == len(got.round_sizes)
+
+
+def test_tip_hash_aggregation():
+    g = rand_graph(12, 9, 36, 7)
+    got = peel_tips(g, side=0, aggregation="hash")
+    assert np.array_equal(got.numbers, oracle_tip(g, 0))
+
+
+@pytest.mark.parametrize("seed", range(3))
+@pytest.mark.parametrize("side", [0, 1])
+def test_tip_stored_wedges_variant(seed, side):
+    """WPEEL-V (stored wedges, Alg. 7) agrees with PEEL-V + oracle."""
+    from repro.core.peel import peel_tips_stored
+
+    g = rand_graph(11, 9, 32, seed)
+    a = peel_tips(g, side=side)
+    b = peel_tips_stored(g, side=side)
+    assert np.array_equal(a.numbers, b.numbers)
+    assert np.array_equal(b.numbers, oracle_tip(g, side))
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_wing_decomposition(seed):
+    g = rand_graph(9, 8, 28, seed)
+    got = peel_wings(g)
+    assert np.array_equal(got.numbers, oracle_wing(g))
+
+
+def test_tip_monotone_under_kappa():
+    """Tip numbers are nondecreasing along the peel order."""
+    g = rand_graph(15, 12, 60, 11)
+    r = peel_tips(g, side=0)
+    assert (np.diff([0] + sorted(r.numbers.tolist())) >= 0).all()
+
+
+# -- Fibonacci heap (paper §5) ------------------------------------------
+
+
+def test_fibheap_ops():
+    h = FibHeap()
+    h.batch_insert([(5, "a"), (3, "b"), (9, "c")])
+    assert h.find_min() == 3
+    k, v = h.delete_min()
+    assert (k, v) == (3, "b")
+    h.batch_insert([(1, "d"), (7, "e")])
+    assert h.find_min() == 1
+    h.batch_decrease_key([(9, 0)])
+    assert h.find_min() == 0
+    ks = []
+    while len(h):
+        ks.append(h.delete_min()[0])
+    assert ks == sorted(ks)
+
+
+def test_fibheap_heapsort_random():
+    rng = np.random.default_rng(0)
+    keys = rng.permutation(200)[:50]
+    h = FibHeap()
+    h.batch_insert([(int(k), int(k)) for k in keys])
+    out = []
+    while len(h):
+        out.append(h.delete_min()[0])
+    assert out == sorted(int(k) for k in keys)
+
+
+def test_bucket_structure():
+    counts = {0: 5, 1: 5, 2: 2, 3: 9}
+    b = BucketStructure(counts)
+    k, members = b.pop_min_nonempty()
+    assert k == 2 and members == {2}
+    b.decrease({3: 1})
+    k, members = b.pop_min_nonempty()
+    assert k == 1 and members == {3}
+    k, members = b.pop_min_nonempty()
+    assert k == 5 and members == {0, 1}

@@ -1,0 +1,32 @@
+"""Approximate counting (paper §4.4): estimator sanity + scaling."""
+import numpy as np
+import pytest
+
+from repro.core import BipartiteGraph
+from repro.core.oracle import global_count
+from repro.core.sparsify import approx_count, sparsify_colorful, sparsify_edges
+from repro.data.graphs import powerlaw_bipartite
+
+
+def test_sparsified_graph_is_subgraph():
+    g = powerlaw_bipartite(200, 150, 1200, seed=0)
+    for fn in (sparsify_edges, sparsify_colorful):
+        gs = fn(g, 0.5, seed=1)
+        assert gs.m <= g.m
+        full = {tuple(e) for e in g.edges}
+        assert all(tuple(e) in full for e in gs.edges)
+
+
+@pytest.mark.parametrize("method", ["edge", "colorful"])
+def test_estimator_mean_close(method):
+    g = powerlaw_bipartite(300, 250, 2500, seed=2)
+    exact = global_count(g)
+    ests = [approx_count(g, 0.5, method=method, seed=s) for s in range(12)]
+    err = abs(np.mean(ests) - exact) / max(exact, 1)
+    assert err < 0.35, (np.mean(ests), exact)
+
+
+def test_p_one_is_exact():
+    g = powerlaw_bipartite(100, 80, 500, seed=3)
+    exact = global_count(g)
+    assert int(approx_count(g, 1.0, method="edge", seed=0)) == exact

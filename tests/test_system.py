@@ -1,0 +1,73 @@
+"""End-to-end behaviour tests for the ParButterfly-JAX system."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import BipartiteGraph, count_butterflies
+from repro.core.oracle import global_count
+from repro.core.peel import peel_tips, peel_wings
+from repro.data.graphs import powerlaw_bipartite
+
+
+def test_end_to_end_count_and_peel():
+    """The README quickstart path: generate -> count (all modes) ->
+    peel, with cross-checked invariants."""
+    g = powerlaw_bipartite(400, 300, 2400, seed=0)
+    total = count_butterflies(g, order="degree", aggregation="sort")
+    assert int(total.total) == global_count(g)
+
+    rv = count_butterflies(g, mode="vertex")
+    re_ = count_butterflies(g, mode="edge")
+    assert int(rv.per_u.sum() + rv.per_v.sum()) == 4 * int(total.total)
+    assert int(re_.per_edge.sum()) == 4 * int(total.total)
+
+    tips = peel_tips(g)
+    side_counts = rv.per_u if tips.side == 0 else rv.per_v
+    # a vertex's tip number is at most its butterfly count, at least 0
+    assert (tips.numbers <= side_counts).all()
+    assert tips.rounds >= 1
+
+    wings = peel_wings(g)
+    assert (wings.numbers <= re_.per_edge).all()
+
+
+def test_strategies_agree_on_medium_graph():
+    g = powerlaw_bipartite(1500, 1200, 9000, seed=1)
+    counts = {
+        agg: int(
+            count_butterflies(g, order="degree", aggregation=agg).total
+        )
+        for agg in ("sort", "hash", "batch", "batch_wa")
+    }
+    assert len(set(counts.values())) == 1, counts
+
+
+def test_cache_optimization_same_results():
+    g = powerlaw_bipartite(800, 700, 5000, seed=2)
+    a = count_butterflies(g, order="degree", cache_opt=False)
+    b = count_butterflies(g, order="degree", cache_opt=True)
+    assert int(a.total) == int(b.total)
+
+
+def test_moe_router_diagnostic_integration():
+    """The paper's engine consumed by the LM side (DESIGN.md §4)."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.models.moe import routing_assignment
+
+    cfg = get_config("moonshot-v1-16b-a3b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    bp0 = jax.tree_util.tree_map(lambda a: a[0], params["blocks"])
+    x = jax.random.normal(
+        jax.random.PRNGKey(1), (2, 16, cfg.d_model), jnp.float32
+    ).astype(jnp.bfloat16)
+    toks, experts = routing_assignment(bp0["moe"], x, cfg)
+    g = BipartiteGraph(
+        int(np.asarray(toks).max()) + 1,
+        cfg.n_experts,
+        np.stack([np.asarray(toks), np.asarray(experts)], axis=1),
+    )
+    r = count_butterflies(g, order="side", aggregation="sort")
+    assert int(r.total) >= 0
