@@ -2,26 +2,33 @@
 strategies × rankings × modes, with and without the Wang et al. cache
 optimization (§6.3).
 
-Emits CSV rows: name,us_per_call,derived.
+Emits CSV rows: name,us_per_call,derived. ``write_json`` additionally
+produces the machine-readable ``BENCH_counting.json`` perf baseline
+(graph, engine, mode, wall-time, wedges/s, and the mode="all" single-
+pass speedup) that future PRs compare against.
 """
 from __future__ import annotations
 
 import argparse
+import json
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .common import BENCH_GRAPHS, emit, timeit
 
-from repro.core import count_butterflies
+from repro.core import count_butterflies, count_from_ranked, make_order, preprocess
 from repro.core.oracle import global_count
+from repro.core.wedges import host_wedge_counts
 
 
 AGGS = ("sort", "hash", "histogram", "batch", "batch_wa")
 ORDERS = ("side", "degree", "approx_degree", "approx_complement_degeneracy")
 
 
-def run(graphs, aggs, orders, modes, cache_opt=False, check_small=True):
+def run(graphs, aggs, orders, modes, cache_opt=False, check_small=True,
+        engine="xla"):
     for gname in graphs:
         g = BENCH_GRAPHS[gname]()
         want = None
@@ -32,19 +39,41 @@ def run(graphs, aggs, orders, modes, cache_opt=False, check_small=True):
                 for agg in aggs:
                     if agg == "histogram" and g.n >= 8_000:
                         continue  # dense O(n^2) table: small graphs only
+                    if agg in ("batch", "batch_wa") and (
+                        mode == "all" or engine != "xla"
+                    ):
+                        continue  # batch fuses its own accumulation
+                    if (
+                        engine == "pallas"
+                        and jax.default_backend() != "tpu"
+                        and (agg != "sort" or min(g.wedge_totals()) > 1 << 20)
+                    ):
+                        # off-TPU the kernels run in interpret mode; the
+                        # hash/dense histogram grid (or a huge wedge
+                        # space) would time the interpreter, not the
+                        # engine — same policy as write_json, but
+                        # visible in the CSV rather than silent
+                        emit(
+                            f"count/{gname}/{mode}/{order}/{agg}/{engine}",
+                            -1.0,
+                            "SKIPPED:interpret-mode-budget",
+                        )
+                        continue
                     try:
                         t = timeit(
                             lambda: count_butterflies(
                                 g, order=order, aggregation=agg, mode=mode,
                                 cache_opt=cache_opt,
                                 count_dtype=jnp.int64,
+                                engine=engine,
                             ),
                             repeats=2,
                         )
                     except Exception as e:  # noqa: BLE001
                         emit(
                             f"count/{gname}/{mode}/{order}/{agg}"
-                            f"{'/cacheopt' if cache_opt else ''}",
+                            f"{'/cacheopt' if cache_opt else ''}"
+                            f"{'/' + engine if engine != 'xla' else ''}",
                             -1.0,
                             f"ERROR:{type(e).__name__}",
                         )
@@ -54,6 +83,7 @@ def run(graphs, aggs, orders, modes, cache_opt=False, check_small=True):
                         r = count_butterflies(
                             g, order=order, aggregation=agg, mode="global",
                             cache_opt=cache_opt, count_dtype=jnp.int64,
+                            engine=engine,
                         )
                         derived = (
                             f"count={int(r.total)},"
@@ -61,10 +91,113 @@ def run(graphs, aggs, orders, modes, cache_opt=False, check_small=True):
                         )
                     emit(
                         f"count/{gname}/{mode}/{order}/{agg}"
-                        f"{'/cacheopt' if cache_opt else ''}",
+                        f"{'/cacheopt' if cache_opt else ''}"
+                        f"{'/' + engine if engine != 'xla' else ''}",
                         t * 1e6,
                         derived,
                     )
+
+
+def _time_count(rg, repeats=2, **kw):
+    fn = lambda: jax.block_until_ready(  # noqa: E731
+        count_from_ranked(rg, count_dtype=jnp.int64, **kw)
+    )
+    return timeit(fn, repeats=repeats)
+
+
+def write_json(
+    path: str,
+    graphs=("pl_small",),
+    engines=("xla", "pallas"),
+    aggregations=("sort", "hash"),
+    order: str = "degree",
+    stream_chunk: int = 1 << 16,
+    repeats: int = 2,
+    pallas_interpret_max_wedges: int = 1 << 20,
+) -> dict:
+    """Machine-readable counting baseline: per (graph, engine,
+    aggregation, mode) wall time and wedge throughput on preprocessed
+    device graphs (ranking + host CSR build excluded — the device hot
+    path is what the kernels accelerate), plus derived mode="all"
+    single-pass speedup vs three sequential single-mode runs and a
+    streamed-run overhead row. Off-TPU, the pallas engine is measured in
+    interpret mode and therefore restricted to the sort strategy and a
+    wedge budget (everything skipped is recorded under "skipped" — no
+    silent truncation)."""
+    on_tpu = jax.default_backend() == "tpu"
+    payload: dict = {
+        "schema": "bench_counting/v1",
+        "backend": jax.default_backend(),
+        "order": order,
+        "graphs": {},
+        "runs": [],
+        "derived": {},
+        "skipped": [],
+    }
+    for gname in graphs:
+        g = BENCH_GRAPHS[gname]()
+        rg = preprocess(g, make_order(g, order), order_name=order)
+        wedges = int(host_wedge_counts(rg).sum())
+        payload["graphs"][gname] = {
+            "n_u": g.n_u, "n_v": g.n_v, "m": g.m, "wedges": wedges,
+        }
+        for engine in engines:
+            for aggregation in aggregations:
+                if engine == "pallas" and not on_tpu and (
+                    wedges > pallas_interpret_max_wedges
+                    or aggregation != "sort"
+                ):
+                    # interpret mode emulates the kernel grid; the
+                    # hash-table histogram or a large wedge space would
+                    # time the interpreter, not the hardware
+                    payload["skipped"].append({
+                        "graph": gname,
+                        "engine": engine,
+                        "aggregation": aggregation,
+                        "reason": "interpret-mode budget (wedges="
+                                  f"{wedges}, agg={aggregation})",
+                    })
+                    continue
+                times = {}
+                for mode in ("global", "vertex", "edge", "all"):
+                    t = _time_count(
+                        rg, repeats=repeats, aggregation=aggregation,
+                        mode=mode, engine=engine,
+                    )
+                    times[mode] = t
+                    payload["runs"].append({
+                        "graph": gname,
+                        "engine": engine,
+                        "aggregation": aggregation,
+                        "mode": mode,
+                        "max_chunk": None,
+                        "wall_s": t,
+                        "wedges_per_s": wedges / t if t > 0 else None,
+                    })
+                if wedges > stream_chunk:
+                    t = _time_count(
+                        rg, repeats=repeats, aggregation=aggregation,
+                        mode="all", engine=engine, max_chunk=stream_chunk,
+                    )
+                    payload["runs"].append({
+                        "graph": gname,
+                        "engine": engine,
+                        "aggregation": aggregation,
+                        "mode": "all",
+                        "max_chunk": stream_chunk,
+                        "wall_s": t,
+                        "wedges_per_s": wedges / t if t > 0 else None,
+                    })
+                three = times["global"] + times["vertex"] + times["edge"]
+                payload["derived"][f"{gname}/{engine}/{aggregation}"] = {
+                    "three_mode_wall_s": three,
+                    "all_mode_wall_s": times["all"],
+                    "mode_all_speedup": three / times["all"],
+                }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return payload
 
 
 def main(argv=None):
@@ -74,8 +207,17 @@ def main(argv=None):
     ap.add_argument("--orders", nargs="*", default=list(ORDERS))
     ap.add_argument("--modes", nargs="*", default=["global", "vertex", "edge"])
     ap.add_argument("--cache-opt", action="store_true")
+    ap.add_argument("--engine", default="xla", choices=("xla", "pallas"))
+    ap.add_argument(
+        "--json", default=None, metavar="PATH",
+        help="skip the CSV sweep; write the BENCH_counting.json baseline",
+    )
     args = ap.parse_args(argv)
-    run(args.graphs, args.aggs, args.orders, args.modes, args.cache_opt)
+    if args.json:
+        write_json(args.json, graphs=tuple(args.graphs))
+        return
+    run(args.graphs, args.aggs, args.orders, args.modes, args.cache_opt,
+        engine=args.engine)
 
 
 if __name__ == "__main__":

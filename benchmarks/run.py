@@ -8,6 +8,11 @@ Prints ``name,us_per_call,derived`` CSV (see DESIGN.md §9 index).
   kernels     -> Pallas kernel validation timings
   distributed -> shard_map engine on the host mesh
 
+The counting section additionally writes the machine-readable
+``BENCH_counting.json`` perf baseline (``--json-out``; see
+``bench_counting.write_json``) so future PRs have a trajectory to
+compare against.
+
 ``python -m benchmarks.run [section ...] [--quick]``
 """
 import argparse
@@ -22,6 +27,9 @@ def main() -> None:
     ap.add_argument("sections", nargs="*", default=list(SECTIONS))
     ap.add_argument("--quick", action="store_true",
                     help="small graphs only (CI)")
+    ap.add_argument("--json-out", default="BENCH_counting.json",
+                    help="path for the counting perf baseline "
+                         "(empty string disables)")
     args = ap.parse_args()
     sections = args.sections or list(SECTIONS)
     print("name,us_per_call,derived")
@@ -39,6 +47,16 @@ def main() -> None:
                                ["global", "vertex"])
         bench_counting.run(["pl_small"], bench_counting.AGGS, ["degree"],
                            ["global"], cache_opt=True)
+        # engine="pallas" CSV rows (interpret mode off-TPU): small graph,
+        # sort only — the hash path's one-hot histogram over a ~2W-slot
+        # table is compiled-TPU territory, not interpreter territory
+        bench_counting.run(["pl_small"], ["sort"], ["degree"],
+                           ["global", "all"], engine="pallas")
+        if args.json_out:
+            graphs = ("pl_small",) if args.quick else (
+                "pl_small", "pl_medium")
+            bench_counting.write_json(args.json_out, graphs=graphs)
+            print(f"# wrote {args.json_out}", file=sys.stderr)
     if "ranking" in sections:
         from . import bench_ranking
         bench_ranking.main(["--graphs", "pl_small"] if args.quick else [])

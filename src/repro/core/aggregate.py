@@ -22,6 +22,15 @@ SPMD adaptations of the paper's multicore strategies:
   - **batch**: implemented in ``count.py`` (it fuses aggregation with
     butterfly accumulation, as in the paper, where batching cannot
     re-aggregate).
+
+Engine contract: ``aggregate_hash`` and ``aggregate_dense`` accept
+``engine="xla"|"pallas"``. Under "pallas" the histogram step (the only
+scatter in either strategy) runs through the one-hot MXU kernel
+``repro.kernels.wedge_count.wedge_histogram_pallas`` via the
+``repro.kernels.ops`` wrapper, which picks interpret mode automatically
+off the backend (compiled on TPU, interpreted elsewhere — CI exercises
+the kernels in interpret mode). "xla" keeps the scatter-add. Both
+engines produce identical int32 counts.
 """
 from __future__ import annotations
 
@@ -31,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels import ops as _kops
 from .wedges import Wedges
 
 __all__ = [
@@ -42,6 +52,23 @@ __all__ = [
 ]
 
 _FREE = jnp.int32(np.iinfo(np.int32).max)
+
+
+def _histogram(keys: jax.Array, valid: jax.Array, num_buckets: int, engine: str) -> jax.Array:
+    """Count ``keys`` (masked by ``valid``) into ``num_buckets`` int32 bins
+    on the selected engine. Keys of masked-out entries must already be
+    in-range (callers zero them)."""
+    if engine == "pallas":
+        return _kops.wedge_histogram(
+            keys, valid.astype(jnp.int32), num_buckets, use_pallas=True
+        )
+    if engine != "xla":
+        raise ValueError(f"engine must be xla|pallas, got {engine}")
+    return (
+        jnp.zeros((num_buckets,), jnp.int32)
+        .at[keys]
+        .add(valid.astype(jnp.int32))
+    )
 
 
 class Groups(NamedTuple):
@@ -120,7 +147,12 @@ def _hash_slots(x1: jax.Array, x2: jax.Array, probe: jax.Array, table_bits: int)
     return (slot & jnp.uint32((1 << table_bits) - 1)).astype(jnp.int32)
 
 
-def aggregate_hash(w: Wedges, table_bits: int | None = None, max_probes: int = 32) -> Groups:
+def aggregate_hash(
+    w: Wedges,
+    table_bits: int | None = None,
+    max_probes: int = 32,
+    engine: str = "xla",
+) -> Groups:
     """Cohort-claiming double-hash aggregation.
 
     The table stores, per slot, the *claimant wedge id* (scatter-min is
@@ -164,7 +196,7 @@ def aggregate_hash(w: Wedges, table_bits: int | None = None, max_probes: int = 3
     )
     ok = jnp.all(resolved)
     add = (w.valid & resolved).astype(jnp.int32)
-    counts = jnp.zeros((T,), jnp.int32).at[slot].add(add)
+    counts = _histogram(slot, add, T, engine)
     # counts[slot0=0] may be polluted by invalid wedges' slot 0 default —
     # they add 0, so it is safe.
     d_per_wedge = jnp.where(w.valid, counts[slot], 0)
@@ -178,13 +210,12 @@ def aggregate_hash(w: Wedges, table_bits: int | None = None, max_probes: int = 3
     )
 
 
-def aggregate_dense(w: Wedges, n_pad: int) -> Groups:
+def aggregate_dense(w: Wedges, n_pad: int, engine: str = "xla") -> Groups:
     """Exact dense histogram over the (x1, x2) key space. O(n²) table."""
-    w_cap = w.x1.shape[0]
     key = w.x1.astype(jnp.int32) * jnp.int32(n_pad) + w.x2.astype(jnp.int32)
     key = jnp.where(w.valid, key, 0)
     T = n_pad * n_pad
-    counts = jnp.zeros((T,), jnp.int32).at[key].add(w.valid.astype(jnp.int32))
+    counts = _histogram(key, w.valid, T, engine)
     d_per_wedge = jnp.where(w.valid, counts[key], 0)
     tkey = jnp.arange(T, dtype=jnp.int32)
     gvalid = counts > 0

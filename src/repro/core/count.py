@@ -8,6 +8,43 @@ Given the group multiplicity ``d`` of each endpoint pair (x1, x2):
 Counts are accumulated over *rank-space* vertex ids and undirected edge
 ids, then mapped back to original (U, V) ids by the public API.
 
+Performance engine
+------------------
+``engine="xla"`` (default) keeps every step in pure jnp. ``engine=
+"pallas"`` routes the two kernel-shaped steps through the Pallas TPU
+kernels in ``repro.kernels``:
+
+  - the hash/dense histogram -> ``wedge_histogram_pallas`` (one-hot MXU
+    matmul; see ``aggregate._histogram``),
+  - the d -> (d - 1, C(d, 2)) transform -> ``butterfly_combine_pallas``.
+
+Interpret mode is chosen automatically per backend by
+``kernels/ops._interpret_default()``: compiled on TPU, interpreted
+elsewhere — so CPU CI exercises the same kernel code paths. Exact
+totals are obtained by summing the kernel's per-group C(d, 2) array in
+the count dtype (the kernel's f32 scalar reduction is diagnostic only).
+Pallas-engine caveat: per-group C(d, 2) is computed in int32, which
+only holds for group multiplicities below 2^16; an in-graph guard
+falls back to the exact ``count_dtype`` computation above that (the
+XLA engine always computes in ``count_dtype``).
+
+``mode="all"`` computes global + per-vertex + per-edge counts from ONE
+wedge materialization + ONE aggregation (previously three full engine
+runs — the wedge gather + sort dominates, so this is a ~3x saving for
+callers that want all three views).
+
+``max_chunk`` bounds peak device memory: when the total wedge count
+exceeds it, the flat wedge space is streamed through a ``fori_loop`` of
+fixed-size vertex-aligned chunks (``wedges.plan_wedge_chunks``), each
+re-aggregated locally — groups never span chunk boundaries, so the
+per-chunk contributions add exactly. Peak wedge-buffer size is
+O(chunk_cap) instead of O(W).
+
+The hash strategy's bounded-probe overflow no longer round-trips to the
+host: the fallback decision is folded into the jitted program with
+``lax.cond`` (sort re-aggregation of the *already materialized* wedges
+runs only when the table actually overflows).
+
 Overflow note: butterfly counts on large graphs exceed int32; enable
 x64 (``jax.config.update("jax_enable_x64", True)``) and pass
 ``count_dtype=jnp.int64`` — the benchmarks do this.
@@ -21,6 +58,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels import ops as _kops
 from .aggregate import Groups, aggregate_dense, aggregate_hash, aggregate_sort
 from .graph import BipartiteGraph, RankedGraph, preprocess
 from .ranking import make_order
@@ -29,16 +67,32 @@ from .wedges import (
     Wedges,
     device_graph,
     gather_wedges,
+    greedy_vertex_blocks,
     host_wedge_counts,
+    plan_wedge_chunks,
     slot_wedge_counts,
+    wedge_offsets,
+    wedges_at,
 )
 
-__all__ = ["CountResult", "count_butterflies", "count_from_ranked"]
+__all__ = [
+    "CountResult",
+    "count_butterflies",
+    "count_from_ranked",
+    "ENGINES",
+    "MODES",
+]
+
+ENGINES = ("xla", "pallas")
+MODES = ("global", "vertex", "edge", "all")
 
 
 class CountResult(NamedTuple):
+    """``mode="all"`` populates total, per_u, per_v, and per_edge from a
+    single-pass run; single modes populate only their own field."""
+
     mode: str
-    total: Optional[np.ndarray]  # scalar (global mode)
+    total: Optional[np.ndarray]  # scalar (global / all modes)
     per_u: Optional[np.ndarray]  # (n_u,)
     per_v: Optional[np.ndarray]  # (n_v,)
     per_edge: Optional[np.ndarray]  # (m,) aligned with g.edges rows
@@ -51,40 +105,156 @@ def _choose2(d: jax.Array, dtype) -> jax.Array:
     return dd * (dd - 1) // 2
 
 
+def _group_choose2(groups: Groups, dtype, engine: str) -> jax.Array:
+    """Per-group C(d, 2) endpoint contributions, in ``dtype``."""
+
+    def _exact():
+        return jnp.where(groups.valid, _choose2(groups.d, dtype), 0)
+
+    if engine == "pallas":
+
+        def _kernel():
+            _, c2, _ = _kops.butterfly_combine(
+                groups.d,
+                jnp.ones_like(groups.d),
+                groups.valid.astype(jnp.int32),
+                use_pallas=True,
+            )
+            return c2.astype(dtype)
+
+        # The combine kernel computes d*(d-1)//2 in int32, which wraps
+        # for d >= 2^16 — guard in-graph and fall back to the exact
+        # count_dtype computation instead of returning corrupt counts.
+        d_max = jnp.max(jnp.where(groups.valid, groups.d, 0))
+        return jax.lax.cond(d_max < (1 << 16), _kernel, _exact)
+    return _exact()
+
+
+def _wedge_dm1(w: Wedges, groups: Groups, dtype, engine: str) -> jax.Array:
+    """Per-wedge d - 1 center/edge contributions, in ``dtype``."""
+    d = groups.d_per_wedge
+    if engine == "pallas":
+        dm1, _, _ = _kops.butterfly_combine(
+            d, jnp.zeros_like(d), w.valid.astype(jnp.int32), use_pallas=True
+        )
+        return dm1.astype(dtype)
+    return jnp.where(w.valid & (d > 0), (d - 1).astype(dtype), 0)
+
+
 def _accumulate(
     dg: DeviceGraph,
     w: Wedges,
     groups: Groups,
     mode: str,
     dtype,
+    engine: str = "xla",
 ):
-    """Turn group multiplicities into butterfly counts (Lemma 4.2)."""
-    d = groups.d_per_wedge
-    dm1 = jnp.where(w.valid & (d > 0), (d - 1).astype(dtype), 0)
-    if mode == "global":
+    """Turn group multiplicities into butterfly counts (Lemma 4.2).
+
+    ``mode="all"`` returns the (total, per-vertex, per-edge) triple from
+    the same shared (dm1, C(d, 2)) intermediates — the single-pass path.
+    """
+    if mode not in MODES:
+        raise ValueError(f"mode must be {'|'.join(MODES)}, got {mode}")
+    dm1 = (
+        _wedge_dm1(w, groups, dtype, engine)
+        if mode in ("vertex", "edge", "all")
+        else None
+    )
+    g_add = (
+        _group_choose2(groups, dtype, engine)
+        if mode in ("global", "vertex", "all")
+        else None
+    )
+
+    def _global():
         # Every group of d wedges = C(d,2) butterflies, each counted once
         # thanks to the rank filter.
-        return jnp.sum(jnp.where(groups.valid, _choose2(groups.d, dtype), 0))
-    if mode == "vertex":
+        return jnp.sum(g_add).astype(dtype)
+
+    def _vertex():
         bv = jnp.zeros((dg.n_pad,), dtype)
-        g_add = jnp.where(groups.valid, _choose2(groups.d, dtype), 0)
         bv = bv.at[groups.x1].add(g_add)
         bv = bv.at[groups.x2].add(g_add)
         # centers: w.y holds an out-of-range sentinel for invalid wedges;
         # JAX scatter drops OOB updates.
         bv = bv.at[w.y].add(dm1)
         return bv
-    if mode == "edge":
+
+    def _edge():
         be = jnp.zeros((dg.m,), dtype)
         be = be.at[dg.undirected_id[w.center_slot]].add(dm1)
         be = be.at[dg.undirected_id[w.second_slot]].add(dm1)
         return be
-    raise ValueError(f"mode must be global|vertex|edge, got {mode}")
+
+    if mode == "global":
+        return _global()
+    if mode == "vertex":
+        return _vertex()
+    if mode == "edge":
+        return _edge()
+    # mode == "all": one fused scatter-add over a combined
+    # [vertex | edge] buffer — the five single-mode scatters collapse to
+    # one device pass, which is where the single-pass speedup on top of
+    # the shared gather+aggregation comes from. Integer adds commute, so
+    # the split views are bitwise-identical to the single-mode results.
+    nm = dg.n_pad + dg.m
+    oob = jnp.int32(nm)  # JAX scatter drops out-of-bounds updates
+    idx = jnp.concatenate([
+        jnp.where(w.valid, w.y, oob),
+        jnp.where(w.valid, dg.n_pad + dg.undirected_id[w.center_slot], oob),
+        jnp.where(w.valid, dg.n_pad + dg.undirected_id[w.second_slot], oob),
+        groups.x1,
+        groups.x2,
+    ])
+    upd = jnp.concatenate([dm1, dm1, dm1, g_add, g_add])
+    buf = jnp.zeros((nm,), dtype).at[idx].add(upd)
+    return jnp.sum(g_add).astype(dtype), buf[: dg.n_pad], buf[dg.n_pad :]
+
+
+def _aggregate_and_accumulate(
+    dg: DeviceGraph,
+    w: Wedges,
+    aggregation: str,
+    mode: str,
+    dtype,
+    engine: str,
+    hash_bits: Optional[int] = None,
+):
+    """Aggregate one (chunk of the) wedge stream and accumulate counts.
+
+    For ``aggregation="hash"`` the overflow fallback is in-graph: a
+    ``lax.cond`` re-aggregates the *same* materialized wedges with the
+    sort strategy only when the bounded-probe table failed, instead of
+    the old host-side ``bool(ok)`` sync + full pipeline re-run.
+    """
+    if aggregation == "sort":
+        groups, ws = aggregate_sort(w)
+        return _accumulate(dg, ws, groups, mode, dtype, engine), jnp.array(True)
+    if aggregation == "histogram":
+        groups = aggregate_dense(w, dg.n_pad, engine=engine)
+        return _accumulate(dg, w, groups, mode, dtype, engine), jnp.array(True)
+    if aggregation == "hash":
+        groups = aggregate_hash(w, table_bits=hash_bits, engine=engine)
+
+        def _hash_path(_):
+            return _accumulate(dg, w, groups, mode, dtype, engine)
+
+        def _sort_path(_):
+            g2, ws = aggregate_sort(w)
+            return _accumulate(dg, ws, g2, mode, dtype, engine)
+
+        out = jax.lax.cond(groups.ok, _hash_path, _sort_path, None)
+        return out, groups.ok
+    raise ValueError(f"bad aggregation {aggregation}")
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("w_cap", "aggregation", "mode", "direction", "dtype"),
+    static_argnames=(
+        "w_cap", "aggregation", "mode", "direction", "dtype", "engine",
+        "hash_bits",
+    ),
 )
 def _count_device(
     dg: DeviceGraph,
@@ -94,18 +264,75 @@ def _count_device(
     mode: str,
     direction: str,
     dtype,
+    engine: str = "xla",
+    hash_bits: Optional[int] = None,
 ):
     cnt = slot_wedge_counts(dg, direction)
     w = gather_wedges(dg, cnt, w_cap, direction)
-    if aggregation == "sort":
-        groups, w = aggregate_sort(w)
-    elif aggregation == "hash":
-        groups = aggregate_hash(w)
-    elif aggregation == "histogram":
-        groups = aggregate_dense(w, dg.n_pad)
-    else:
-        raise ValueError(f"bad aggregation {aggregation}")
-    return _accumulate(dg, w, groups, mode, dtype), groups.ok
+    return _aggregate_and_accumulate(
+        dg, w, aggregation, mode, dtype, engine, hash_bits
+    )
+
+
+def _zero_counts(dg: DeviceGraph, mode: str, dtype):
+    by_mode = {
+        "global": lambda: jnp.zeros((), dtype),
+        "vertex": lambda: jnp.zeros((dg.n_pad,), dtype),
+        "edge": lambda: jnp.zeros((dg.m,), dtype),
+    }
+    if mode == "all":
+        return tuple(by_mode[m]() for m in ("global", "vertex", "edge"))
+    return by_mode[mode]()
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "chunk_cap", "aggregation", "mode", "direction", "dtype", "engine",
+        "hash_bits",
+    ),
+)
+def _count_stream_device(
+    dg: DeviceGraph,
+    bounds: jax.Array,  # (n_blocks + 1,) vertex boundaries
+    *,
+    chunk_cap: int,
+    aggregation: str,
+    mode: str,
+    direction: str,
+    dtype,
+    engine: str = "xla",
+    hash_bits: Optional[int] = None,
+):
+    """Chunked wedge streaming: fori_loop over vertex-aligned chunks of
+    the flat wedge space, each re-materialized via ``wedges_at`` into a
+    fixed (chunk_cap,) buffer and aggregated locally. Peak wedge memory
+    is O(chunk_cap) instead of O(W); per-chunk counts add exactly
+    because groups never span an iterating-vertex boundary (see
+    ``plan_wedge_chunks``)."""
+    cnt = slot_wedge_counts(dg, direction)
+    w_off = wedge_offsets(cnt)
+    n_blocks = bounds.shape[0] - 1
+    acc0 = _zero_counts(dg, mode, dtype)
+
+    def body(i, carry):
+        acc, ok = carry
+        v0 = bounds[i]
+        v1 = bounds[i + 1]
+        ws = w_off[dg.offsets[v0]]
+        we = w_off[dg.offsets[v1]]
+        wid = ws + jnp.arange(chunk_cap, dtype=jnp.int32)
+        valid = wid < we
+        w = wedges_at(dg, cnt, w_off, wid, valid, direction)
+        out, ok_i = _aggregate_and_accumulate(
+            dg, w, aggregation, mode, dtype, engine, hash_bits
+        )
+        acc = jax.tree_util.tree_map(
+            lambda a, o: (a + o).astype(a.dtype), acc, out
+        )
+        return acc, ok & ok_i
+
+    return jax.lax.fori_loop(0, n_blocks, body, (acc0, jnp.array(True)))
 
 
 def _batch_bounds(
@@ -115,25 +342,13 @@ def _batch_bounds(
 
     simple: fixed ``rows`` vertices per block. wedge-aware: greedy blocks
     of <= rows vertices capped at ~``target`` wedges (paper §3.1.2).
+    Both delegate to the vectorized cumsum/searchsorted sweep in
+    ``wedges.greedy_vertex_blocks``.
     Returns (boundaries array (n_blocks+1,), max wedges per block).
     """
-    if not wedge_aware:
-        bounds = list(range(0, n, rows)) + [n]
-    else:
-        bounds = [0]
-        acc = 0
-        for v in range(n):
-            if (v - bounds[-1]) >= rows or (
-                acc + wv[v] > target and v > bounds[-1]
-            ):
-                bounds.append(v)
-                acc = 0
-            acc += int(wv[v])
-        bounds.append(n)
-    bounds = np.unique(np.asarray(bounds, dtype=np.int64))
-    woff = np.concatenate([[0], np.cumsum(wv[:n])])
-    per_block = woff[bounds[1:]] - woff[bounds[:-1]]
-    return bounds, int(per_block.max(initial=1))
+    return greedy_vertex_blocks(
+        wv, n, rows=rows, target=target if wedge_aware else None
+    )
 
 
 @functools.partial(
@@ -238,16 +453,41 @@ def count_from_ranked(
     count_dtype=None,
     batch_rows: int = 8,
     batch_target: int = 1 << 14,
+    engine: str = "xla",
+    max_chunk: Optional[int] = None,
+    hash_bits: Optional[int] = None,
 ):
     """Count butterflies on a preprocessed graph. Returns rank-space
-    device arrays (or a scalar for global mode)."""
+    device arrays (a scalar for global mode; a (total, per-vertex,
+    per-edge) triple for ``mode="all"``).
+
+    ``engine="pallas"`` routes the histogram and combine steps through
+    the Pallas kernels (interpret mode off-TPU). ``max_chunk`` enables
+    chunked wedge streaming when the wedge total exceeds it.
+    ``hash_bits`` overrides the hash-table size (testing hook for the
+    in-graph overflow fallback).
+    """
+    if engine not in ENGINES:
+        raise ValueError(f"engine must be {'|'.join(ENGINES)}, got {engine}")
+    if mode not in MODES:
+        raise ValueError(f"mode must be {'|'.join(MODES)}, got {mode}")
     dtype = count_dtype or jnp.int32
     direction = "high" if cache_opt else "low"
     dg = device_graph(rg)
     wv_slots = host_wedge_counts(rg, direction)
     if aggregation in ("batch", "batch_wa"):
+        if mode == "all":
+            raise ValueError(
+                "mode='all' is unsupported for batch aggregations (they "
+                "fuse aggregation with single-mode accumulation); use "
+                "sort/hash/histogram"
+            )
+        if engine != "xla":
+            raise ValueError(
+                "batch aggregations fuse their own accumulation and do "
+                "not route through the Pallas kernels; use engine='xla'"
+            )
         # per-vertex wedge counts (by iterating endpoint)
-        n = rg.n
         src = rg.edge_src[: 2 * rg.m]
         wv = np.zeros(rg.n_pad, dtype=np.int64)
         np.add.at(wv, src, wv_slots[: 2 * rg.m])
@@ -266,25 +506,33 @@ def count_from_ranked(
         )
         return out
     w_total = int(wv_slots.sum())
+    if max_chunk is not None and w_total > int(max_chunk):
+        bounds, chunk_cap = plan_wedge_chunks(
+            rg, direction, int(max_chunk), wv_slots=wv_slots
+        )
+        out, _ok = _count_stream_device(
+            dg,
+            jnp.asarray(bounds, jnp.int32),
+            chunk_cap=chunk_cap,
+            aggregation=aggregation,
+            mode=mode,
+            direction=direction,
+            dtype=dtype,
+            engine=engine,
+            hash_bits=hash_bits,
+        )
+        return out
     w_cap = max(128, ((w_total + 127) // 128) * 128)
-    out, ok = _count_device(
+    out, _ok = _count_device(
         dg,
         w_cap=w_cap,
         aggregation=aggregation,
         mode=mode,
         direction=direction,
         dtype=dtype,
+        engine=engine,
+        hash_bits=hash_bits,
     )
-    if aggregation == "hash" and not bool(ok):
-        # bounded-probe overflow: fall back to sort (documented delta #3)
-        out, _ = _count_device(
-            dg,
-            w_cap=w_cap,
-            aggregation="sort",
-            mode=mode,
-            direction=direction,
-            dtype=dtype,
-        )
     return out
 
 
@@ -297,6 +545,8 @@ def count_butterflies(
     cache_opt: bool = False,
     count_dtype=None,
     batch_rows: int = 8,
+    engine: str = "xla",
+    max_chunk: Optional[int] = None,
 ) -> CountResult:
     """Public entry point: rank -> retrieve -> aggregate -> count."""
     ordering = make_order(g, order)
@@ -308,14 +558,28 @@ def count_butterflies(
         cache_opt=cache_opt,
         count_dtype=count_dtype,
         batch_rows=batch_rows,
+        engine=engine,
+        max_chunk=max_chunk,
     )
+
+    def _scatter_vertex(bv: np.ndarray):
+        per_u = np.zeros(g.n_u, bv.dtype)
+        per_v = np.zeros(g.n_v, bv.dtype)
+        per_u[:] = bv[rg.rank_of_u]
+        per_v[:] = bv[rg.rank_of_v]
+        return per_u, per_v
+
+    if mode == "all":
+        total, bv, be = jax.device_get(out)
+        per_u, per_v = _scatter_vertex(np.asarray(bv))
+        return CountResult(
+            mode, np.asarray(total), per_u, per_v, np.asarray(be),
+            aggregation, order,
+        )
     out = np.asarray(jax.device_get(out))
     if mode == "global":
         return CountResult(mode, out, None, None, None, aggregation, order)
     if mode == "vertex":
-        per_u = np.zeros(g.n_u, out.dtype)
-        per_v = np.zeros(g.n_v, out.dtype)
-        per_u[:] = out[rg.rank_of_u]
-        per_v[:] = out[rg.rank_of_v]
+        per_u, per_v = _scatter_vertex(out)
         return CountResult(mode, None, per_u, per_v, None, aggregation, order)
     return CountResult(mode, None, None, None, out, aggregation, order)

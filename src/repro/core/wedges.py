@@ -42,6 +42,8 @@ __all__ = [
     "wedge_offsets",
     "wedges_at",
     "gather_wedges",
+    "greedy_vertex_blocks",
+    "plan_wedge_chunks",
 ]
 
 
@@ -278,3 +280,70 @@ def gather_wedges(
     wid = jnp.arange(w_cap, dtype=jnp.int32)
     valid = wid < w_off[-1]
     return wedges_at(dg, cnt, w_off, wid, valid, direction)
+
+
+def greedy_vertex_blocks(
+    wv: np.ndarray,
+    n: int,
+    rows: Optional[int] = None,
+    target: Optional[int] = None,
+) -> tuple[np.ndarray, int]:
+    """Greedy vertex-aligned block boundaries over per-vertex wedge counts.
+
+    Each block spans at most ``rows`` vertices (when given) and at most
+    ``target`` wedges (when given; a single vertex whose wedge count
+    already exceeds the target gets a solo block — the block size is
+    then that vertex's wedge count). Host-side, O(n_blocks log n) via
+    cumsum + searchsorted — this replaces the O(n) interpreted-Python
+    per-vertex sweep the batch aggregation used to run per count call.
+
+    Returns (boundaries (n_blocks + 1,) int64, max wedges per block).
+    """
+    wv = np.asarray(wv[:n], dtype=np.int64)
+    woff = np.concatenate([[0], np.cumsum(wv)])
+    bounds = [0]
+    b = 0
+    while b < n:
+        nxt = n
+        if target is not None:
+            # largest v with sum(wv[b:v]) <= target
+            nxt = int(np.searchsorted(woff, woff[b] + target, side="right")) - 1
+        if rows is not None:
+            nxt = min(nxt, b + rows)
+        nxt = min(max(nxt, b + 1), n)
+        bounds.append(nxt)
+        b = nxt
+    bounds = np.asarray(bounds, dtype=np.int64)
+    per_block = woff[bounds[1:]] - woff[bounds[:-1]]
+    return bounds, int(per_block.max(initial=1))
+
+
+def plan_wedge_chunks(
+    rg: RankedGraph,
+    direction: str = "low",
+    max_chunk: int = 1 << 18,
+    pad: int = 128,
+    wv_slots: Optional[np.ndarray] = None,
+) -> tuple[np.ndarray, int]:
+    """Vertex-aligned streaming chunks of the flat wedge space.
+
+    Flat wedge ids follow CSR slot order, so all wedges produced by one
+    iterating endpoint (``edge_src``: x1 under "low", x2 under "high")
+    are contiguous — and every group (x1, x2) lives entirely inside its
+    iterating endpoint's range. Cutting the stream only at vertex
+    boundaries therefore keeps aggregation exact per chunk: no group
+    ever spans two chunks, so per-chunk butterfly contributions add.
+
+    Returns (vertex boundaries (n_blocks + 1,), chunk_cap). ``chunk_cap``
+    is the fixed per-chunk wedge-buffer size (rounded up to ``pad``); it
+    equals ~``max_chunk`` unless a single vertex owns more wedges than
+    the budget, in which case that vertex's count is the floor.
+    """
+    if wv_slots is None:
+        wv_slots = host_wedge_counts(rg, direction)
+    n_real = 2 * rg.m
+    wv = np.zeros(rg.n_pad, dtype=np.int64)
+    np.add.at(wv, rg.edge_src[:n_real].astype(np.int64), wv_slots[:n_real])
+    bounds, chunk = greedy_vertex_blocks(wv, rg.n_pad, target=int(max_chunk))
+    chunk_cap = max(pad, ((chunk + pad - 1) // pad) * pad)
+    return bounds, chunk_cap

@@ -1,3 +1,29 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the butterfly counting/peeling hot paths.
+
+Three kernels cover the paper-identified compute hot spots, each with a
+pure-jnp oracle in ``ref`` and a backend-aware dispatcher in ``ops``:
+
+  - ``wedge_count.wedge_histogram_pallas`` — one-hot MXU histogram
+    (hash/dense wedge aggregation),
+  - ``butterfly_combine.butterfly_combine_pallas`` — d -> (d-1, C(d,2))
+    contribution transform,
+  - ``bucket_min.bucket_min_pallas`` — masked min-reduction (peeling
+    extract-min).
+
+The counting engine (``repro.core.count`` with ``engine="pallas"``)
+consumes them through the ``ops`` wrappers, which pick interpret mode
+automatically off the backend.
+"""
+from .ops import (
+    bucket_min,
+    butterfly_combine,
+    interpret_default,
+    wedge_histogram,
+)
+
+__all__ = [
+    "bucket_min",
+    "butterfly_combine",
+    "interpret_default",
+    "wedge_histogram",
+]

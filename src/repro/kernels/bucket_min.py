@@ -5,6 +5,9 @@ count among alive vertices/edges (the SPMD replacement for the
 Fibonacci heap's delete-min — DESIGN.md §2/§8, paper §5.4.1). Tiled VPU
 reduction with a (1,1) running-min accumulator; Julienne's skip-ahead
 over empty buckets is inherent (the min jumps gaps in one reduction).
+
+Dispatched via ``ops.bucket_min`` with the same backend-aware interpret
+default as the counting kernels (compiled on TPU, interpreted in CI).
 """
 from __future__ import annotations
 

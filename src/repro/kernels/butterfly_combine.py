@@ -10,10 +10,15 @@ plus per-tile partial sums of choose2 (the global count reduction) so
 the host-side total is a cheap O(grid) add. Elementwise VPU work tiled
 through VMEM; the reduction keeps a (1,1) accumulator block.
 
-Precision contract: the per-element outputs are exact int32; the scalar
-total accumulates in f32 and is exact only below 2^24 — exact global
-counts are obtained by summing the returned ``choose2`` array in
-int64/f64 (what the engine does). Tests compare the scalar with rtol.
+Precision contract: the per-element outputs are exact int32 (so group
+multiplicities must stay below 2^16 for C(d,2)); the scalar total
+accumulates in f32 and is exact only below 2^24 — exact global counts
+are obtained by summing the returned ``choose2`` array in int64/f64.
+That is exactly what ``repro.core.count`` does with ``engine="pallas"``:
+it calls this kernel twice per aggregation (per-group for C(d,2)
+endpoint contributions, per-wedge for the d-1 center/edge
+contributions) and reduces ``choose2`` in the count dtype, ignoring the
+f32 scalar. Tests compare the scalar with rtol.
 """
 from __future__ import annotations
 

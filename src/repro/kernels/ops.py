@@ -1,10 +1,16 @@
 """Public jit'd wrappers for the Pallas kernels.
 
-``use_pallas`` selects the kernel path; on non-TPU backends the kernels
-run in interpret mode (set by default from the backend). The pure-jnp
-reference path is always available for fallback and validation.
+``use_pallas`` selects the kernel path; ``interpret=None`` (default)
+resolves per backend via ``_interpret_default()``: compiled Mosaic on
+TPU, interpret mode everywhere else. This is the engine contract relied
+on by ``repro.core.count``/``repro.core.aggregate`` when called with
+``engine="pallas"`` — CPU CI runs the identical kernel code in
+interpret mode, TPU runs it compiled, and both match the pure-jnp
+reference path in ``ref`` bit-for-bit on the integer outputs.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 
@@ -13,30 +19,53 @@ from .bucket_min import bucket_min_pallas
 from .butterfly_combine import butterfly_combine_pallas
 from .wedge_count import wedge_histogram_pallas
 
-__all__ = ["wedge_histogram", "butterfly_combine", "bucket_min"]
+__all__ = [
+    "interpret_default",
+    "wedge_histogram",
+    "butterfly_combine",
+    "bucket_min",
+]
 
 
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def wedge_histogram(keys, valid, num_buckets: int, use_pallas: bool = False):
+# public alias: the counting engine documents this knob by name
+interpret_default = _interpret_default
+
+
+def _resolve(interpret: Optional[bool]) -> bool:
+    return _interpret_default() if interpret is None else interpret
+
+
+def wedge_histogram(
+    keys,
+    valid,
+    num_buckets: int,
+    use_pallas: bool = False,
+    interpret: Optional[bool] = None,
+):
     if use_pallas:
         return wedge_histogram_pallas(
-            keys, valid, num_buckets, interpret=_interpret_default()
+            keys, valid, num_buckets, interpret=_resolve(interpret)
         )
     return _ref.wedge_histogram_ref(keys, valid, num_buckets)
 
 
-def butterfly_combine(d, rep, valid, use_pallas: bool = False):
+def butterfly_combine(
+    d, rep, valid, use_pallas: bool = False, interpret: Optional[bool] = None
+):
     if use_pallas:
         return butterfly_combine_pallas(
-            d, rep, valid, interpret=_interpret_default()
+            d, rep, valid, interpret=_resolve(interpret)
         )
     return _ref.butterfly_combine_ref(d, rep, valid)
 
 
-def bucket_min(counts, alive, use_pallas: bool = False):
+def bucket_min(
+    counts, alive, use_pallas: bool = False, interpret: Optional[bool] = None
+):
     if use_pallas:
-        return bucket_min_pallas(counts, alive, interpret=_interpret_default())
+        return bucket_min_pallas(counts, alive, interpret=_resolve(interpret))
     return _ref.bucket_min_ref(counts, alive)

@@ -1,4 +1,10 @@
-"""Pure-jnp oracles for every Pallas kernel in this package."""
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are also the ``engine="xla"`` fallbacks dispatched by ``ops`` —
+each oracle must stay bit-identical to its kernel's integer outputs
+(the parity tests in tests/test_kernels.py and tests/test_engine.py
+enforce this on every run).
+"""
 from __future__ import annotations
 
 import jax

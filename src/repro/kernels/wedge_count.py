@@ -13,6 +13,13 @@ the hardware-adaptation story of DESIGN.md §2.
 
 Grid: (num_bucket_tiles, num_key_tiles); the key-tile dimension is the
 minormost (sequential) axis so each output tile accumulates in place.
+
+Engine wiring: ``repro.core.aggregate`` routes the hash-slot and dense
+(x1, x2)-key histograms here when the counting engine runs with
+``engine="pallas"`` (via ``ops.wedge_histogram``). Work is
+O(keys x buckets / tile) — the right trade for hash tables
+(buckets ~ 2W) and small dense key spaces; the engine keeps the sort
+strategy scatter-free so it never pays this cost.
 """
 from __future__ import annotations
 
@@ -65,6 +72,8 @@ def wedge_histogram_pallas(
 
     Returns int32 counts of shape (num_buckets,).
     """
+    if num_buckets <= 0:
+        raise ValueError(f"num_buckets must be positive, got {num_buckets}")
     keys = keys.reshape(-1).astype(jnp.int32)
     valid = valid.reshape(-1).astype(jnp.int32)
     n = keys.shape[0]

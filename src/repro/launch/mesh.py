@@ -3,24 +3,47 @@
 A function (not a module constant) so importing this module never
 touches jax device state — the dry-run must set XLA_FLAGS before any
 device initialization.
+
+Version compatibility: explicit Auto ``axis_types`` only exist from
+jax >= 0.5 (``jax.sharding.AxisType``); on older jax every axis is
+implicitly Auto, so the helpers simply omit the kwarg. ``abstract_mesh``
+papers over the ``AbstractMesh`` signature change ((shape, names) vs
+the old tuple-of-(name, size) form) the same way.
 """
 from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_test_mesh"]
+__all__ = [
+    "make_production_mesh",
+    "make_test_mesh",
+    "abstract_mesh",
+    "HAS_AXIS_TYPE",
+]
+
+HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+
+
+def _axis_type_kwargs(n_axes: int) -> dict:
+    if HAS_AXIS_TYPE:
+        return {"axis_types": (jax.sharding.AxisType.Auto,) * n_axes}
+    return {}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips when multi_pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
 
 
 def make_test_mesh(shape=(1,), axes=("data",)):
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
+
+
+def abstract_mesh(shape, axes):
+    """Device-free mesh for mesh-shape-only rule resolution."""
+    if HAS_AXIS_TYPE:
+        return jax.sharding.AbstractMesh(tuple(shape), tuple(axes))
+    # old signature: tuple of (axis_name, axis_size) pairs
+    return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))

@@ -125,7 +125,13 @@ def mamba2_forward(p, x: jax.Array, cfg):
     li = la_cum[:, :, :, None, :]  # (B,nc,i,1,H)
     lj = la_cum[:, :, None, :, :]  # (B,nc,1,j,H)
     mask = jnp.tril(jnp.ones((q, q), jnp.bool_))
-    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(li - lj), 0.0)
+    # mask the exponent, not the result: for j > i the argument is
+    # positive and can overflow exp to inf, and the cotangent of
+    # where(mask, inf, 0) is 0 * inf = NaN (grads through the masked
+    # branch). exp(-inf) = 0 keeps forward identical and grads finite.
+    decay = jnp.exp(
+        jnp.where(mask[None, None, :, :, None], li - lj, -jnp.inf)
+    )
     cb = jnp.einsum("bcin,bcjn->bcij", cmat, bmat)  # (B,nc,q,q)
     w_ij = cb[..., None] * decay * dt[:, :, None, :, :]  # (B,nc,i,j,H)
     y_intra = jnp.einsum(

@@ -57,9 +57,9 @@ class TrainConfig:
 class Trainer:
     def __init__(self, cfg: TrainConfig, mesh: Optional[Mesh] = None):
         self.cfg = cfg
-        self.mesh = mesh or jax.make_mesh(
-            (1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,)
-        )
+        from ..launch.mesh import make_test_mesh
+
+        self.mesh = mesh or make_test_mesh((1,), ("data",))
         arch = cfg.arch
         specs = param_specs(arch)
         self.p_pspecs = param_pspecs(specs, arch, self.mesh)

@@ -1,6 +1,105 @@
 import os
 import sys
+import types
 
 # src-layout import without install; tests must NOT set
 # xla_force_host_platform_device_count (smoke tests see 1 device).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# ---------------------------------------------------------------------------
+# hypothesis shim: the container does not ship `hypothesis`, but the test
+# suite's property tests are valuable, so when the real package is missing we
+# install a minimal deterministic stand-in that replays each property test
+# over fixed-seed random examples. Drop-in subset: @given(**strategies),
+# @settings(max_examples=..., deadline=...), st.integers / st.floats /
+# st.sampled_from. Real hypothesis, when present, is always preferred.
+# ---------------------------------------------------------------------------
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import numpy as _np
+
+    _MAX_EXAMPLES_CAP = int(os.environ.get("REPRO_STUB_MAX_EXAMPLES", "10"))
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    def _integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1))
+        )
+
+    def _floats(min_value, max_value):
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value))
+        )
+
+    def _sampled_from(elements):
+        seq = list(elements)
+        return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+    def _booleans():
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    def _settings(*args, **kwargs):
+        if args and callable(args[0]):  # bare @settings
+            return args[0]
+
+        def deco(fn):
+            fn._stub_settings = kwargs
+            return fn
+
+        return deco
+
+    def _given(**strategies):
+        def deco(fn):
+            # NOTE: no functools.wraps — it would copy __wrapped__ and
+            # make pytest unwrap to the original signature, then demand
+            # fixtures named like the strategy kwargs.
+            def run(*a, **k):
+                cfg = getattr(run, "_stub_settings", {})
+                n = min(int(cfg.get("max_examples", 10)), _MAX_EXAMPLES_CAP)
+                # per-test deterministic seed (crc32: stable across
+                # processes, unlike hash() under PYTHONHASHSEED)
+                import zlib
+
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = _np.random.default_rng(seed)
+                for _ in range(max(n, 1)):
+                    drawn = {
+                        name: s.draw(rng) for name, s in strategies.items()
+                    }
+                    fn(*a, **drawn, **k)
+
+            run.__name__ = fn.__name__
+            run.__qualname__ = fn.__qualname__
+            run.__doc__ = fn.__doc__
+            run.__module__ = fn.__module__
+            return run
+
+        return deco
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.floats = _floats
+    _st.sampled_from = _sampled_from
+    _st.booleans = _booleans
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    _hyp.HealthCheck = types.SimpleNamespace(
+        too_slow=None, data_too_large=None, filter_too_much=None
+    )
+
+    def _assume(condition):
+        if not condition:
+            raise AssertionError("stub hypothesis: assume() falsified")
+
+    _hyp.assume = _assume
+    _hyp.__stub__ = True
+
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

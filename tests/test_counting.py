@@ -1,5 +1,8 @@
 """Counting engine vs the dense oracle: every strategy × ranking × mode,
-plus hypothesis property tests on the system invariants."""
+plus hypothesis property tests on the system invariants (a deterministic
+conftest shim replays these when `hypothesis` is not installed).
+Engine parity (pallas vs xla), mode="all", and streaming live in
+tests/test_engine.py."""
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
@@ -129,6 +132,18 @@ def test_empty_and_degenerate_graphs():
     rv = count_butterflies(g, mode="vertex")
     assert np.array_equal(rv.per_u, [1, 1])
     assert np.array_equal(rv.per_v, [1, 1])
+
+
+def test_mode_all_sum_identities():
+    """Single-pass mode="all" satisfies the same global identities:
+    Σ per-vertex = Σ per-edge = 4·B (4 vertices and 4 edges per
+    butterfly)."""
+    g = rand_graph(13, 9, 40, 2)
+    b = global_count(g)
+    r = count_butterflies(g, mode="all")
+    assert int(r.total) == b
+    assert int(r.per_u.sum()) + int(r.per_v.sum()) == 4 * b
+    assert int(r.per_edge.sum()) == 4 * b
 
 
 def test_duplicate_edges_removed():

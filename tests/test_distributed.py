@@ -7,9 +7,18 @@ import os
 import subprocess
 import sys
 
+import jax
 import pytest
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# The subprocess payloads build meshes with explicit Auto axis_types;
+# on older jax (< 0.5, no jax.sharding.AxisType) they cannot even
+# import, so skip rather than fail the tier-1 run on container jax.
+requires_axis_type = pytest.mark.skipif(
+    not hasattr(jax.sharding, "AxisType"),
+    reason="jax.sharding.AxisType unavailable in this jax version",
+)
 
 
 def run_sub(code: str, devices: int = 8) -> str:
@@ -28,6 +37,7 @@ def run_sub(code: str, devices: int = 8) -> str:
 
 
 @pytest.mark.slow
+@requires_axis_type
 def test_distributed_count_matches_oracle_8dev():
     code = """
 import numpy as np, jax
@@ -53,6 +63,7 @@ print("DIST_OK")
 
 
 @pytest.mark.slow
+@requires_axis_type
 def test_elastic_resume_different_mesh(tmp_path):
     """Train 4 steps on a 2-device mesh, checkpoint, resume on 4 devices:
     loss trajectory continues identically (elastic scaling)."""
@@ -99,6 +110,7 @@ print("B_LOSS", h["loss"][-1])
 
 
 @pytest.mark.slow
+@requires_axis_type
 def test_dryrun_single_cell_multipod():
     """The dry-run lowers + compiles a multi-pod cell on 512 host
     devices (the deliverable-e acceptance path)."""

@@ -20,10 +20,11 @@ from repro.sharding.rules import (
 )
 
 
+from repro.launch.mesh import abstract_mesh, make_test_mesh
+
+
 def _mesh(shape, axes):
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_test_mesh(shape, axes)
 
 
 def test_best_effort_drops_nondivisible():
@@ -51,7 +52,7 @@ def test_param_pspecs_cover_all_archs():
 
 def test_zero_pspecs_adds_dp_axis():
     # rule resolution is mesh-shape-only: AbstractMesh needs no devices
-    m = jax.sharding.AbstractMesh((2, 1), ("data", "model"))
+    m = abstract_mesh((2, 1), ("data", "model"))
     cfg = get_config("qwen2.5-3b").reduced()
     specs = param_specs(cfg)
     zp = zero_pspecs(specs, cfg, m)
@@ -60,7 +61,7 @@ def test_zero_pspecs_adds_dp_axis():
 
 
 def test_batch_pspec_divisibility():
-    m = jax.sharding.AbstractMesh((2, 1), ("data", "model"))
+    m = abstract_mesh((2, 1), ("data", "model"))
     assert batch_pspec(m, 4) == P("data")
     assert batch_pspec(m, 3) == P(None)  # indivisible -> replicate
 
