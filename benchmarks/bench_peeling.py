@@ -1,16 +1,33 @@
 """Paper Table 4 + Figs. 12-13: tip/wing decomposition runtimes across
-wedge-aggregation methods; reports ρ (peeling complexity) per graph."""
+wedge-aggregation methods; reports ρ (peeling complexity) per graph.
+
+``write_json`` additionally produces the machine-readable
+``BENCH_peeling.json`` trajectory comparing the host round loop against
+the device-resident ``engine="device"`` while_loop: per (graph, algo,
+engine, aggregation) wall time, round count ρ, and the number of
+blocking host syncs (``jax.device_get`` calls) the decomposition
+performs — the quantity the device engine exists to eliminate (one
+final fetch vs one per round).
+"""
 from __future__ import annotations
 
 import argparse
+import json
+import time
 
-import jax.numpy as jnp
+import jax
 import numpy as np
 
-from .common import BENCH_GRAPHS, emit, timeit
+from .common import emit, timeit
 
 from repro.core import count_butterflies
-from repro.core.peel import peel_tips, peel_wings
+from repro.core.count import default_count_dtype
+from repro.core.peel import (
+    PEEL_ENGINES,
+    peel_tips,
+    peel_tips_stored,
+    peel_wings,
+)
 from repro.data.graphs import powerlaw_bipartite
 
 PEEL_GRAPHS = {
@@ -18,49 +35,158 @@ PEEL_GRAPHS = {
     "peel_medium": lambda: powerlaw_bipartite(3_000, 2_500, 18_000, seed=8),
 }
 
+# Off-TPU the device round loop runs bucket_min in interpret mode and
+# pays O(frontier cap) redundant lanes per round on a CPU backend —
+# rows beyond this budget (or with the 32-probe in-loop hash table)
+# would time the interpreter, not the engine. Same policy as
+# bench_counting's pallas rows: skip visibly, never silently.
+INTERPRET_FRONTIER_BUDGET = 1 << 18
+
+
+def _device_row_ok(g, side: int, agg: str) -> tuple[bool, str]:
+    if jax.default_backend() == "tpu":
+        return True, ""
+    if agg != "sort":
+        return False, "interpret-mode budget (in-loop hash table)"
+    du, dv = g.degrees()
+    other = du if side == 1 else dv
+    cap2 = int((other.astype(np.int64) ** 2).sum())
+    if cap2 > INTERPRET_FRONTIER_BUDGET:
+        return False, f"interpret-mode budget (frontier cap2={cap2})"
+    return True, ""
+
+
+def _count_host_syncs(fn):
+    """Run ``fn`` counting blocking ``jax.device_get`` calls."""
+    calls = {"n": 0}
+    orig = jax.device_get
+
+    def counted(x):
+        calls["n"] += 1
+        return orig(x)
+
+    jax.device_get = counted
+    try:
+        out = fn()
+    finally:
+        jax.device_get = orig
+    return out, calls["n"]
+
+
+def _time_warm(fn, repeats: int = 1) -> float:
+    """Best-of-N timing with no extra warmup call — callers have
+    already executed ``fn`` once (the sync-count run compiles and warms
+    the jit caches), so each row runs the decomposition twice total."""
+    best = float("inf")
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _tip_inputs(g):
+    rv = count_butterflies(g, mode="vertex", count_dtype=default_count_dtype())
+    side = 0 if g.wedge_totals()[0] <= g.wedge_totals()[1] else 1
+    return side, np.asarray(rv.per_u if side == 0 else rv.per_v)
+
+
+def write_json(path, graphs=("peel_small",), repeats: int = 1) -> dict:
+    """Host-vs-device peeling trajectory (rounds, wall time, host-sync
+    count per decomposition). Wall times exclude the butterfly counting
+    pass (counts are precomputed once per graph — the decomposition loop
+    is what the engines differ on). ``path=None`` builds the payload
+    without writing a file (the CSV emitter in ``main`` reuses it so
+    the sweep runs exactly once)."""
+    payload: dict = {
+        "schema": "bench_peeling/v1",
+        "backend": jax.default_backend(),
+        "graphs": {},
+        "runs": [],
+        "skipped": [],
+    }
+    for gname in graphs:
+        g = PEEL_GRAPHS[gname]()
+        side, counts = _tip_inputs(g)
+        payload["graphs"][gname] = {
+            "n_u": g.n_u, "n_v": g.n_v, "m": g.m, "side": side,
+        }
+        for algo, fn in (
+            ("peel_tips", peel_tips),
+            ("peel_tips_stored", peel_tips_stored),
+        ):
+            for engine in PEEL_ENGINES:
+                for agg in ("sort", "hash"):
+                    if engine == "device":
+                        ok, reason = _device_row_ok(g, side, agg)
+                        if not ok:
+                            payload["skipped"].append({
+                                "graph": gname,
+                                "algo": algo,
+                                "engine": engine,
+                                "aggregation": agg,
+                                "reason": reason,
+                            })
+                            continue
+                    run = lambda: fn(  # noqa: E731
+                        g, counts=counts, side=side, aggregation=agg,
+                        engine=engine,
+                    )
+                    res, syncs = _count_host_syncs(run)  # also warms jit
+                    t = _time_warm(run, repeats=repeats)
+                    payload["runs"].append({
+                        "graph": gname,
+                        "algo": algo,
+                        "engine": engine,
+                        "aggregation": agg,
+                        "rounds": int(res.rounds),
+                        "max_tip": int(res.numbers.max(initial=0)),
+                        "host_syncs": syncs,
+                        "wall_s": t,
+                    })
+    if path:
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+    return payload
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--graphs", nargs="*", default=list(PEEL_GRAPHS))
+    ap.add_argument(
+        "--json", default=None, metavar="PATH",
+        help="also write the BENCH_peeling.json host-vs-device trajectory",
+    )
     args = ap.parse_args(argv)
+    # one sweep: the JSON payload is the source of truth, CSV rows are
+    # derived from it (no second run of the decompositions)
+    payload = write_json(args.json, graphs=tuple(args.graphs))
+    for r in payload["runs"]:
+        emit(
+            f"{r['algo']}/{r['graph']}/{r['aggregation']}/{r['engine']}",
+            r["wall_s"] * 1e6,
+            f"rho_v={r['rounds']},max_tip={r['max_tip']},"
+            f"syncs={r['host_syncs']}",
+        )
+    for s in payload["skipped"]:
+        emit(
+            f"{s['algo']}/{s['graph']}/{s['aggregation']}/{s['engine']}",
+            -1.0,
+            f"SKIPPED:{s['reason']}",
+        )
+    # PEEL-E stays host-driven (kernel extract-min, no engine knob yet)
     for gname in args.graphs:
         g = PEEL_GRAPHS[gname]()
-        rv = count_butterflies(g, mode="vertex", count_dtype=jnp.int64)
-        re_ = count_butterflies(g, mode="edge", count_dtype=jnp.int64)
-        side = 0 if g.wedge_totals()[0] <= g.wedge_totals()[1] else 1
-        counts_v = rv.per_u if side == 0 else rv.per_v
-        for agg in ("sort", "hash"):
-            res = peel_tips(g, counts=counts_v, side=side, aggregation=agg)
-            t = timeit(
-                lambda: peel_tips(
-                    g, counts=counts_v, side=side, aggregation=agg
-                ),
-                repeats=1,
-            )
-            emit(
-                f"peel_tips/{gname}/{agg}",
-                t * 1e6,
-                f"rho_v={res.rounds},max_tip={int(res.numbers.max())}",
-            )
-        # WPEEL-V: stored-wedge work/space trade-off (paper Alg. 7)
-        from repro.core.peel import peel_tips_stored
-
-        res = peel_tips_stored(g, counts=counts_v, side=side)
-        t = timeit(
-            lambda: peel_tips_stored(g, counts=counts_v, side=side),
-            repeats=1,
-        )
-        emit(
-            f"peel_tips_stored/{gname}",
-            t * 1e6,
-            f"rho_v={res.rounds},max_tip={int(res.numbers.max())}",
+        re_ = count_butterflies(
+            g, mode="edge", count_dtype=default_count_dtype()
         )
         res = peel_wings(g, counts=re_.per_edge)
         t = timeit(lambda: peel_wings(g, counts=re_.per_edge), repeats=1)
         emit(
             f"peel_wings/{gname}",
             t * 1e6,
-            f"rho_e={res.rounds},max_wing={int(res.numbers.max())}",
+            f"rho_e={res.rounds},max_wing={int(res.numbers.max(initial=0))}",
         )
 
 

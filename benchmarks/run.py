@@ -10,8 +10,10 @@ Prints ``name,us_per_call,derived`` CSV (see DESIGN.md §9 index).
 
 The counting section additionally writes the machine-readable
 ``BENCH_counting.json`` perf baseline (``--json-out``; see
-``bench_counting.write_json``) so future PRs have a trajectory to
-compare against.
+``bench_counting.write_json``), and the peeling section writes
+``BENCH_peeling.json`` (``--json-out-peeling``; host-vs-device engine
+rounds / wall time / host-sync counts) so future PRs have trajectories
+to compare against.
 
 ``python -m benchmarks.run [section ...] [--quick]``
 """
@@ -29,6 +31,9 @@ def main() -> None:
                     help="small graphs only (CI)")
     ap.add_argument("--json-out", default="BENCH_counting.json",
                     help="path for the counting perf baseline "
+                         "(empty string disables)")
+    ap.add_argument("--json-out-peeling", default="BENCH_peeling.json",
+                    help="path for the peeling host-vs-device trajectory "
                          "(empty string disables)")
     args = ap.parse_args()
     sections = args.sections or list(SECTIONS)
@@ -65,7 +70,12 @@ def main() -> None:
         bench_sparsify.main(["--graphs", "pl_small"] if args.quick else [])
     if "peeling" in sections:
         from . import bench_peeling
-        bench_peeling.main(["--graphs", "peel_small"] if args.quick else [])
+        peel_args = ["--graphs", "peel_small"] if args.quick else []
+        if args.json_out_peeling:
+            peel_args += ["--json", args.json_out_peeling]
+        bench_peeling.main(peel_args)
+        if args.json_out_peeling:
+            print(f"# wrote {args.json_out_peeling}", file=sys.stderr)
     if "kernels" in sections:
         from . import bench_kernels
         bench_kernels.main()

@@ -79,12 +79,24 @@ __all__ = [
     "CountResult",
     "count_butterflies",
     "count_from_ranked",
+    "default_count_dtype",
     "ENGINES",
     "MODES",
 ]
 
 ENGINES = ("xla", "pallas")
 MODES = ("global", "vertex", "edge", "all")
+
+
+def default_count_dtype():
+    """Widest count dtype JAX will actually honor: int64 under x64,
+    int32 otherwise.
+
+    Requesting int64 without x64 enabled does not fail — JAX truncates
+    to int32 and emits a UserWarning per call site. Callers that want
+    "as wide as available" use this instead of hard-coding jnp.int64.
+    """
+    return jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
 
 
 class CountResult(NamedTuple):

@@ -1,14 +1,14 @@
 """Butterfly peeling: tip (vertex) and wing (edge) decomposition
-(paper §4.3, Algs. 5-6).
+(paper §4.3, Algs. 5-7).
 
-Round structure (host-driven, device-aggregated):
+Round structure (both engines):
   κ <- max(κ, min butterfly count among alive)   [bucketing extract-min]
   A <- all alive with count <= κ                 [peel whole bucket]
-  enumerate wedges/butterflies incident to A     [numpy prefix-sum
-                                                  expansion of the CSR —
-                                                  the paper's parallel
+  enumerate wedges/butterflies incident to A     [prefix-sum expansion
+                                                  of the CSR — the
+                                                  paper's parallel
                                                   wedge retrieval]
-  aggregate + subtract contributions             [device: same sort/hash
+  aggregate + subtract contributions             [same sort/hash
                                                   strategies as counting]
 
 The SPMD bucketing replaces the Fibonacci heap (see fibheap.py and
@@ -16,6 +16,44 @@ DESIGN.md §8) with a dense masked min-reduction — the semantics of
 extract-min + batch decrease-key are preserved; Julienne's
 skip-empty-buckets optimization is inherent (min jumps gaps in O(1)
 rounds).
+
+Engines (``engine="host"|"device"`` on ``peel_tips`` /
+``peel_tips_stored``, mirroring the counting ``engine=`` knob):
+
+  - **host** — the original host-driven loop: one blocking
+    ``jax.device_get`` per round for extract-min + bucket selection,
+    numpy prefix-sum wedge expansion, device aggregation/subtraction.
+    O(W) total expansion work across all rounds.
+  - **device** — the whole round loop is one jitted
+    ``jax.lax.while_loop``; nothing leaves the device until the final
+    ``PeelResult`` fetch (a single ``device_get``). Per round the body
+    (1) extract-mins via ``kernels.ops.bucket_min`` (Pallas kernel:
+    compiled Mosaic on TPU, interpret mode in CI — the same
+    backend-aware dispatch as the counting engine), (2) selects the
+    peel bucket with a masked compare, (3) expands the peeled
+    frontier's wedges from a device-resident padded CSR into
+    fixed-capacity buffers (``wedges.expand_ragged`` — the searchsorted
+    analogue of the host prefix-sum expansion; two-level for PEEL-V's
+    2-hop enumeration, single-level for WPEEL-V's stored-wedge CSR),
+    and (4) subtracts contributions with the shared hash/sort
+    aggregation. Frontier capacities are planned host-side from exact
+    totals (``plan_wedge_chunks``-style: Σ side degrees for level 1,
+    Σ deg² for level 2 / the stored-wedge total), optionally bounded by
+    ``max_frontier``; a too-small capacity raises an in-graph overflow
+    flag and the caller transparently re-runs the host path — never a
+    silent truncation. Counts at or beyond INT32_MAX also route to the
+    host engine (``bucket_min`` reduces in int32).
+
+    Per-round work is O(cap) regardless of the actual frontier size —
+    the classic SPMD trade: redundant lanes buy zero host synchronizes
+    per round, which is what dominates peeling wall time on
+    accelerators (Lakhotia et al. 2021).
+
+The hash-aggregation overflow fallback is **in-graph** for both
+engines: ``lax.cond`` re-aggregates the same materialized wedge pairs
+with sort only when the bounded-probe table actually overflowed (the
+fix PR 1 applied to counting — no host ``bool(ok)`` sync, no silently
+wrong counts).
 
 Double-count avoidance (paper §4.3.1/§4.3.2): peeled-set members are
 processed against a virtual rank order (their id); an element of the
@@ -31,12 +69,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels import ops as _kops
 from .aggregate import aggregate_hash, aggregate_sort
 from .graph import BipartiteGraph
-from .count import count_butterflies
-from .wedges import Wedges
+from .count import count_butterflies, default_count_dtype
+from .wedges import Wedges, expand_ragged
 
-__all__ = ["PeelResult", "peel_tips", "peel_tips_stored", "peel_wings"]
+__all__ = [
+    "PeelResult",
+    "peel_tips",
+    "peel_tips_stored",
+    "peel_wings",
+    "PEEL_ENGINES",
+]
+
+PEEL_ENGINES = ("host", "device")
+_I32_MAX = int(np.iinfo(np.int32).max)
 
 
 class PeelResult(NamedTuple):
@@ -65,6 +113,10 @@ def _pow2_pad(x: int, floor: int = 128) -> int:
     return c
 
 
+def _cap128(x: int) -> int:
+    return max(128, ((int(x) + 127) // 128) * 128)
+
+
 def _csr(g: BipartiteGraph):
     """Global-id CSR (U ids then V ids), neighbors ascending."""
     n = g.n
@@ -78,16 +130,58 @@ def _csr(g: BipartiteGraph):
     return off, dst, uid
 
 
-@functools.partial(jax.jit, static_argnames=("aggregation", "n_pad"))
-def _subtract_pair_groups(
+def _side_and_counts(g, counts, side, count_kwargs):
+    """Resolve the peeled side and its per-vertex butterfly counts."""
+    w_u, w_v = g.wedge_totals()
+    if side is None:
+        side = 0 if w_u <= w_v else 1
+    if counts is None:
+        r = count_butterflies(
+            g, mode="vertex", count_dtype=default_count_dtype(),
+            **(count_kwargs or {})
+        )
+        counts = r.per_u if side == 0 else r.per_v
+    return side, np.asarray(counts).copy()
+
+
+def _stored_wedge_csr(g: BipartiteGraph, side: int):
+    """All side-oriented wedges keyed by first endpoint (Alg. 7's W_e):
+    CSR ``(woff, w_u2)`` with ``w_u2[woff[u]:woff[u+1]]`` the second
+    endpoints of u's wedges (u2 != u1). O(Σ deg²_side) space."""
+    off, nbr, _ = _csr(g)
+    n_side = g.n_u if side == 0 else g.n_v
+    base = 0 if side == 0 else g.n_u
+    ids = np.arange(n_side) + base
+    deg1 = off[ids + 1] - off[ids]
+    u1_rep = np.repeat(np.arange(n_side), deg1)
+    v_rep = nbr[_ranges(off[ids], deg1)]
+    deg2 = off[v_rep + 1] - off[v_rep]
+    w_u1 = np.repeat(u1_rep, deg2)
+    w_u2 = nbr[_ranges(off[v_rep], deg2)] - base
+    keep = w_u2 != w_u1
+    w_u1, w_u2 = w_u1[keep], w_u2[keep]
+    # CSR over first endpoint (already sorted by construction)
+    woff = np.zeros(n_side + 1, dtype=np.int64)
+    np.cumsum(np.bincount(w_u1, minlength=n_side), out=woff[1:])
+    return woff, w_u2
+
+
+def _subtract_pair_groups_impl(
     u1: jax.Array,
     u2: jax.Array,
     valid: jax.Array,
     b: jax.Array,
     aggregation: str,
     n_pad: int,
+    hash_bits: Optional[int] = None,
 ):
-    """Aggregate (u1, u2) wedge pairs -> subtract C(d,2) from B[u2]."""
+    """Aggregate (u1, u2) wedge pairs -> subtract C(d,2) from B[u2].
+
+    Hash-table overflow falls back to sort **in-graph** (``lax.cond``
+    over the already-materialized pairs) — callers never see wrong
+    counts and never host-sync on the overflow flag. ``hash_bits``
+    overrides the table size (testing hook, as in counting).
+    """
     sent = jnp.int32(n_pad)
     w = Wedges(
         x1=jnp.where(valid, u1, sent),
@@ -97,13 +191,31 @@ def _subtract_pair_groups(
         second_slot=u1,
         valid=valid,
     )
+
+    def _apply(groups):
+        d = groups.d.astype(b.dtype)
+        dec = jnp.where(groups.valid, d * (d - 1) // 2, 0)
+        return b.at[groups.x2].add(-dec)
+
     if aggregation == "hash":
-        groups = aggregate_hash(w)
-    else:
-        groups, w = aggregate_sort(w)
-    d = groups.d.astype(b.dtype)
-    dec = jnp.where(groups.valid, d * (d - 1) // 2, 0)
-    return b.at[groups.x2].add(-dec), groups.ok
+        groups = aggregate_hash(w, table_bits=hash_bits)
+
+        def _hash_path(_):
+            return _apply(groups)
+
+        def _sort_path(_):
+            g2, _ = aggregate_sort(w)
+            return _apply(g2)
+
+        return jax.lax.cond(groups.ok, _hash_path, _sort_path, None)
+    groups, _ = aggregate_sort(w)
+    return _apply(groups)
+
+
+_subtract_pair_groups = jax.jit(
+    _subtract_pair_groups_impl,
+    static_argnames=("aggregation", "n_pad", "hash_bits"),
+)
 
 
 @jax.jit
@@ -114,32 +226,220 @@ def _subtract_triples(idx: jax.Array, valid: jax.Array, b: jax.Array):
     )
 
 
+# ---------------------------------------------------------------------------
+# Device-resident tip engine: the whole round loop as one lax.while_loop
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("aggregation", "cap1", "cap2", "n_side", "stored",
+                     "hash_bits"),
+)
+def _peel_tips_device(
+    off: jax.Array,  # stored: (n_side+1,) wedge CSR | else (n+1,) graph CSR
+    nbr: jax.Array,  # stored: (W,) second endpoints | else (2m,) neighbors
+    base: jax.Array,  # () int32 global-id offset of the peeled side
+    b0: jax.Array,  # (n_side,) butterfly counts of the peeled side
+    *,
+    aggregation: str,
+    cap1: int,  # level-1 frontier buffer (2-hop engine only)
+    cap2: int,  # wedge-pair buffer
+    n_side: int,
+    stored: bool,
+    hash_bits: Optional[int] = None,
+):
+    """Jitted device round loop (PEEL-V / WPEEL-V). Returns the final
+    carry; the wrapper fetches it with a single ``device_get``.
+
+    The body never touches the host: extract-min is the ``bucket_min``
+    kernel, bucket selection a masked compare, frontier expansion a
+    fixed-capacity ``expand_ragged``, and the subtraction the shared
+    hash/sort aggregation (hash overflow handled in-graph). ``overflow``
+    latches when a round's frontier exceeds the planned capacity; the
+    loop then exits immediately and the caller re-runs the host path.
+    """
+    dtype = b0.dtype
+
+    def cond(st):
+        _, alive, _, _, _, _, overflow = st
+        return jnp.any(alive) & ~overflow
+
+    def body(st):
+        b, alive, tip, kappa, rounds, sizes, overflow = st
+        mn = _kops.bucket_min(b, alive, use_pallas=True)
+        kappa = jnp.maximum(kappa, mn)
+        peel = alive & (b <= kappa.astype(dtype))
+        tip = jnp.where(peel, kappa.astype(dtype), tip)
+        alive = alive & ~peel
+        # explicit dtype: under x64 jnp.sum promotes to int64 and the
+        # scatter into the int32 sizes buffer would downcast-warn
+        sizes = sizes.at[rounds].set(jnp.sum(peel, dtype=jnp.int32))
+        rounds = rounds + 1
+
+        def _expand_and_subtract(args):
+            b, alive, peel = args
+            if stored:
+                # WPEEL-V: one stored-wedge CSR lookup per peeled vertex
+                lens = jnp.where(peel, off[1:] - off[:-1], 0)
+                u1, pos, valid, total = expand_ragged(off[:-1], lens, cap2)
+                u2 = nbr[jnp.clip(pos, 0, nbr.shape[0] - 1)]
+                ovf = total > cap2
+            else:
+                # PEEL-V: 2-hop re-enumeration (GET-V-WEDGES). Level 1:
+                # peeled u1 -> centers v; level 2: v -> endpoints u2.
+                ids = jnp.arange(n_side, dtype=jnp.int32) + base
+                lens1 = jnp.where(peel, off[ids + 1] - off[ids], 0)
+                seg1, pos1, valid1, tot1 = expand_ragged(
+                    off[ids], lens1, cap1
+                )
+                v = nbr[jnp.clip(pos1, 0, nbr.shape[0] - 1)]
+                v = jnp.clip(v, 0, off.shape[0] - 2)
+                lens2 = jnp.where(valid1, off[v + 1] - off[v], 0)
+                seg2, pos2, valid, tot2 = expand_ragged(off[v], lens2, cap2)
+                u1 = seg1[seg2]
+                u2 = nbr[jnp.clip(pos2, 0, nbr.shape[0] - 1)] - base
+                ovf = (tot1 > cap1) | (tot2 > cap2)
+            # keep wedges whose second endpoint is still alive
+            u2c = jnp.clip(u2, 0, n_side - 1)
+            valid = valid & (u2 >= 0) & (u2 < n_side) & alive[u2c]
+            b_new = _subtract_pair_groups_impl(
+                u1.astype(jnp.int32),
+                u2c.astype(jnp.int32),
+                valid,
+                b,
+                aggregation,
+                n_side,
+                hash_bits,
+            )
+            return jnp.where(ovf, b, b_new), ovf
+
+        def _last_round(args):
+            # nothing left alive: the subtract would be a masked no-op
+            # (the host loops' `if not alive.any(): break`)
+            return args[0], jnp.array(False)
+
+        b, ovf_i = jax.lax.cond(
+            jnp.any(alive), _expand_and_subtract, _last_round,
+            (b, alive, peel),
+        )
+        overflow = overflow | ovf_i
+        return b, alive, tip, kappa, rounds, sizes, overflow
+
+    st0 = (
+        b0,
+        jnp.ones((n_side,), jnp.bool_),
+        jnp.zeros((n_side,), dtype),
+        jnp.int32(0),
+        jnp.int32(0),
+        jnp.zeros((n_side,), jnp.int32),
+        jnp.array(False),
+    )
+    return jax.lax.while_loop(cond, body, st0)
+
+
+def _peel_tips_device_run(
+    g: BipartiteGraph,
+    counts: np.ndarray,
+    side: int,
+    aggregation: str,
+    stored: bool,
+    max_frontier: Optional[int],
+    hash_bits: Optional[int],
+    csr,
+) -> Optional[PeelResult]:
+    """Capacity-plan, run the device loop, fetch once. Returns None when
+    the device engine does not apply (empty side, counts beyond int32,
+    totals beyond int32 indexing) or the frontier overflowed its
+    ``max_frontier``-bounded buffers — callers fall back to host.
+    ``csr`` is the caller-built ``(woff, w_u2)`` wedge CSR (stored) or
+    ``(off, nbr)`` graph CSR, shared with the host loop so a fallback
+    never rebuilds the dominant preprocessing."""
+    n_side = g.n_u if side == 0 else g.n_v
+    base = 0 if side == 0 else g.n_u
+    if n_side == 0 or int(counts.max(initial=0)) >= _I32_MAX:
+        return None
+    budget = _I32_MAX if max_frontier is None else int(max_frontier)
+    if stored:
+        woff, w_u2 = csr
+        w_total = int(woff[-1])
+        if w_total >= _I32_MAX:
+            return None
+        cap1 = 128  # unused by the stored loop
+        cap2 = _cap128(min(w_total, budget))
+        off_d = jnp.asarray(woff, jnp.int32)
+        nbr_d = jnp.asarray(w_u2 if w_total else np.zeros(1), jnp.int32)
+    else:
+        off, nbr = csr
+        deg = np.diff(off)
+        lvl1 = int(deg[base : base + n_side].sum())  # == m
+        other = np.concatenate([deg[:base], deg[base + n_side :]])
+        lvl2 = int((other.astype(np.int64) ** 2).sum())
+        if lvl2 >= _I32_MAX or 2 * g.m >= _I32_MAX:
+            return None
+        cap1 = _cap128(min(lvl1, budget))
+        cap2 = _cap128(min(lvl2, budget))
+        off_d = jnp.asarray(off, jnp.int32)
+        nbr_d = jnp.asarray(nbr if nbr.size else np.zeros(1), jnp.int32)
+    out = _peel_tips_device(
+        off_d,
+        nbr_d,
+        jnp.int32(base),
+        jnp.asarray(counts),
+        aggregation=aggregation,
+        cap1=cap1,
+        cap2=cap2,
+        n_side=n_side,
+        stored=stored,
+        hash_bits=hash_bits,
+    )
+    # the single host sync of the whole decomposition
+    _, _, tip, _, rounds, sizes, overflow = jax.device_get(out)
+    if bool(overflow):
+        return None
+    rounds = int(rounds)
+    return PeelResult(
+        tip, side, rounds, sizes[:rounds].astype(np.int64)
+    )
+
+
+def _check_engine(engine: str) -> None:
+    if engine not in PEEL_ENGINES:
+        raise ValueError(
+            f"engine must be {'|'.join(PEEL_ENGINES)}, got {engine}"
+        )
+
+
 def peel_tips(
     g: BipartiteGraph,
     counts: Optional[np.ndarray] = None,
     side: Optional[int] = None,
     aggregation: str = "sort",
     count_kwargs: Optional[dict] = None,
+    engine: str = "host",
+    max_frontier: Optional[int] = None,
+    hash_bits: Optional[int] = None,
 ) -> PeelResult:
     """Tip decomposition (PEEL-V, Alg. 5).
 
     Peels the bipartition producing fewer wedges-as-endpoints unless
     ``side`` is forced. ``counts`` are per-vertex butterfly counts for
-    the peeled side (computed if omitted).
+    the peeled side (computed if omitted). ``engine="device"`` runs the
+    whole round loop on device (see module docstring); ``max_frontier``
+    bounds its per-round buffers (overflow falls back to host);
+    ``hash_bits`` overrides the hash-aggregation table size (testing
+    hook for the in-graph overflow fallback).
     """
-    w_u, w_v = g.wedge_totals()
-    if side is None:
-        side = 0 if w_u <= w_v else 1
-    if counts is None:
-        r = count_butterflies(
-            g, mode="vertex", count_dtype=jnp.int64
-            if jax.config.jax_enable_x64
-            else jnp.int32, **(count_kwargs or {})
-        )
-        counts = r.per_u if side == 0 else r.per_v
-    counts = np.asarray(counts).copy()
+    _check_engine(engine)
+    side, counts = _side_and_counts(g, counts, side, count_kwargs)
     off, nbr, _ = _csr(g)
-    n = g.n
+    if engine == "device":
+        res = _peel_tips_device_run(
+            g, counts, side, aggregation, False, max_frontier, hash_bits,
+            (off, nbr),
+        )
+        if res is not None:
+            return res
     n_side = g.n_u if side == 0 else g.n_v
     base = 0 if side == 0 else g.n_u  # global id offset of peeled side
 
@@ -180,24 +480,15 @@ def peel_tips(
         u2p[: u2_w.size] = u2_w
         valid = np.zeros(cap, bool)
         valid[: u1_w.size] = True
-        b_new, ok = _subtract_pair_groups(
+        b_dev = _subtract_pair_groups(
             jnp.asarray(u1p),
             jnp.asarray(u2p),
             jnp.asarray(valid),
             b_dev,
-            aggregation,
-            n_side,
+            aggregation=aggregation,
+            n_pad=n_side,
+            hash_bits=hash_bits,
         )
-        if aggregation == "hash" and not bool(ok):
-            b_new, _ = _subtract_pair_groups(
-                jnp.asarray(u1p),
-                jnp.asarray(u2p),
-                jnp.asarray(valid),
-                b_dev,
-                "sort",
-                n_side,
-            )
-        b_dev = b_new
     return PeelResult(tip, side, rounds, np.asarray(sizes))
 
 
@@ -207,6 +498,9 @@ def peel_tips_stored(
     side: Optional[int] = None,
     aggregation: str = "sort",
     count_kwargs: Optional[dict] = None,
+    engine: str = "host",
+    max_frontier: Optional[int] = None,
+    hash_bits: Optional[int] = None,
 ) -> PeelResult:
     """WPEEL-V (paper Alg. 7): store all side-oriented wedges upfront,
     then per round subtract via pure index lookups — O(b)-style work,
@@ -214,36 +508,20 @@ def peel_tips_stored(
     trade-off). One orientation suffices: every butterfly on the peeled
     side U is accounted by its U-endpoint wedge group (Lemma 4.2);
     the paper's W_c store handles the same butterflies from the other
-    orientation of its ranked wedge set.
+    orientation of its ranked wedge set. ``engine``/``max_frontier``/
+    ``hash_bits`` as in :func:`peel_tips`.
     """
-    w_u, w_v = g.wedge_totals()
-    if side is None:
-        side = 0 if w_u <= w_v else 1
-    if counts is None:
-        r = count_butterflies(
-            g, mode="vertex", count_dtype=jnp.int64
-            if jax.config.jax_enable_x64
-            else jnp.int32, **(count_kwargs or {})
-        )
-        counts = r.per_u if side == 0 else r.per_v
-    counts = np.asarray(counts).copy()
-    off, nbr, _ = _csr(g)
+    _check_engine(engine)
+    side, counts = _side_and_counts(g, counts, side, count_kwargs)
     n_side = g.n_u if side == 0 else g.n_v
-    base = 0 if side == 0 else g.n_u
-
-    # ---- store all wedges keyed by their first endpoint (W_e) ----
-    ids = np.arange(n_side) + base
-    deg1 = off[ids + 1] - off[ids]
-    u1_rep = np.repeat(np.arange(n_side), deg1)
-    v_rep = nbr[_ranges(off[ids], deg1)]
-    deg2 = off[v_rep + 1] - off[v_rep]
-    w_u1 = np.repeat(u1_rep, deg2)
-    w_u2 = nbr[_ranges(off[v_rep], deg2)] - base
-    keep = w_u2 != w_u1
-    w_u1, w_u2 = w_u1[keep], w_u2[keep]
-    # CSR over first endpoint (already sorted by construction)
-    woff = np.zeros(n_side + 1, dtype=np.int64)
-    np.cumsum(np.bincount(w_u1, minlength=n_side), out=woff[1:])
+    woff, w_u2 = _stored_wedge_csr(g, side)
+    if engine == "device":
+        res = _peel_tips_device_run(
+            g, counts, side, aggregation, True, max_frontier, hash_bits,
+            (woff, w_u2),
+        )
+        if res is not None:
+            return res
 
     alive = np.ones(n_side, dtype=bool)
     tip = np.zeros(n_side, dtype=counts.dtype)
@@ -278,13 +556,14 @@ def peel_tips_stored(
         u2p[: u2_w.size] = u2_w
         valid = np.zeros(cap, bool)
         valid[: u1_w.size] = True
-        b_dev, _ = _subtract_pair_groups(
+        b_dev = _subtract_pair_groups(
             jnp.asarray(u1p),
             jnp.asarray(u2p),
             jnp.asarray(valid),
             b_dev,
-            aggregation,
-            n_side,
+            aggregation=aggregation,
+            n_pad=n_side,
+            hash_bits=hash_bits,
         )
     return PeelResult(tip, side, rounds, np.asarray(sizes))
 
@@ -299,13 +578,14 @@ def peel_wings(
     Butterflies incident to peeled edges are located individually via
     min-degree-side intersections (binary search membership on the
     lexsorted directed edge array), matching the paper's
-    Σ min(deg(u), deg(u')) work bound.
+    Σ min(deg(u), deg(u')) work bound. The loop stays host-driven, but
+    the per-round extract-min runs through the ``bucket_min`` kernel
+    (``kernels.ops``) whenever the wing counts fit int32.
     """
     if counts is None:
         r = count_butterflies(
-            g, mode="edge", count_dtype=jnp.int64
-            if jax.config.jax_enable_x64
-            else jnp.int32, **(count_kwargs or {})
+            g, mode="edge", count_dtype=default_count_dtype(),
+            **(count_kwargs or {})
         )
         counts = r.per_edge
     counts = np.asarray(counts).copy()
@@ -320,6 +600,15 @@ def peel_wings(
     eu = g.edges[:, 0].astype(np.int64)
     ev = (g.edges[:, 1] + g.n_u).astype(np.int64)
 
+    # bucket_min reduces in int32; counts at/above INT32_MAX would alias
+    # its empty sentinel, so such graphs keep the host min. Off-TPU the
+    # dispatcher would interpret the kernel tile-by-tile (~15x the cost
+    # of the reduction itself per round), so only the compiled backend
+    # takes the Pallas path — elsewhere ops.bucket_min serves its XLA
+    # reference, preserving the same extract-min contract.
+    kernel_min = int(counts.max(initial=0)) < _I32_MAX
+    pallas_min = not _kops.interpret_default()
+
     alive = np.ones(m, dtype=bool)
     wing = np.zeros(m, dtype=counts.dtype)
     b_dev = jnp.asarray(counts)
@@ -327,10 +616,22 @@ def peel_wings(
     rounds = 0
     sizes = []
     while alive.any():
-        cnt_host = np.asarray(jax.device_get(b_dev))
-        cur = np.where(alive, cnt_host, np.iinfo(cnt_host.dtype).max)
-        kappa = max(kappa, int(cur.min()))
-        a_ids = np.flatnonzero(alive & (cur <= kappa))
+        if kernel_min:
+            # one blocking sync per round: the kernel min and the count
+            # buffer come back in a single device_get
+            mn_dev = _kops.bucket_min(
+                b_dev, jnp.asarray(alive), use_pallas=pallas_min
+            )
+            mn_np, cnt_host = jax.device_get((mn_dev, b_dev))
+            cnt_host = np.asarray(cnt_host)
+            mn = int(mn_np)
+        else:
+            cnt_host = np.asarray(jax.device_get(b_dev))
+            mn = int(
+                np.where(alive, cnt_host, np.iinfo(cnt_host.dtype).max).min()
+            )
+        kappa = max(kappa, mn)
+        a_ids = np.flatnonzero(alive & (cnt_host <= kappa))
         wing[a_ids] = kappa
         in_a = np.zeros(m, dtype=bool)
         in_a[a_ids] = True

@@ -9,9 +9,12 @@ first) to rank n-1. All rankings here preserve the paper's work bounds:
   - complement_degeneracy /
     approx_complement_degeneracy: O(αm) wedges (Thms 4.12, 4.13)
 
-The host implementations are numpy; ``approx_complement_degeneracy`` also
-has a device-side bucketed implementation in ``distributed.py``. Ranking
-cost is O(m α(m)) or better and is amortized against O(αm) counting work.
+The host implementations are numpy; ``approx_complement_degeneracy``
+also has a device-side bucketed ``lax.while_loop`` implementation,
+registered as ``"approx_complement_degeneracy_device"`` so
+``make_order`` / ``count_butterflies(order=...)`` can select it (it
+produces the identical ordering to the host variant). Ranking cost is
+O(m α(m)) or better and is amortized against O(αm) counting work.
 """
 from __future__ import annotations
 
@@ -185,6 +188,8 @@ RANKINGS: Dict[str, Callable[[BipartiteGraph], np.ndarray]] = {
     "approx_degree": approx_degree_order,
     "complement_degeneracy": complement_degeneracy_order,
     "approx_complement_degeneracy": approx_complement_degeneracy_order,
+    "approx_complement_degeneracy_device":
+        approx_complement_degeneracy_order_device,
 }
 
 
@@ -213,16 +218,14 @@ def wedges_processed(g: BipartiteGraph, order: np.ndarray) -> int:
     src, dst = src[perm], dst[perm]
     offsets = np.zeros(n + 1, dtype=np.int64)
     np.cumsum(np.bincount(src, minlength=n), out=offsets[1:])
-    total = 0
     # Vectorized: for each directed edge e=(x1,y) with y > x1, count
-    # neighbors of y greater than x1 via searchsorted on y's sorted list.
+    # neighbors of y greater than x1. The CSR is globally lexsorted by
+    # (src, dst), so every per-y upper_bound is one batched searchsorted
+    # on the composite key src * n + dst (the `_batch_bounds`-style
+    # cumsum/searchsorted trick — no per-edge Python loop).
     mask = dst > src
     ys = dst[mask]
     x1s = src[mask]
-    # neighbors array is `dst`; per-y slices are sorted ascending.
-    starts = offsets[ys]
-    ends = offsets[ys + 1]
-    # binary search within each slice
-    for x1, s, e in zip(x1s, starts, ends):
-        total += int(e - s - np.searchsorted(dst[s:e], x1, side="right"))
-    return total
+    comp = src * np.int64(n) + dst  # ascending by construction
+    ub = np.searchsorted(comp, ys * np.int64(n) + x1s, side="right")
+    return int((offsets[ys + 1] - ub).sum())

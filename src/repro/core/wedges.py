@@ -42,6 +42,7 @@ __all__ = [
     "wedge_offsets",
     "wedges_at",
     "gather_wedges",
+    "expand_ragged",
     "greedy_vertex_blocks",
     "plan_wedge_chunks",
 ]
@@ -280,6 +281,35 @@ def gather_wedges(
     wid = jnp.arange(w_cap, dtype=jnp.int32)
     valid = wid < w_off[-1]
     return wedges_at(dg, cnt, w_off, wid, valid, direction)
+
+
+def expand_ragged(
+    starts: jax.Array, lens: jax.Array, cap: int
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Flatten ragged ranges ``[starts[i], starts[i] + lens[i])`` into a
+    fixed ``(cap,)`` buffer — the device analogue of the host prefix-sum
+    expansion used by the peeling round loop (``peel._ranges``).
+
+    Flat slot ``k`` belongs to segment ``seg[k]`` (via searchsorted on
+    the exclusive prefix sum of ``lens``) at absolute position ``pos[k]``
+    inside that segment's range. ``valid`` masks slots beyond the true
+    total; ``total`` is returned so callers can detect capacity overflow
+    (``total > cap``) in-graph instead of silently truncating.
+
+    Returns ``(seg, pos, valid, total)`` — all int32 except bool valid.
+    """
+    lens = lens.astype(jnp.int32)
+    roff = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(lens, dtype=jnp.int32)]
+    )
+    total = roff[-1]
+    k = jnp.arange(cap, dtype=jnp.int32)
+    valid = k < total
+    kc = jnp.minimum(k, jnp.maximum(total - 1, 0))
+    seg = jnp.searchsorted(roff, kc, side="right").astype(jnp.int32) - 1
+    seg = jnp.clip(seg, 0, lens.shape[0] - 1)
+    pos = starts[seg] + kc - roff[seg]
+    return seg, pos, valid, total
 
 
 def greedy_vertex_blocks(

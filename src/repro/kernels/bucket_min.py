@@ -8,6 +8,11 @@ over empty buckets is inherent (the min jumps gaps in one reduction).
 
 Dispatched via ``ops.bucket_min`` with the same backend-aware interpret
 default as the counting kernels (compiled on TPU, interpreted in CI).
+This is the extract-min of the device-resident peeling engine
+(``core.peel`` ``engine="device"``): one call per ``lax.while_loop``
+round, no host round-trip. Counts wider than int32 are clamped to
+INT32_MAX before the reduction (min semantics preserved whenever the
+true minimum fits int32 — peeling guards the >= 2^31 case host-side).
 """
 from __future__ import annotations
 
@@ -41,9 +46,15 @@ def _min_kernel(counts_ref, alive_ref, out_ref):
 def bucket_min_pallas(
     counts: jax.Array, alive: jax.Array, interpret: bool = True
 ) -> jax.Array:
-    """Min of ``counts`` where ``alive``; INT32_MAX if none. () int32."""
+    """Min of ``counts`` where ``alive``; INT32_MAX if none. () int32.
+
+    Wider-than-int32 counts are clamped (not wrapped) to INT32_MAX so
+    the masked min stays correct while the true minimum fits int32.
+    """
     n = counts.shape[0]
     n_pad = ((n + TN - 1) // TN) * TN
+    if counts.dtype.itemsize > 4:
+        counts = jnp.minimum(counts, jnp.asarray(_INF, counts.dtype))
     cp = jnp.pad(counts.astype(jnp.int32), (0, n_pad - n))
     ap = jnp.pad(alive.astype(jnp.int32), (0, n_pad - n))
     grid = (n_pad // TN,)

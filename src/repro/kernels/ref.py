@@ -38,6 +38,8 @@ def butterfly_combine_ref(d: jax.Array, rep: jax.Array, valid: jax.Array):
 
 def bucket_min_ref(counts: jax.Array, alive: jax.Array) -> jax.Array:
     inf = jnp.int32(np.iinfo(np.int32).max)
+    if counts.dtype.itemsize > 4:  # clamp, don't wrap (kernel contract)
+        counts = jnp.minimum(counts, jnp.asarray(inf, counts.dtype))
     return jnp.min(
         jnp.where(alive.astype(jnp.int32) > 0, counts.astype(jnp.int32), inf)
     )

@@ -155,14 +155,43 @@ def test_duplicate_edges_removed():
 
 def test_device_ranking_matches_host():
     """The lax.while_loop parallel approx-complement-degeneracy ranking
-    equals the host reference (same round semantics + id tie-break)."""
-    from repro.core.ranking import (
-        approx_complement_degeneracy_order,
-        approx_complement_degeneracy_order_device,
-    )
-
+    equals the host reference (same round semantics + id tie-break),
+    and is reachable through the public RANKINGS registry / make_order
+    (and hence count_butterflies(order=...))."""
+    assert "approx_complement_degeneracy_device" in RANKINGS
     for seed in range(3):
         g = rand_graph(25, 20, 120, seed)
-        host = approx_complement_degeneracy_order(g)
-        dev = approx_complement_degeneracy_order_device(g)
+        host = make_order(g, "approx_complement_degeneracy")
+        dev = make_order(g, "approx_complement_degeneracy_device")
         assert np.array_equal(host, dev)
+    g = rand_graph(14, 11, 45, 0)
+    r = count_butterflies(g, order="approx_complement_degeneracy_device")
+    assert int(r.total) == global_count(g)
+
+
+def test_wedges_processed_vectorized_matches_loop_reference():
+    """The batched-searchsorted wedges_processed equals the per-edge
+    binary-search definition (paper Table 3 semantics)."""
+
+    def reference(g, order):
+        n = g.n
+        rank = np.empty(n, dtype=np.int64)
+        rank[np.asarray(order)] = np.arange(n)
+        src = rank[np.concatenate([g.edges[:, 0], g.n_u + g.edges[:, 1]])]
+        dst = rank[np.concatenate([g.n_u + g.edges[:, 1], g.edges[:, 0]])]
+        perm = np.lexsort((dst, src))
+        src, dst = src[perm], dst[perm]
+        offsets = np.zeros(n + 1, dtype=np.int64)
+        np.cumsum(np.bincount(src, minlength=n), out=offsets[1:])
+        total = 0
+        mask = dst > src
+        for x1, y in zip(src[mask], dst[mask]):
+            s, e = offsets[y], offsets[y + 1]
+            total += int(e - s - np.searchsorted(dst[s:e], x1, "right"))
+        return total
+
+    for seed in range(3):
+        g = rand_graph(18, 15, 70, seed)
+        for name in ("side", "degree", "approx_complement_degeneracy"):
+            order = make_order(g, name)
+            assert wedges_processed(g, order) == reference(g, order)

@@ -86,6 +86,7 @@ def test_histogram_kernel_used_in_count_path():
     """The one-hot MXU histogram reproduces the aggregation of a real
     wedge stream (keys from the counting engine)."""
     from repro.core import BipartiteGraph, make_order, preprocess
+    from repro.core.count import default_count_dtype
     from repro.core.wedges import (
         device_graph, gather_wedges, host_wedge_counts, slot_wedge_counts,
     )
@@ -97,7 +98,10 @@ def test_histogram_kernel_used_in_count_path():
     dg = device_graph(rg)
     w_cap = max(128, int(host_wedge_counts(rg).sum() + 127) // 128 * 128)
     w = gather_wedges(dg, slot_wedge_counts(dg), w_cap)
-    keys = w.x1.astype(np.int64) * dg.n_pad + w.x2.astype(np.int64)
+    # count-dtype helper: don't request int64 on a device array without
+    # x64 (JAX truncates with a UserWarning); n_pad² fits int32 here
+    kd = default_count_dtype()
+    keys = w.x1.astype(kd) * dg.n_pad + w.x2.astype(kd)
     keys = jnp.where(w.valid, keys, 0).astype(jnp.int32)
     nb = dg.n_pad * dg.n_pad
     got = wedge_histogram_pallas(keys, w.valid.astype(jnp.int32), nb)
