@@ -1,0 +1,198 @@
+"""Fused-engine benchmark: the zero-materialization tile loop vs the
+materialize-then-aggregate engines (ISSUE 3 acceptance).
+
+Writes the machine-readable ``BENCH_fused.json``:
+
+  - ``runs``: wall time + wedges/s per (graph, engine, aggregation,
+    mode) — ``engine="xla"``/``aggregation="hash"`` is the
+    materialize-then-aggregate baseline the fused path must beat on
+    the largest CPU bench graph;
+  - ``memory``: compiled peak-live-temp bytes via
+    ``jitted.lower(...).compile().memory_analysis()`` for the fused
+    tile program vs the materializing program on the same graph — the
+    O(tile) vs O(W) story in numbers;
+  - ``derived``: per (graph, mode) fused-vs-materialized speedup and a
+    ``fused_beats_materialized_hash`` flag;
+  - ``skipped``: fused_pallas rows that would time the interpreter
+    (off-TPU) or whose tile plan exceeds the kernel exactness bound —
+    recorded, never silently dropped.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from .common import BENCH_GRAPHS, emit, timeit
+
+from repro.core import count_from_ranked, make_order, preprocess
+from repro.core.count import _count_device, _count_stream_device
+from repro.core.wedges import (
+    auto_chunk_budget,
+    device_graph,
+    host_wedge_counts,
+    plan_wedge_chunks,
+)
+
+
+def _time_count(rg, repeats=2, count_dtype=jnp.int64, **kw):
+    fn = lambda: jax.block_until_ready(  # noqa: E731
+        count_from_ranked(rg, count_dtype=count_dtype, **kw)
+    )
+    return timeit(fn, repeats=repeats)
+
+
+def _temp_bytes(rg, dg, wv, direction="low", aggregation="hash",
+                mode="all"):
+    """Compiled peak-temp bytes: fused tile program vs materializing
+    program (same graph, same aggregation/mode)."""
+    budget = auto_chunk_budget()
+    bounds, chunk_cap = plan_wedge_chunks(rg, direction, budget,
+                                          wv_slots=wv)
+    fused = _count_stream_device.lower(
+        dg, jnp.asarray(bounds, jnp.int32), chunk_cap=chunk_cap,
+        aggregation=aggregation, mode=mode, direction=direction,
+        dtype=jnp.int64, engine="xla", hash_bits=None,
+    ).compile().memory_analysis()
+    w_total = int(wv.sum())
+    w_cap = max(128, ((w_total + 127) // 128) * 128)
+    full = _count_device.lower(
+        dg, w_cap=w_cap, aggregation=aggregation, mode=mode,
+        direction=direction, dtype=jnp.int64, engine="xla",
+        hash_bits=None,
+    ).compile().memory_analysis()
+    return {
+        "chunk_cap": int(chunk_cap),
+        "fused_temp_bytes": int(fused.temp_size_in_bytes),
+        "materialized_temp_bytes": int(full.temp_size_in_bytes),
+        "temp_ratio": (
+            int(full.temp_size_in_bytes)
+            / max(int(fused.temp_size_in_bytes), 1)
+        ),
+    }
+
+
+def write_json(
+    path: str,
+    graphs=("pl_small", "pl_medium"),
+    order: str = "degree",
+    repeats: int = 2,
+    pallas_interpret_max_wedges: int = 1 << 16,
+) -> dict:
+    on_tpu = jax.default_backend() == "tpu"
+    payload: dict = {
+        "schema": "bench_fused/v1",
+        "backend": jax.default_backend(),
+        "order": order,
+        "auto_chunk_budget": auto_chunk_budget(),
+        "graphs": {},
+        "runs": [],
+        "memory": [],
+        "derived": {},
+        "skipped": [],
+    }
+
+    def add_run(gname, engine, aggregation, mode, wall, wedges):
+        payload["runs"].append({
+            "graph": gname,
+            "engine": engine,
+            "aggregation": aggregation,
+            "mode": mode,
+            "wall_s": wall,
+            "wedges_per_s": wedges / wall if wall > 0 else None,
+        })
+
+    for gname in graphs:
+        g = BENCH_GRAPHS[gname]()
+        rg = preprocess(g, make_order(g, order), order_name=order)
+        dg = device_graph(rg)
+        wv = host_wedge_counts(rg)
+        wedges = int(wv.sum())
+        payload["graphs"][gname] = {
+            "n_u": g.n_u, "n_v": g.n_v, "m": g.m, "wedges": wedges,
+        }
+        for mode in ("global", "all"):
+            t_mat = _time_count(
+                rg, repeats=repeats, aggregation="hash", mode=mode,
+                engine="xla",
+            )
+            add_run(gname, "xla", "hash", mode, t_mat, wedges)
+            t_fused = _time_count(
+                rg, repeats=repeats, aggregation="hash", mode=mode,
+                engine="fused",
+            )
+            add_run(gname, "fused", "hash", mode, t_fused, wedges)
+            t_fsort = _time_count(
+                rg, repeats=repeats, aggregation="sort", mode=mode,
+                engine="fused",
+            )
+            add_run(gname, "fused", "sort", mode, t_fsort, wedges)
+            payload["derived"][f"{gname}/{mode}"] = {
+                "materialized_hash_wall_s": t_mat,
+                "fused_hash_wall_s": t_fused,
+                "fused_speedup_vs_materialized_hash": t_mat / t_fused,
+                "fused_beats_materialized_hash": t_fused < t_mat,
+            }
+        # fused_pallas: compiled-TPU territory; off-TPU the interpreter
+        # dominates, so only tiny wedge spaces are timed
+        if not on_tpu and wedges > pallas_interpret_max_wedges:
+            payload["skipped"].append({
+                "graph": gname,
+                "engine": "fused_pallas",
+                "reason": f"interpret-mode budget (wedges={wedges})",
+            })
+        else:
+            try:
+                # int32: the kernel's documented accumulation dtype
+                # (64-bit dtypes trigger the wraparound warning)
+                t_fp = _time_count(
+                    rg, repeats=repeats, mode="all", engine="fused_pallas",
+                    count_dtype=jnp.int32,
+                )
+                add_run(gname, "fused_pallas", "kernel", "all", t_fp, wedges)
+            except ValueError as e:
+                payload["skipped"].append({
+                    "graph": gname,
+                    "engine": "fused_pallas",
+                    "reason": f"{e}",
+                })
+        payload["memory"].append(
+            {"graph": gname, "wedges": wedges, **_temp_bytes(rg, dg, wv)}
+        )
+    if path:
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--graphs", nargs="*", default=["pl_small", "pl_medium"])
+    ap.add_argument(
+        "--json", default="BENCH_fused.json", metavar="PATH",
+        help="path for the fused-engine baseline (empty string disables)",
+    )
+    args = ap.parse_args(argv)
+    payload = write_json(args.json or None, graphs=tuple(args.graphs))
+    for row in payload["runs"]:
+        emit(
+            f"fused/{row['graph']}/{row['mode']}/{row['engine']}/"
+            f"{row['aggregation']}",
+            row["wall_s"] * 1e6,
+            "",
+        )
+    for row in payload["memory"]:
+        emit(
+            f"fused/{row['graph']}/temp_bytes",
+            0.0,
+            f"fused={row['fused_temp_bytes']},"
+            f"materialized={row['materialized_temp_bytes']},"
+            f"ratio={row['temp_ratio']:.1f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

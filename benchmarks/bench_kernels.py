@@ -31,13 +31,19 @@ def main(argv=None):
     d = jnp.asarray(rng.integers(0, 100, 1 << 14).astype(np.int32))
     rep = jnp.asarray((rng.random(1 << 14) < 0.3).astype(np.int32))
     v = jnp.ones(1 << 14, jnp.int32)
-    t = timeit(lambda: ref.butterfly_combine_ref(d, rep, v)[2].block_until_ready())
-    g1, g2, gt = ops.butterfly_combine(d, rep, v, use_pallas=True)
-    w1, w2, wt = ref.butterfly_combine_ref(d, rep, v)
+    t = timeit(lambda: ref.butterfly_combine_ref(d, rep, v)[3].block_until_ready())
+    g1, glo, ghi, gt = ops.butterfly_combine(d, rep, v, use_pallas=True)
+    w1, wlo, whi, wt = ref.butterfly_combine_ref(d, rep, v)
+    agree = (
+        bool(jnp.array_equal(g1, w1))
+        and bool(jnp.array_equal(glo, wlo))
+        and bool(jnp.array_equal(ghi, whi))
+        and float(gt) == float(wt)
+    )
     emit(
         "kernel/butterfly_combine/n16k",
         t * 1e6,
-        f"pallas_interpret_agrees={bool(jnp.array_equal(g1, w1)) and float(gt)==float(wt)}",
+        f"pallas_interpret_agrees={agree}",
     )
     _engine_parity()
 

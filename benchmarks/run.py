@@ -2,6 +2,8 @@
 Prints ``name,us_per_call,derived`` CSV (see DESIGN.md §9 index).
 
   counting    -> paper Figs. 5-7 / Table 2 (+ §6.3 cache opt)
+  fused       -> zero-materialization fused engine vs materialize-then-
+                 aggregate (wall time + compiled peak-temp bytes)
   ranking     -> paper Table 3
   sparsify    -> paper Fig. 11
   peeling     -> paper Table 4 / Figs. 12-13
@@ -10,7 +12,9 @@ Prints ``name,us_per_call,derived`` CSV (see DESIGN.md §9 index).
 
 The counting section additionally writes the machine-readable
 ``BENCH_counting.json`` perf baseline (``--json-out``; see
-``bench_counting.write_json``), and the peeling section writes
+``bench_counting.write_json``), the fused section writes
+``BENCH_fused.json`` (``--json-out-fused``; fused-vs-materialized wall
+time + temp-memory footprint), and the peeling section writes
 ``BENCH_peeling.json`` (``--json-out-peeling``; host-vs-device engine
 rounds / wall time / host-sync counts) so future PRs have trajectories
 to compare against.
@@ -20,8 +24,8 @@ to compare against.
 import argparse
 import sys
 
-SECTIONS = ("counting", "ranking", "sparsify", "peeling", "kernels",
-            "distributed")
+SECTIONS = ("counting", "fused", "ranking", "sparsify", "peeling",
+            "kernels", "distributed")
 
 
 def main() -> None:
@@ -34,6 +38,9 @@ def main() -> None:
                          "(empty string disables)")
     ap.add_argument("--json-out-peeling", default="BENCH_peeling.json",
                     help="path for the peeling host-vs-device trajectory "
+                         "(empty string disables)")
+    ap.add_argument("--json-out-fused", default="BENCH_fused.json",
+                    help="path for the fused-engine baseline "
                          "(empty string disables)")
     args = ap.parse_args()
     sections = args.sections or list(SECTIONS)
@@ -62,6 +69,15 @@ def main() -> None:
                 "pl_small", "pl_medium")
             bench_counting.write_json(args.json_out, graphs=graphs)
             print(f"# wrote {args.json_out}", file=sys.stderr)
+    if "fused" in sections:
+        from . import bench_fused
+        fused_graphs = ["pl_small"] if args.quick else [
+            "pl_small", "pl_medium"]
+        fused_args = ["--graphs", *fused_graphs,
+                      "--json", args.json_out_fused]
+        bench_fused.main(fused_args)
+        if args.json_out_fused:
+            print(f"# wrote {args.json_out_fused}", file=sys.stderr)
     if "ranking" in sections:
         from . import bench_ranking
         bench_ranking.main(["--graphs", "pl_small"] if args.quick else [])

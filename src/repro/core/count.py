@@ -16,28 +16,54 @@ kernels in ``repro.kernels``:
 
   - the hash/dense histogram -> ``wedge_histogram_pallas`` (one-hot MXU
     matmul; see ``aggregate._histogram``),
-  - the d -> (d - 1, C(d, 2)) transform -> ``butterfly_combine_pallas``.
+  - the d -> (d - 1, C(d, 2)) transform -> ``butterfly_combine_pallas``
+    (64-bit C(d, 2) as two int32 limbs, recombined into the count
+    dtype by ``_combine_limbs`` — exact for the whole int32
+    multiplicity range, no fallback path).
 
 Interpret mode is chosen automatically per backend by
 ``kernels/ops._interpret_default()``: compiled on TPU, interpreted
 elsewhere — so CPU CI exercises the same kernel code paths. Exact
-totals are obtained by summing the kernel's per-group C(d, 2) array in
-the count dtype (the kernel's f32 scalar reduction is diagnostic only).
-Pallas-engine caveat: per-group C(d, 2) is computed in int32, which
-only holds for group multiplicities below 2^16; an in-graph guard
-falls back to the exact ``count_dtype`` computation above that (the
-XLA engine always computes in ``count_dtype``).
+totals are obtained by recombining the kernel's per-group C(d, 2)
+limbs in the count dtype (the kernel's f32 scalar reduction is
+diagnostic only).
+
+Fused engines (zero materialization)
+------------------------------------
+``engine="fused"`` and ``engine="fused_pallas"`` never materialize the
+global wedge array. The flat wedge space is cut into *vertex-aligned*
+tiles (``wedges.plan_wedge_chunks`` — flat wedge ids follow CSR slot
+order, so every endpoint-pair group lives inside one iterating
+endpoint's contiguous range; cutting only at vertex boundaries keeps
+per-tile aggregation exact and the per-tile counts additive). Each
+tile is generated (the ``wedges_at`` binary-search recovery),
+aggregated, combined, accumulated, and DISCARDED inside one program:
+
+  - ``"fused"`` — pure-XLA flavor: a jitted ``fori_loop`` whose body is
+    ``_fused_tile_step`` (tile-local sort/hash/histogram aggregation,
+    same in-graph hash-overflow sort fallback). CPU/GPU get the O(tile)
+    memory win with no interpret-mode overhead.
+  - ``"fused_pallas"`` — the ``kernels.wedge_fused`` Pallas kernel:
+    per grid tile, in-VMEM reconstruction + all-pairs match
+    aggregation + in-register combine + one-hot partial scatters.
+
+Both are bitwise-identical to ``engine="xla"`` wherever counts fit the
+dtype; peak temp memory is O(tile) instead of O(W) (asserted by the
+memory-analysis regression test in tests/test_fused.py).
 
 ``mode="all"`` computes global + per-vertex + per-edge counts from ONE
 wedge materialization + ONE aggregation (previously three full engine
 runs — the wedge gather + sort dominates, so this is a ~3x saving for
-callers that want all three views).
+callers that want all three views). It now also covers the batch
+aggregations (one combined [vertex | edge] scatter per block).
 
-``max_chunk`` bounds peak device memory: when the total wedge count
-exceeds it, the flat wedge space is streamed through a ``fori_loop`` of
-fixed-size vertex-aligned chunks (``wedges.plan_wedge_chunks``), each
-re-aggregated locally — groups never span chunk boundaries, so the
-per-chunk contributions add exactly. Peak wedge-buffer size is
+``max_chunk`` bounds peak device memory: an explicit int, or
+``"auto"`` to derive the budget from the device memory stats
+(``wedges.auto_chunk_budget``; documented default off-accelerator).
+For xla/pallas the flat wedge space streams only when the wedge total
+exceeds the budget; the fused engines always tile (budget defaults to
+auto). Streaming uses a ``fori_loop`` of fixed-size vertex-aligned
+chunks, each re-aggregated locally — peak wedge-buffer size is
 O(chunk_cap) instead of O(W).
 
 The hash strategy's bounded-probe overflow no longer round-trips to the
@@ -52,6 +78,7 @@ x64 (``jax.config.update("jax_enable_x64", True)``) and pass
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import NamedTuple, Optional
 
 import jax
@@ -59,12 +86,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops as _kops
+from ..kernels.wedge_fused import MAX_TILE_CAP as _FUSED_MAX_TILE
+from ..kernels.wedge_fused import TC as _FUSED_TC
 from .aggregate import Groups, aggregate_dense, aggregate_hash, aggregate_sort
 from .graph import BipartiteGraph, RankedGraph, preprocess
 from .ranking import make_order
 from .wedges import (
     DeviceGraph,
     Wedges,
+    auto_chunk_budget,
     device_graph,
     gather_wedges,
     greedy_vertex_blocks,
@@ -84,7 +114,7 @@ __all__ = [
     "MODES",
 ]
 
-ENGINES = ("xla", "pallas")
+ENGINES = ("xla", "pallas", "fused", "fused_pallas")
 MODES = ("global", "vertex", "edge", "all")
 
 
@@ -117,36 +147,38 @@ def _choose2(d: jax.Array, dtype) -> jax.Array:
     return dd * (dd - 1) // 2
 
 
+def _combine_limbs(lo: jax.Array, hi: jax.Array, dtype) -> jax.Array:
+    """Recombine the combine kernel's 64-bit C(d, 2) limbs into
+    ``dtype``. With a 64-bit count dtype this is exact for the full
+    int32 multiplicity range; sub-64-bit dtypes keep the low word's
+    bit pattern (values that need more than 32 bits need a 64-bit
+    ``count_dtype``, same as every other engine)."""
+    if jnp.dtype(dtype).itemsize >= 8:
+        return lo.astype(jnp.uint32).astype(dtype) + (hi.astype(dtype) << 32)
+    return lo.astype(dtype)
+
+
 def _group_choose2(groups: Groups, dtype, engine: str) -> jax.Array:
     """Per-group C(d, 2) endpoint contributions, in ``dtype``."""
-
-    def _exact():
-        return jnp.where(groups.valid, _choose2(groups.d, dtype), 0)
-
     if engine == "pallas":
-
-        def _kernel():
-            _, c2, _ = _kops.butterfly_combine(
-                groups.d,
-                jnp.ones_like(groups.d),
-                groups.valid.astype(jnp.int32),
-                use_pallas=True,
-            )
-            return c2.astype(dtype)
-
-        # The combine kernel computes d*(d-1)//2 in int32, which wraps
-        # for d >= 2^16 — guard in-graph and fall back to the exact
-        # count_dtype computation instead of returning corrupt counts.
-        d_max = jnp.max(jnp.where(groups.valid, groups.d, 0))
-        return jax.lax.cond(d_max < (1 << 16), _kernel, _exact)
-    return _exact()
+        # The widened kernel emits C(d, 2) as two int32 limbs — exact
+        # for the whole int32 multiplicity range, so no in-graph
+        # exact-path fallback is needed any more (PR 1 follow-up).
+        _, lo, hi, _ = _kops.butterfly_combine(
+            groups.d,
+            jnp.ones_like(groups.d),
+            groups.valid.astype(jnp.int32),
+            use_pallas=True,
+        )
+        return _combine_limbs(lo, hi, dtype)
+    return jnp.where(groups.valid, _choose2(groups.d, dtype), 0)
 
 
 def _wedge_dm1(w: Wedges, groups: Groups, dtype, engine: str) -> jax.Array:
     """Per-wedge d - 1 center/edge contributions, in ``dtype``."""
     d = groups.d_per_wedge
     if engine == "pallas":
-        dm1, _, _ = _kops.butterfly_combine(
+        dm1, _, _, _ = _kops.butterfly_combine(
             d, jnp.zeros_like(d), w.valid.astype(jnp.int32), use_pallas=True
         )
         return dm1.astype(dtype)
@@ -297,6 +329,35 @@ def _zero_counts(dg: DeviceGraph, mode: str, dtype):
     return by_mode[mode]()
 
 
+def _fused_tile_step(
+    dg: DeviceGraph,
+    cnt: Optional[jax.Array],
+    w_off: jax.Array,
+    ws: jax.Array,
+    we: jax.Array,
+    *,
+    chunk_cap: int,
+    aggregation: str,
+    mode: str,
+    direction: str,
+    dtype,
+    engine: str = "xla",
+    hash_bits: Optional[int] = None,
+):
+    """Generate -> aggregate -> accumulate ONE vertex-aligned wedge
+    tile ``[ws, we)`` and discard it — the fused counting step shared
+    by the streaming engine here and the distributed per-device loop
+    (``distributed._count``). The tile-alignment invariant of
+    ``plan_wedge_chunks`` guarantees no endpoint-pair group spans the
+    tile, so the per-tile counts add exactly."""
+    wid = ws + jnp.arange(chunk_cap, dtype=jnp.int32)
+    valid = wid < we
+    w = wedges_at(dg, cnt, w_off, wid, valid, direction)
+    return _aggregate_and_accumulate(
+        dg, w, aggregation, mode, dtype, engine, hash_bits
+    )
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(
@@ -316,12 +377,15 @@ def _count_stream_device(
     engine: str = "xla",
     hash_bits: Optional[int] = None,
 ):
-    """Chunked wedge streaming: fori_loop over vertex-aligned chunks of
-    the flat wedge space, each re-materialized via ``wedges_at`` into a
-    fixed (chunk_cap,) buffer and aggregated locally. Peak wedge memory
-    is O(chunk_cap) instead of O(W); per-chunk counts add exactly
-    because groups never span an iterating-vertex boundary (see
-    ``plan_wedge_chunks``)."""
+    """Fused/chunked wedge streaming: fori_loop over vertex-aligned
+    tiles of the flat wedge space, each re-materialized via
+    ``wedges_at`` into a fixed (chunk_cap,) buffer, aggregated locally,
+    accumulated, and discarded — all inside one jitted program. Peak
+    wedge memory is O(chunk_cap) instead of O(W); per-tile counts add
+    exactly because groups never span an iterating-vertex boundary
+    (see ``plan_wedge_chunks``). This is both the ``max_chunk``
+    streaming path and the ``engine="fused"`` hot loop (which always
+    routes through it, regardless of the wedge total)."""
     cnt = slot_wedge_counts(dg, direction)
     w_off = wedge_offsets(cnt)
     n_blocks = bounds.shape[0] - 1
@@ -333,11 +397,11 @@ def _count_stream_device(
         v1 = bounds[i + 1]
         ws = w_off[dg.offsets[v0]]
         we = w_off[dg.offsets[v1]]
-        wid = ws + jnp.arange(chunk_cap, dtype=jnp.int32)
-        valid = wid < we
-        w = wedges_at(dg, cnt, w_off, wid, valid, direction)
-        out, ok_i = _aggregate_and_accumulate(
-            dg, w, aggregation, mode, dtype, engine, hash_bits
+        out, ok_i = _fused_tile_step(
+            dg, cnt, w_off, ws, we,
+            chunk_cap=chunk_cap, aggregation=aggregation, mode=mode,
+            direction=direction, dtype=dtype, engine=engine,
+            hash_bits=hash_bits,
         )
         acc = jax.tree_util.tree_map(
             lambda a, o: (a + o).astype(a.dtype), acc, out
@@ -396,8 +460,10 @@ def _count_batch_device(
         acc0 = jnp.zeros((), dtype)
     elif mode == "vertex":
         acc0 = jnp.zeros((n_pad,), dtype)
-    else:
+    elif mode == "edge":
         acc0 = jnp.zeros((dg.m,), dtype)
+    else:  # all: scalar total + one combined [vertex | edge] buffer
+        acc0 = (jnp.zeros((), dtype), jnp.zeros((n_pad + dg.m,), dtype))
 
     def body(i, acc):
         v0 = bounds[i]
@@ -449,11 +515,109 @@ def _count_batch_device(
             acc = acc.at[jnp.where(rep, x2, n_pad)].add(g_add)
             acc = acc.at[jnp.where(valid, y, n_pad)].add(dm1)
             return acc
-        acc = acc.at[dg.undirected_id[e]].add(dm1)
-        acc = acc.at[dg.undirected_id[pos]].add(dm1)
-        return acc
+        if mode == "edge":
+            acc = acc.at[dg.undirected_id[e]].add(dm1)
+            acc = acc.at[dg.undirected_id[pos]].add(dm1)
+            return acc
+        # mode == "all": same fused-scatter shape as _accumulate — one
+        # combined [vertex | edge] buffer per block, integer adds
+        # commute so the split views are bitwise-identical to the
+        # three single-mode batch runs.
+        tot, buf = acc
+        g_add = jnp.where(rep, _choose2(d, dtype), 0)
+        nm = n_pad + dg.m
+        oob = jnp.int32(nm)
+        idx = jnp.concatenate([
+            jnp.where(rep, x1, oob),
+            jnp.where(rep, x2, oob),
+            jnp.where(valid, y, oob),
+            jnp.where(valid, n_pad + dg.undirected_id[e], oob),
+            jnp.where(valid, n_pad + dg.undirected_id[pos], oob),
+        ])
+        upd = jnp.concatenate([g_add, g_add, dm1, dm1, dm1])
+        return (
+            (tot + jnp.sum(g_add)).astype(dtype),
+            buf.at[idx].add(upd),
+        )
 
-    return jax.lax.fori_loop(0, n_blocks, body, acc0)
+    out = jax.lax.fori_loop(0, n_blocks, body, acc0)
+    if mode == "all":
+        tot, buf = out
+        return tot, buf[: n_pad], buf[n_pad :]
+    return out
+
+
+def _resolve_chunk_budget(max_chunk) -> Optional[int]:
+    """``max_chunk`` knob: None (no streaming for the materializing
+    engines; auto for the fused engines), "auto" (device-memory-derived
+    budget, see ``wedges.auto_chunk_budget``), or an explicit int."""
+    if max_chunk is None:
+        return None
+    if max_chunk == "auto":
+        return auto_chunk_budget()
+    return int(max_chunk)
+
+
+def _count_fused_pallas(
+    rg: RankedGraph,
+    dg: DeviceGraph,
+    bounds: np.ndarray,
+    chunk_cap: int,
+    mode: str,
+    direction: str,
+    dtype,
+    wv_slots: np.ndarray,
+):
+    """Dispatch the wedge_fused Pallas kernel: host-planned vertex-
+    aligned tile bounds in flat wedge-id space, one kernel launch.
+    The kernel accumulates per-vertex/per-edge counts in int32 and the
+    global total in two int32 limbs (recombined into ``dtype``)."""
+    if mode != "global" and jnp.dtype(dtype).itemsize >= 8:
+        warnings.warn(
+            "engine='fused_pallas' accumulates per-vertex/per-edge counts "
+            "in int32 inside the kernel; a 64-bit count_dtype widens the "
+            "returned array but not the accumulation, so counts >= 2^31 "
+            "wrap — use engine='fused' for 64-bit accumulation "
+            "(limb-widened kernel outputs are a ROADMAP follow-up)",
+            stacklevel=3,
+        )
+    tile_cap = max(
+        _FUSED_TC, ((chunk_cap + _FUSED_TC - 1) // _FUSED_TC) * _FUSED_TC
+    )
+    if tile_cap > _FUSED_MAX_TILE:
+        raise ValueError(
+            f"engine='fused_pallas' tile_cap {tile_cap} exceeds the "
+            f"kernel's exactness bound {_FUSED_MAX_TILE} (a single "
+            "vertex owns more wedges than the kernel tile can hold); "
+            "use engine='fused'"
+        )
+    w_off = np.concatenate([[0], np.cumsum(wv_slots)]).astype(np.int32)
+    off = rg.offsets.astype(np.int64)
+    tb = np.stack(
+        [w_off[off[bounds[:-1]]], w_off[off[bounds[1:]]]], axis=1
+    ).astype(np.int32)
+    tot, vert, edge = _kops.fused_count_tiles(
+        jnp.asarray(tb),
+        dg.offsets,
+        dg.neighbors,
+        dg.edge_src,
+        dg.undirected_id,
+        jnp.asarray(w_off),
+        tile_cap=tile_cap,
+        n_pad=dg.n_pad,
+        m=dg.m,
+        direction=direction,
+        mode=mode,
+        use_pallas=True,
+    )
+    total = _combine_limbs(tot[0], tot[1], dtype)
+    if mode == "global":
+        return total
+    if mode == "vertex":
+        return vert.astype(dtype)
+    if mode == "edge":
+        return edge.astype(dtype)
+    return total, vert.astype(dtype), edge.astype(dtype)
 
 
 def count_from_ranked(
@@ -466,7 +630,7 @@ def count_from_ranked(
     batch_rows: int = 8,
     batch_target: int = 1 << 14,
     engine: str = "xla",
-    max_chunk: Optional[int] = None,
+    max_chunk=None,
     hash_bits: Optional[int] = None,
 ):
     """Count butterflies on a preprocessed graph. Returns rank-space
@@ -474,10 +638,15 @@ def count_from_ranked(
     per-edge) triple for ``mode="all"``).
 
     ``engine="pallas"`` routes the histogram and combine steps through
-    the Pallas kernels (interpret mode off-TPU). ``max_chunk`` enables
-    chunked wedge streaming when the wedge total exceeds it.
-    ``hash_bits`` overrides the hash-table size (testing hook for the
-    in-graph overflow fallback).
+    the Pallas kernels (interpret mode off-TPU). ``engine="fused"`` /
+    ``engine="fused_pallas"`` never materialize the global wedge
+    array: the flat wedge space streams through vertex-aligned tiles
+    that are generated, aggregated, accumulated, and discarded inside
+    one program — peak temp memory O(tile), not O(W). ``max_chunk``
+    bounds the tile/stream budget: an int, ``"auto"`` (derived from
+    device memory stats), or None (materialize for xla/pallas; auto
+    for the fused engines). ``hash_bits`` overrides the hash-table
+    size (testing hook for the in-graph overflow fallback).
     """
     if engine not in ENGINES:
         raise ValueError(f"engine must be {'|'.join(ENGINES)}, got {engine}")
@@ -488,16 +657,11 @@ def count_from_ranked(
     dg = device_graph(rg)
     wv_slots = host_wedge_counts(rg, direction)
     if aggregation in ("batch", "batch_wa"):
-        if mode == "all":
-            raise ValueError(
-                "mode='all' is unsupported for batch aggregations (they "
-                "fuse aggregation with single-mode accumulation); use "
-                "sort/hash/histogram"
-            )
         if engine != "xla":
             raise ValueError(
                 "batch aggregations fuse their own accumulation and do "
-                "not route through the Pallas kernels; use engine='xla'"
+                "not route through the Pallas or fused engines; use "
+                "engine='xla'"
             )
         # per-vertex wedge counts (by iterating endpoint)
         src = rg.edge_src[: 2 * rg.m]
@@ -517,10 +681,37 @@ def count_from_ranked(
             dtype=dtype,
         )
         return out
-    w_total = int(wv_slots.sum())
-    if max_chunk is not None and w_total > int(max_chunk):
+    budget = _resolve_chunk_budget(max_chunk)
+    if engine in ("fused", "fused_pallas"):
+        if budget is None:
+            budget = auto_chunk_budget()
+        if engine == "fused_pallas":
+            # the kernel's in-VMEM aggregation is exact only up to its
+            # MAX_TILE_CAP tile — clamp the auto/default budget to it
+            budget = min(budget, _FUSED_MAX_TILE)
         bounds, chunk_cap = plan_wedge_chunks(
-            rg, direction, int(max_chunk), wv_slots=wv_slots
+            rg, direction, budget, wv_slots=wv_slots
+        )
+        if engine == "fused_pallas":
+            return _count_fused_pallas(
+                rg, dg, bounds, chunk_cap, mode, direction, dtype, wv_slots
+            )
+        out, _ok = _count_stream_device(
+            dg,
+            jnp.asarray(bounds, jnp.int32),
+            chunk_cap=chunk_cap,
+            aggregation=aggregation,
+            mode=mode,
+            direction=direction,
+            dtype=dtype,
+            engine="xla",
+            hash_bits=hash_bits,
+        )
+        return out
+    w_total = int(wv_slots.sum())
+    if budget is not None and w_total > budget:
+        bounds, chunk_cap = plan_wedge_chunks(
+            rg, direction, budget, wv_slots=wv_slots
         )
         out, _ok = _count_stream_device(
             dg,
@@ -558,7 +749,7 @@ def count_butterflies(
     count_dtype=None,
     batch_rows: int = 8,
     engine: str = "xla",
-    max_chunk: Optional[int] = None,
+    max_chunk=None,
 ) -> CountResult:
     """Public entry point: rank -> retrieve -> aggregate -> count."""
     ordering = make_order(g, order)

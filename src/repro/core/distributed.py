@@ -9,9 +9,14 @@ Mapping of the paper onto an SPMD mesh:
     device-local (all wedges anchored at x1 live on x1's device), so
     local aggregation is exact and the only communication is the final
     count combine.
-  - Each device materializes its wedge slice (binary search over the
-    replicated prefix array), aggregates locally (sort strategy), and
-    computes local butterfly contributions.
+  - Each device consumes its wedge slice through the SAME fused tile
+    loop as the single-device ``engine="fused"`` path
+    (``count._fused_tile_step``): vertex-aligned sub-tiles of the
+    device slice are generated (binary search over the replicated
+    prefix array), aggregated locally (sort strategy), accumulated, and
+    discarded — per-device peak wedge memory is O(tile), never
+    O(W / n_dev). ``engine="slice"`` keeps the old behavior of
+    materializing + aggregating the full local slice at once.
   - Contributions are combined with one ``psum`` (global counts) or a
     ``psum`` over the dense count vector (per-vertex / per-edge). On a
     multi-pod mesh the psum spans all axes, lowering to hierarchical
@@ -20,10 +25,15 @@ Mapping of the paper onto an SPMD mesh:
 The graph CSR is replicated (real deployments of this engine would
 additionally shard the adjacency of very large graphs; the wedge space —
 the O(αm) object that dominates — is what we partition).
+
+Tile-alignment invariant: both the cross-device partition AND the
+in-device tiles are cut only at iterating-vertex boundaries (shared
+with ``wedges.plan_wedge_chunks``), so no endpoint-pair group ever
+spans a tile or a device — per-tile and per-device contributions add
+exactly and the engines agree bitwise.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Sequence
 
 import jax
@@ -33,18 +43,51 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from .aggregate import aggregate_sort
-from .count import _accumulate  # shared Lemma 4.2 math
+from .count import _accumulate, _fused_tile_step, _zero_counts  # shared hot path
 from .graph import BipartiteGraph, RankedGraph, preprocess
 from .ranking import make_order
 from .wedges import (
+    auto_chunk_budget,
     device_graph,
+    greedy_vertex_blocks,
     host_wedge_counts,
     slot_wedge_counts,
     wedge_offsets,
     wedges_at,
 )
 
-__all__ = ["plan_partition", "distributed_count", "distributed_count_fn"]
+__all__ = [
+    "plan_partition",
+    "plan_fused_partition",
+    "distributed_count",
+    "distributed_count_fn",
+]
+
+DIST_ENGINES = ("fused", "slice")
+
+
+def _vertex_loads(rg: RankedGraph, direction: str):
+    """Per-vertex wedge loads (by iterating endpoint) and their prefix
+    sum over rank space — the shared host-planning inputs."""
+    cnt = host_wedge_counts(rg, direction)
+    src = rg.edge_src[: 2 * rg.m]
+    wv = np.zeros(rg.n_pad + 1, dtype=np.int64)
+    np.add.at(wv, src, cnt[: 2 * rg.m])
+    voff = np.concatenate([[0], np.cumsum(wv[: rg.n_pad])])
+    return wv[: rg.n_pad], voff
+
+
+def _device_vertex_starts(voff: np.ndarray, n_pad: int, n_dev: int):
+    """Greedy wedge-balanced vertex boundaries, one range per device."""
+    total = int(voff[-1])
+    ideal = total / max(n_dev, 1)
+    starts = [0]
+    for d in range(1, n_dev):
+        # first vertex boundary with cumulative wedges >= d * ideal
+        b = int(np.searchsorted(voff, d * ideal, side="left"))
+        starts.append(min(b, n_pad))
+    starts.append(n_pad)
+    return np.asarray(starts, dtype=np.int64)
 
 
 def plan_partition(rg: RankedGraph, n_dev: int, direction: str = "low"):
@@ -55,24 +98,56 @@ def plan_partition(rg: RankedGraph, n_dev: int, direction: str = "low"):
     Greedy boundary placement: walk vertices, cut when the running wedge
     load reaches the ideal share — the wedge-aware batching heuristic.
     """
-    cnt = host_wedge_counts(rg, direction)
-    src = rg.edge_src[: 2 * rg.m]
-    wv = np.zeros(rg.n_pad + 1, dtype=np.int64)
-    np.add.at(wv, src, cnt[: 2 * rg.m])
-    voff = np.concatenate([[0], np.cumsum(wv[: rg.n_pad])])
-    total = int(voff[-1])
-    ideal = total / max(n_dev, 1)
-    starts = [0]
-    for d in range(1, n_dev):
-        # first vertex boundary with cumulative wedges >= d * ideal
-        b = int(np.searchsorted(voff, d * ideal, side="left"))
-        starts.append(min(b, rg.n_pad))
-    starts.append(rg.n_pad)
-    w_start = voff[np.asarray(starts)]
+    _, voff = _vertex_loads(rg, direction)
+    starts = _device_vertex_starts(voff, rg.n_pad, n_dev)
+    w_start = voff[starts]
     per_dev = np.diff(w_start)
     cap = int(per_dev.max(initial=1))
     cap = max(128, ((cap + 127) // 128) * 128)
     return w_start.astype(np.int32), cap
+
+
+def plan_fused_partition(
+    rg: RankedGraph,
+    n_dev: int,
+    direction: str = "low",
+    max_chunk="auto",
+):
+    """Per-device vertex-aligned tile plan for the fused engine.
+
+    Each device's wedge-balanced vertex range (``plan_partition``
+    boundaries) is subdivided into tiles of at most ``max_chunk``
+    wedges (``"auto"`` -> ``wedges.auto_chunk_budget``), cut only at
+    vertex boundaries — the same invariant as the single-device
+    ``plan_wedge_chunks``, so per-tile aggregation stays exact.
+
+    Returns ``(tiles (n_dev, max_tiles, 2) int32, tile_cap)``: flat
+    wedge-id [start, end) per tile, rows padded with empty (0, 0)
+    tiles; ``tile_cap`` is the common padded per-tile buffer size.
+    """
+    budget = (
+        auto_chunk_budget() if max_chunk in (None, "auto") else int(max_chunk)
+    )
+    wv, voff = _vertex_loads(rg, direction)
+    starts = _device_vertex_starts(voff, rg.n_pad, n_dev)
+    per_dev_tiles = []
+    chunk_floor = 1
+    for d in range(n_dev):
+        vs, ve = int(starts[d]), int(starts[d + 1])
+        if ve <= vs:
+            per_dev_tiles.append(np.zeros((0, 2), np.int64))
+            continue
+        sub, chunk = greedy_vertex_blocks(wv[vs:ve], ve - vs, target=budget)
+        chunk_floor = max(chunk_floor, chunk)
+        lo = voff[vs + sub[:-1]]
+        hi = voff[vs + sub[1:]]
+        per_dev_tiles.append(np.stack([lo, hi], axis=1))
+    max_tiles = max(1, max(t.shape[0] for t in per_dev_tiles))
+    tiles = np.zeros((n_dev, max_tiles, 2), np.int64)
+    for d, t in enumerate(per_dev_tiles):
+        tiles[d, : t.shape[0]] = t
+    tile_cap = max(128, ((chunk_floor + 127) // 128) * 128)
+    return tiles.astype(np.int32), tile_cap
 
 
 def distributed_count_fn(
@@ -85,13 +160,25 @@ def distributed_count_fn(
     dtype=jnp.int32,
     precomputed_offsets: bool = False,
     combine: str = "all",
+    engine: str = "slice",
 ):
     """Build the jitted shard_mapped counting step for a mesh.
 
-    The returned function takes (dg, w_bounds[, w_off]) where
-    ``w_bounds`` is an (n_dev, 2) int32 array of per-device [start, end)
-    wedge ids, sharded over the flattened mesh axes; ``dg`` is
-    replicated.
+    The default keeps the historical low-level contract
+    (``engine="slice"``: per-device slice bounds); the end-to-end
+    ``distributed_count`` passes ``engine="fused"`` with tile-style
+    bounds.
+
+    ``engine="fused"``: the returned function takes
+    (dg, tiles[, w_off]) where ``tiles`` is an (n_dev, max_tiles, 2)
+    int32 array of per-tile [start, end) flat wedge ids (from
+    ``plan_fused_partition``), sharded over the flattened mesh axes;
+    each device runs the shared fused tile loop (generate ->
+    sort-aggregate -> accumulate -> discard per tile; ``w_cap`` is the
+    per-TILE buffer size). ``engine="slice"``: takes (dg, w_bounds[,
+    w_off]) with w_bounds (n_dev, 2) and materializes + aggregates the
+    whole local slice at once (``w_cap`` = per-device slice buffer).
+    ``dg`` is replicated in both cases.
 
     ``precomputed_offsets``: pass the global wedge-prefix array as a
     replicated input instead of recomputing the O(e_pad · log deg)
@@ -101,19 +188,41 @@ def distributed_count_fn(
     psum_scatter (vertex-mode counts stay sharded over devices — halves
     the wire bytes and the production deployment keeps them sharded).
     """
+    if engine not in DIST_ENGINES:
+        raise ValueError(
+            f"engine must be {'|'.join(DIST_ENGINES)}, got {engine}"
+        )
     axes = tuple(axis_names)
     repl = P()
     sharded = P(axes)
     n_dev = int(np.prod([mesh.shape[a] for a in axes]))
 
-    def _count(dg, bounds, cnt, w_off):
+    def _local_counts(dg, bounds, cnt, w_off):
+        if engine == "fused":
+            n_tiles = bounds.shape[1]
+            acc0 = _zero_counts(dg, mode, dtype)
+
+            def body(i, acc):
+                out, _ok = _fused_tile_step(
+                    dg, cnt, w_off, bounds[0, i, 0], bounds[0, i, 1],
+                    chunk_cap=w_cap, aggregation="sort", mode=mode,
+                    direction=direction, dtype=dtype, engine="xla",
+                )
+                return jax.tree_util.tree_map(
+                    lambda a, o: (a + o).astype(a.dtype), acc, out
+                )
+
+            return jax.lax.fori_loop(0, n_tiles, body, acc0)
         start = bounds[0, 0]
         end = bounds[0, 1]
         wid = start + jnp.arange(w_cap, dtype=jnp.int32)
         valid = wid < end
         w = wedges_at(dg, cnt, w_off, wid, valid, direction)
         groups, w = aggregate_sort(w)
-        out = _accumulate(dg, w, groups, mode, dtype)
+        return _accumulate(dg, w, groups, mode, dtype)
+
+    def _count(dg, bounds, cnt, w_off):
+        out = _local_counts(dg, bounds, cnt, w_off)
         if combine == "scatter" and mode in ("vertex", "edge"):
             pad = (-out.shape[0]) % n_dev
             out = jnp.pad(out, (0, pad))
@@ -157,15 +266,32 @@ def distributed_count(
     count_dtype=None,
     precomputed_offsets: bool = True,
     combine: str = "all",
+    engine: str = "fused",
+    max_chunk="auto",
 ):
-    """End-to-end distributed counting on an existing mesh."""
+    """End-to-end distributed counting on an existing mesh.
+
+    ``engine="fused"`` (default) streams each device's wedge slice
+    through vertex-aligned tiles of at most ``max_chunk`` wedges
+    (``"auto"`` derives the budget from device memory stats) — per-
+    device peak temp memory O(tile). ``engine="slice"`` materializes
+    the whole per-device slice (the pre-fused behavior). Both produce
+    bitwise-identical counts.
+    """
     axis_names = tuple(axis_names or mesh.axis_names)
     n_dev = int(np.prod([mesh.shape[a] for a in axis_names]))
     direction = "high" if cache_opt else "low"
     ordering = make_order(g, order)
     rg = preprocess(g, ordering, order_name=order)
-    w_start, cap = plan_partition(rg, n_dev, direction)
-    bounds = np.stack([w_start[:-1], w_start[1:]], axis=1).astype(np.int32)
+    if engine == "fused":
+        bounds, cap = plan_fused_partition(
+            rg, n_dev, direction, max_chunk=max_chunk
+        )
+    else:
+        w_start, cap = plan_partition(rg, n_dev, direction)
+        bounds = np.stack(
+            [w_start[:-1], w_start[1:]], axis=1
+        ).astype(np.int32)
     dg = device_graph(rg)
     fn = distributed_count_fn(
         mesh,
@@ -176,6 +302,7 @@ def distributed_count(
         dtype=count_dtype or jnp.int32,
         precomputed_offsets=precomputed_offsets,
         combine=combine,
+        engine=engine,
     )
     sharding = NamedSharding(mesh, P(axis_names))
     bounds_dev = jax.device_put(jnp.asarray(bounds), sharding)

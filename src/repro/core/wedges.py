@@ -24,6 +24,7 @@ identical, the access pattern differs.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import NamedTuple, Optional
 
 import jax
@@ -35,6 +36,8 @@ from .graph import RankedGraph
 __all__ = [
     "DeviceGraph",
     "Wedges",
+    "DEFAULT_CHUNK_BUDGET",
+    "auto_chunk_budget",
     "device_graph",
     "slot_wedge_counts",
     "host_wedge_counts",
@@ -46,6 +49,50 @@ __all__ = [
     "greedy_vertex_blocks",
     "plan_wedge_chunks",
 ]
+
+# Streaming/tile wedge budget used when the device exposes no memory
+# stats (the CPU host platform returns None): 2^18 wedges ~ 16 MiB of
+# per-tile working set at _BYTES_PER_WEDGE — small enough to stay
+# cache-friendly (measured fastest-region on the CPU bench graphs; see
+# BENCH_fused.json), large enough to amortize per-tile overhead.
+DEFAULT_CHUNK_BUDGET = 1 << 18
+
+# Per-wedge working-set estimate for one live tile: six int32 wedge
+# vectors (x1, x2, y, center_slot, second_slot, valid) plus roughly one
+# same-sized copy for the aggregation temporaries (sorted wedges or the
+# ~2x hash table + probe state) -> 6 * 4 B * ~2.7 rounded to 64.
+_BYTES_PER_WEDGE = 64
+
+
+@functools.lru_cache(maxsize=None)
+def auto_chunk_budget(
+    fraction: float = 0.125,
+    default: int = DEFAULT_CHUNK_BUDGET,
+    lo: int = 1 << 14,
+    hi: int = 1 << 24,
+) -> int:
+    """Derive the streaming/tile wedge budget from the device's memory
+    stats (``max_chunk="auto"``): a ``fraction`` of the free bytes on
+    device 0, divided by the per-wedge working-set estimate, clamped to
+    [lo, hi]. Platforms without memory stats (CPU host platform returns
+    None) get the documented ``DEFAULT_CHUNK_BUDGET``.
+
+    The result feeds jit-static tile shapes (``chunk_cap``, bounds
+    length), so it must not wobble with live allocator state: the
+    free-byte reading is snapshotted once per process (lru_cache) and
+    quantized down to a power of two."""
+    try:
+        stats = jax.local_devices()[0].memory_stats()
+    except Exception:  # noqa: BLE001 — backend-specific, optional API
+        stats = None
+    if not stats:
+        return default
+    limit = stats.get("bytes_limit") or stats.get("bytes_reservable_limit")
+    if not limit:
+        return default
+    free = max(int(limit) - int(stats.get("bytes_in_use", 0)), 0)
+    raw = int(min(hi, max(lo, (free * fraction) // _BYTES_PER_WEDGE)))
+    return 1 << (raw.bit_length() - 1)  # quantize: stable jit shapes
 
 
 @jax.tree_util.register_pytree_node_class

@@ -1,22 +1,27 @@
 """Pallas TPU kernels for the butterfly counting/peeling hot paths.
 
-Three kernels cover the paper-identified compute hot spots, each with a
+Four kernels cover the paper-identified compute hot spots, each with a
 pure-jnp oracle in ``ref`` and a backend-aware dispatcher in ``ops``:
 
   - ``wedge_count.wedge_histogram_pallas`` — one-hot MXU histogram
     (hash/dense wedge aggregation),
   - ``butterfly_combine.butterfly_combine_pallas`` — d -> (d-1, C(d,2))
-    contribution transform,
+    contribution transform (64-bit C(d,2) as two int32 limbs),
   - ``bucket_min.bucket_min_pallas`` — masked min-reduction (peeling
-    extract-min).
+    extract-min),
+  - ``wedge_fused.fused_count_tiles_pallas`` — zero-materialization
+    fused counting: per vertex-aligned tile, reconstruct the wedge
+    slice in VMEM, aggregate, combine, and emit partial counts — the
+    global wedge array is never materialized.
 
-The counting engine (``repro.core.count`` with ``engine="pallas"``)
-consumes them through the ``ops`` wrappers, which pick interpret mode
-automatically off the backend.
+The counting engine (``repro.core.count`` with ``engine="pallas"`` /
+``engine="fused_pallas"``) consumes them through the ``ops`` wrappers,
+which pick interpret mode automatically off the backend.
 """
 from .ops import (
     bucket_min,
     butterfly_combine,
+    fused_count_tiles,
     interpret_default,
     wedge_histogram,
 )
@@ -24,6 +29,7 @@ from .ops import (
 __all__ = [
     "bucket_min",
     "butterfly_combine",
+    "fused_count_tiles",
     "interpret_default",
     "wedge_histogram",
 ]

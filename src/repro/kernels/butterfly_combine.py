@@ -3,22 +3,24 @@
 Step 4 of the counting framework (paper Fig. 2): given each wedge's
 group multiplicity ``d`` and a group-representative flag, emit
 
-    dm1[i]     = d[i] - 1          (center / edge contributions)
-    choose2[i] = rep[i] ? C(d,2):0 (endpoint contributions, once/group)
+    dm1[i]            = d[i] - 1          (center / edge contributions)
+    (c2_lo, c2_hi)[i] = rep[i] ? C(d,2):0 (endpoint contributions,
+                                           once per group, 64-bit)
 
 plus per-tile partial sums of choose2 (the global count reduction) so
 the host-side total is a cheap O(grid) add. Elementwise VPU work tiled
 through VMEM; the reduction keeps a (1,1) accumulator block.
 
-Precision contract: the per-element outputs are exact int32 (so group
-multiplicities must stay below 2^16 for C(d,2)); the scalar total
-accumulates in f32 and is exact only below 2^24 — exact global counts
-are obtained by summing the returned ``choose2`` array in int64/f64.
-That is exactly what ``repro.core.count`` does with ``engine="pallas"``:
-it calls this kernel twice per aggregation (per-group for C(d,2)
-endpoint contributions, per-wedge for the d-1 center/edge
-contributions) and reduces ``choose2`` in the count dtype, ignoring the
-f32 scalar. Tests compare the scalar with rtol.
+Precision contract: C(d, 2) is computed exactly for the full int32
+``d`` range (0 <= d < 2^31) with 16-bit-limb uint32 arithmetic — the
+64-bit result is returned as two int32 limbs (``c2_lo`` is the low 32
+bits as an int32 bit pattern, ``c2_hi`` the high 32 bits), so group
+multiplicities >= 2^16 stay on the kernel instead of tripping an
+in-graph exact-path fallback. ``dm1`` is exact int32 (d < 2^31). The
+scalar total accumulates in f32 and is exact only below 2^24 — exact
+global counts are obtained by recombining the limb arrays in the count
+dtype (``repro.core.count._combine_limbs``), which is exactly what
+``engine="pallas"`` does; tests compare the scalar with rtol.
 """
 from __future__ import annotations
 
@@ -28,22 +30,51 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["butterfly_combine_pallas", "TN"]
+__all__ = ["butterfly_combine_pallas", "choose2_limbs", "TN"]
 
 TN = 1024
 
 
-def _combine_kernel(d_ref, rep_ref, valid_ref, dm1_ref, c2_ref, tot_ref):
+def choose2_limbs(d: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Exact C(d, 2) = d * (d - 1) / 2 for int32 ``d`` in [0, 2^31), as
+    (lo, hi) int32 limbs of the 64-bit result.
+
+    16-bit-limb schoolbook multiply in uint32: no partial product or
+    limb sum ever wraps (a, c < 2^15; b, f < 2^16), and the product
+    d * (d - 1) is even, so the 64-bit halving is a cross-limb shift.
+    Runs identically inside Pallas kernels (VPU uint32 ops) and in
+    plain jnp — ``ref.butterfly_combine_ref`` and the ``mode="all"``
+    engine share it.
+    """
+    du = d.astype(jnp.uint32)
+    eu = du - jnp.uint32(1)  # callers mask d == 0; wraps harmlessly there
+    a, b = du >> 16, du & jnp.uint32(0xFFFF)
+    c, f = eu >> 16, eu & jnp.uint32(0xFFFF)
+    bf = b * f
+    mid = a * f + b * c  # < 2^32: a, c < 2^15 so each term < 2^31
+    lo = bf + ((mid & jnp.uint32(0xFFFF)) << 16)
+    carry = (lo < bf).astype(jnp.uint32)
+    hi = a * c + (mid >> 16) + carry
+    c2_lo = (lo >> 1) | ((hi & jnp.uint32(1)) << 31)
+    c2_hi = hi >> 1
+    return c2_lo.astype(jnp.int32), c2_hi.astype(jnp.int32)
+
+
+def _combine_kernel(d_ref, rep_ref, valid_ref, dm1_ref, lo_ref, hi_ref, tot_ref):
     k = pl.program_id(0)
     d = d_ref[...].astype(jnp.int32)
     rep = rep_ref[...] > 0
     valid = valid_ref[...] > 0
     live = valid & (d > 0)
     dm1 = jnp.where(live, d - 1, 0)
-    c2 = jnp.where(live & rep, d * (d - 1) // 2, 0)
+    lo, hi = choose2_limbs(jnp.where(live & rep, d, 0))
     dm1_ref[...] = dm1
-    c2_ref[...] = c2
-    part = jnp.sum(c2.astype(jnp.float32)).reshape(1, 1)
+    lo_ref[...] = lo
+    hi_ref[...] = hi
+    part = (
+        jnp.sum(lo.astype(jnp.uint32).astype(jnp.float32))
+        + jnp.sum(hi.astype(jnp.float32)) * jnp.float32(2.0**32)
+    ).reshape(1, 1)
 
     @pl.when(k == 0)
     def _init():
@@ -59,14 +90,16 @@ def butterfly_combine_pallas(
     valid: jax.Array,
     interpret: bool = True,
 ):
-    """Returns (dm1 int32 (n,), choose2 int32 (n,), total float32 ())."""
+    """Returns (dm1 int32 (n,), c2_lo int32 (n,), c2_hi int32 (n,),
+    total float32 ()). ``c2_lo``/``c2_hi`` are the 64-bit C(d, 2) limbs
+    (lo is the low word's bit pattern)."""
     n = d.shape[0]
     n_pad = ((n + TN - 1) // TN) * TN
     dp = jnp.pad(d.astype(jnp.int32), (0, n_pad - n))
     rp = jnp.pad(rep.astype(jnp.int32), (0, n_pad - n))
     vp = jnp.pad(valid.astype(jnp.int32), (0, n_pad - n))
     grid = (n_pad // TN,)
-    dm1, c2, tot = pl.pallas_call(
+    dm1, lo, hi, tot = pl.pallas_call(
         _combine_kernel,
         grid=grid,
         in_specs=[
@@ -77,9 +110,11 @@ def butterfly_combine_pallas(
         out_specs=[
             pl.BlockSpec((TN,), lambda k: (k,)),
             pl.BlockSpec((TN,), lambda k: (k,)),
+            pl.BlockSpec((TN,), lambda k: (k,)),
             pl.BlockSpec((1, 1), lambda k: (0, 0)),
         ],
         out_shape=[
+            jax.ShapeDtypeStruct((n_pad,), jnp.int32),
             jax.ShapeDtypeStruct((n_pad,), jnp.int32),
             jax.ShapeDtypeStruct((n_pad,), jnp.int32),
             jax.ShapeDtypeStruct((1, 1), jnp.float32),
@@ -91,4 +126,4 @@ def butterfly_combine_pallas(
         else None,
         interpret=interpret,
     )(dp, rp, vp)
-    return dm1[:n], c2[:n], tot[0, 0]
+    return dm1[:n], lo[:n], hi[:n], tot[0, 0]

@@ -27,12 +27,14 @@ from . import ref as _ref
 from .bucket_min import bucket_min_pallas
 from .butterfly_combine import butterfly_combine_pallas
 from .wedge_count import wedge_histogram_pallas
+from .wedge_fused import fused_count_tiles_pallas
 
 __all__ = [
     "interpret_default",
     "wedge_histogram",
     "butterfly_combine",
     "bucket_min",
+    "fused_count_tiles",
 ]
 
 
@@ -78,3 +80,36 @@ def bucket_min(
     if use_pallas:
         return bucket_min_pallas(counts, alive, interpret=_resolve(interpret))
     return _ref.bucket_min_ref(counts, alive)
+
+
+def fused_count_tiles(
+    tile_bounds,
+    offsets,
+    neighbors,
+    edge_src,
+    undirected_id,
+    w_off,
+    *,
+    tile_cap: int,
+    n_pad: int,
+    m: int,
+    direction: str = "low",
+    mode: str = "all",
+    use_pallas: bool = False,
+    interpret: Optional[bool] = None,
+):
+    """Zero-materialization fused counting over vertex-aligned wedge
+    tiles (``engine="fused_pallas"`` hot path; see ``wedge_fused``).
+    Returns (total int32 limbs (2,), per_vertex (n_pad,), per_edge (m,)).
+    """
+    kw = dict(
+        tile_cap=tile_cap, n_pad=n_pad, m=m, direction=direction, mode=mode
+    )
+    if use_pallas:
+        return fused_count_tiles_pallas(
+            tile_bounds, offsets, neighbors, edge_src, undirected_id, w_off,
+            interpret=_resolve(interpret), **kw,
+        )
+    return _ref.fused_count_tiles_ref(
+        tile_bounds, offsets, neighbors, edge_src, undirected_id, w_off, **kw
+    )

@@ -11,7 +11,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["wedge_histogram_ref", "butterfly_combine_ref", "bucket_min_ref"]
+__all__ = [
+    "wedge_histogram_ref",
+    "butterfly_combine_ref",
+    "bucket_min_ref",
+    "fused_count_tiles_ref",
+]
 
 
 def wedge_histogram_ref(
@@ -28,12 +33,22 @@ def wedge_histogram_ref(
 
 
 def butterfly_combine_ref(d: jax.Array, rep: jax.Array, valid: jax.Array):
+    """Mirror of the widened kernel: (dm1, c2_lo, c2_hi, total_f32).
+    C(d, 2) is exact over the full int32 ``d`` range via the shared
+    16-bit-limb multiply (``choose2_limbs``); the int64-truth parity
+    check lives in tests/test_kernels.py."""
+    from .butterfly_combine import choose2_limbs
+
     d = d.astype(jnp.int32)
     live = (valid.astype(jnp.int32) > 0) & (d > 0)
     rep = rep.astype(jnp.int32) > 0
     dm1 = jnp.where(live, d - 1, 0)
-    c2 = jnp.where(live & rep, d * (d - 1) // 2, 0)
-    return dm1, c2, jnp.sum(c2.astype(jnp.float32))
+    lo, hi = choose2_limbs(jnp.where(live & rep, d, 0))
+    tot = (
+        jnp.sum(lo.astype(jnp.uint32).astype(jnp.float32))
+        + jnp.sum(hi.astype(jnp.float32)) * jnp.float32(2.0**32)
+    )
+    return dm1, lo, hi, tot
 
 
 def bucket_min_ref(counts: jax.Array, alive: jax.Array) -> jax.Array:
@@ -43,3 +58,78 @@ def bucket_min_ref(counts: jax.Array, alive: jax.Array) -> jax.Array:
     return jnp.min(
         jnp.where(alive.astype(jnp.int32) > 0, counts.astype(jnp.int32), inf)
     )
+
+
+def fused_count_tiles_ref(
+    tile_bounds: jax.Array,
+    offsets: jax.Array,
+    neighbors: jax.Array,
+    edge_src: jax.Array,
+    undirected_id: jax.Array,
+    w_off: jax.Array,
+    *,
+    tile_cap: int,
+    n_pad: int,
+    m: int,
+    direction: str = "low",
+    mode: str = "all",
+):
+    """Oracle for ``wedge_fused.fused_count_tiles_pallas`` — same
+    vertex-aligned tile semantics (reconstruct, aggregate in-tile,
+    combine, accumulate partials) expressed with plain jnp scatter-adds
+    instead of one-hot MXU panels. Bit-identical integer outputs: the
+    kernel's f32 contractions are exact by the MAX_TILE_CAP contract."""
+    e_pad = int(neighbors.shape[0])
+    n_tiles = int(tile_bounds.shape[0])
+    tot = jnp.zeros((2,), jnp.int32)
+    vert = jnp.zeros((n_pad,), jnp.int32)
+    edge = jnp.zeros((m,), jnp.int32)
+    lid = jnp.arange(tile_cap, dtype=jnp.int32)
+    for t in range(n_tiles):
+        ws = tile_bounds[t, 0]
+        we = tile_bounds[t, 1]
+        wid = ws + lid
+        valid = wid < we
+        wc = jnp.minimum(wid, jnp.maximum(we - 1, 0))
+        e = jnp.searchsorted(w_off, wc, side="right").astype(jnp.int32) - 1
+        e = jnp.clip(e, 0, e_pad - 1)
+        j = wc - w_off[e]
+        cnt_e = w_off[e + 1] - w_off[e]
+        y = neighbors[e]
+        y_safe = jnp.minimum(y, n_pad - 1)
+        if direction == "low":
+            x1 = edge_src[e]
+            pos = offsets[y_safe + 1] - cnt_e + j
+            x2 = neighbors[jnp.clip(pos, 0, e_pad - 1)]
+        elif direction == "high":
+            x2 = edge_src[e]
+            pos = offsets[y_safe] + j
+            x1 = neighbors[jnp.clip(pos, 0, e_pad - 1)]
+        else:
+            raise ValueError(f"direction must be low|high, got {direction}")
+        pos = jnp.clip(pos, 0, e_pad - 1)
+        ka = jnp.where(valid, x1, -1)
+        kb = jnp.where(valid, x2, -2)
+        match = (ka[:, None] == ka[None, :]) & (kb[:, None] == kb[None, :])
+        d = jnp.sum(match, axis=1).astype(jnp.int32)
+        earlier = jnp.sum(
+            match & (lid[None, :] < lid[:, None]), axis=1
+        ).astype(jnp.int32)
+        rep = valid & (earlier == 0)
+        dm1 = jnp.where(valid, d - 1, 0)
+        c2 = jnp.where(rep, d * (d - 1) // 2, 0)
+        if mode in ("global", "all"):
+            part_u = jnp.sum(c2).astype(jnp.uint32)
+            lo_new = tot[0].astype(jnp.uint32) + part_u
+            carry = (lo_new < part_u).astype(jnp.int32)
+            tot = jnp.stack([lo_new.astype(jnp.int32), tot[1] + carry])
+        if mode in ("vertex", "all"):
+            oob = jnp.int32(n_pad)  # scatter drops out-of-bounds
+            vert = vert.at[jnp.where(rep, x1, oob)].add(c2)
+            vert = vert.at[jnp.where(rep, x2, oob)].add(c2)
+            vert = vert.at[jnp.where(valid, y, oob)].add(dm1)
+        if mode in ("edge", "all"):
+            oob = jnp.int32(m)
+            edge = edge.at[jnp.where(valid, undirected_id[e], oob)].add(dm1)
+            edge = edge.at[jnp.where(valid, undirected_id[pos], oob)].add(dm1)
+    return tot, vert, edge

@@ -1,0 +1,297 @@
+"""Pallas TPU kernel: zero-materialization fused butterfly counting.
+
+One grid step = one *vertex-aligned* tile of the flat wedge space. The
+kernel never sees a materialized wedge array: per tile it
+
+  1. reconstructs its slice of flat wedge ids in VMEM — the same
+     binary-search recovery as ``wedges.wedges_at`` (upper_bound on the
+     wedge-prefix array, then two CSR gathers),
+  2. aggregates the tile's endpoint-pair groups in VMEM via an
+     all-pairs key-match contraction on the MXU (group multiplicity
+     ``d`` = row sum of the match matrix; the group representative is
+     the first occurrence = zero earlier matches),
+  3. applies the C(d, 2) combine in-register, and
+  4. emits partial global / per-vertex / per-edge contributions through
+     weighted one-hot MXU matmuls, accumulated across sequential grid
+     steps directly in the output blocks.
+
+Peak live memory is O(tile): the six per-wedge vectors, the (tile, TC)
+match panel, and the (3·tile, TBV) scatter panel — nothing scales with
+the total wedge count W.
+
+Tile-alignment invariant (shared with ``wedges.plan_wedge_chunks``):
+flat wedge ids follow CSR slot order, so all wedges produced by one
+iterating endpoint are contiguous, and every endpoint-pair group lives
+entirely inside its iterating endpoint's range. Tile boundaries are
+therefore cut only at vertex boundaries — no group ever spans a tile,
+per-tile aggregation is exact, and per-tile contributions add. This is
+also what bounds the in-tile multiplicity: ``d <= tile_cap``.
+
+Precision contract (all outputs exact):
+  - ``tile_cap <= MAX_TILE_CAP`` (4096). Then per-tile
+    Σ C(d, 2) <= C(tile_cap, 2) < 2^23 and every f32 matmul column sum
+    stays <= 2^24 - 1, i.e. exactly representable. Enforced at trace
+    time.
+  - the global total accumulates across tiles as two uint32-style int32
+    limbs with carry (exact for totals < 2^63);
+  - per-vertex / per-edge outputs accumulate in int32 (callers wanting
+    wider counts use the pure-XLA fused flavor in ``core.count``).
+
+Off-TPU this runs in interpret mode like every kernel in this package
+(``kernels/ops`` backend dispatch); the in-kernel vector gathers and
+the full-CSR VMEM residency are sized for compiled-TPU validation on
+real hardware (ROADMAP open item).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+__all__ = ["fused_count_tiles_pallas", "MAX_TILE_CAP", "TC", "TBV"]
+
+MAX_TILE_CAP = 4096  # keeps every f32 one-hot contraction exact (< 2^24)
+TC = 512  # match-panel column tile
+TBV = 512  # scatter-panel bucket tile (vertex and edge outputs)
+
+
+def _round_up(x: int, to: int) -> int:
+    return ((max(int(x), 1) + to - 1) // to) * to
+
+
+def _weighted_scatter(out_ref, tgt, val, n_out):
+    """out[b] += Σ_i val[i] * [tgt[i] == b] via one-hot MXU panels.
+
+    ``tgt`` entries equal to ``n_out`` (the sentinel) match no bucket.
+    Exact: ``val`` < 2^23 and every column sum < 2^24 (module contract).
+    """
+    rows = tgt.shape[0]
+    ones = jnp.ones((8, rows), jnp.float32)
+    val_f = val.astype(jnp.float32)
+    for bt in range(n_out // TBV):
+        cols = (
+            jax.lax.broadcasted_iota(jnp.int32, (rows, TBV), 1) + bt * TBV
+        )
+        panel = jnp.where(tgt[:, None] == cols, val_f[:, None], 0.0)
+        part = jax.lax.dot_general(
+            ones,
+            panel,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (8, TBV); rows identical
+        out_ref[bt * TBV : (bt + 1) * TBV] += part[0].astype(jnp.int32)
+
+
+def _make_kernel(T, e_pad, n_pad, n_out, m_out, bs_steps, direction, mode):
+    do_vertex = mode in ("vertex", "all")
+    do_edge = mode in ("edge", "all")
+    do_global = mode in ("global", "all")
+
+    def kernel(bounds_ref, off_ref, nbr_ref, src_ref, uid_ref, woff_ref,
+               tot_ref, vert_ref, edge_ref):
+        t = pl.program_id(0)
+
+        @pl.when(t == 0)
+        def _init():
+            tot_ref[...] = jnp.zeros_like(tot_ref)
+            vert_ref[...] = jnp.zeros_like(vert_ref)
+            edge_ref[...] = jnp.zeros_like(edge_ref)
+
+        ws = bounds_ref[0, 0]
+        we = bounds_ref[0, 1]
+        woff = woff_ref[...]
+        nbr = nbr_ref[...]
+        src = src_ref[...]
+        off = off_ref[...]
+        uid = uid_ref[...]
+
+        # -- 1. in-VMEM wedge reconstruction (wedges_at recovery) -----
+        lid = jax.lax.broadcasted_iota(jnp.int32, (T, 1), 0).reshape(T)
+        wid = ws + lid
+        valid = wid < we
+        wc = jnp.minimum(wid, jnp.maximum(we - 1, 0))
+
+        def bs_body(_, carry):
+            lo, hi = carry
+            mid = (lo + hi) >> 1
+            take = (lo < hi) & (woff[mid] <= wc)
+            return (
+                jnp.where(take, mid + 1, lo),
+                jnp.where((lo < hi) & ~take, mid, hi),
+            )
+
+        lo0 = jnp.zeros((T,), jnp.int32)
+        hi0 = jnp.full((T,), woff.shape[0], jnp.int32)
+        ub, _ = jax.lax.fori_loop(0, bs_steps, bs_body, (lo0, hi0))
+        e = jnp.clip(ub - 1, 0, e_pad - 1)
+        j = wc - woff[e]
+        cnt_e = woff[e + 1] - woff[e]
+        y = nbr[e]
+        y_safe = jnp.minimum(y, n_pad - 1)
+        if direction == "low":
+            x1 = src[e]
+            pos = off[y_safe + 1] - cnt_e + j
+            x2 = nbr[jnp.clip(pos, 0, e_pad - 1)]
+        else:
+            x2 = src[e]
+            pos = off[y_safe] + j
+            x1 = nbr[jnp.clip(pos, 0, e_pad - 1)]
+        pos = jnp.clip(pos, 0, e_pad - 1)
+
+        # -- 2. tile-local aggregation: all-pairs key match on MXU ----
+        # invalid lanes get a sentinel key that never equals a real
+        # (x1 in [0, n_pad)) key, so they only match each other — and
+        # their lanes are masked out of every contribution below.
+        ka = jnp.where(valid, x1, -1)
+        kb = jnp.where(valid, x2, -2)
+        ones_tc = jnp.ones((TC, 8), jnp.float32)
+        d8 = jnp.zeros((T, 8), jnp.float32)
+        lt8 = jnp.zeros((T, 8), jnp.float32)
+        row_id = lid
+        for ct in range(T // TC):
+            c0 = ct * TC
+            a_j = jax.lax.dynamic_slice(ka, (c0,), (TC,))
+            b_j = jax.lax.dynamic_slice(kb, (c0,), (TC,))
+            match = (ka[:, None] == a_j[None, :]) & (kb[:, None] == b_j[None, :])
+            match_f = match.astype(jnp.float32)
+            col_id = (
+                jax.lax.broadcasted_iota(jnp.int32, (T, TC), 1) + c0
+            )
+            lt_f = jnp.where(col_id < row_id[:, None], match_f, 0.0)
+            d8 += jax.lax.dot_general(
+                match_f, ones_tc, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            lt8 += jax.lax.dot_general(
+                lt_f, ones_tc, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+        d = d8[:, 0].astype(jnp.int32)  # d <= T <= MAX_TILE_CAP: exact
+        rep = valid & (lt8[:, 0].astype(jnp.int32) == 0)
+
+        # -- 3. in-register combine (exact int32: d*(d-1) < 2^24) -----
+        dm1 = jnp.where(valid, d - 1, 0)
+        c2 = jnp.where(rep, d * (d - 1) // 2, 0)
+
+        # -- 4. partial contributions -------------------------------
+        if do_global:
+            part_u = jnp.sum(c2).astype(jnp.uint32)
+            lo_u = tot_ref[0, 0].astype(jnp.uint32)
+            lo_new = lo_u + part_u
+            carry = (lo_new < part_u).astype(jnp.int32)
+            tot_ref[0, 0] = lo_new.astype(jnp.int32)
+            tot_ref[0, 1] = tot_ref[0, 1] + carry
+        if do_vertex:
+            sent = jnp.int32(n_out)
+            tgt = jnp.concatenate([
+                jnp.where(rep, x1, sent),
+                jnp.where(rep, x2, sent),
+                jnp.where(valid, y, sent),
+            ])
+            val = jnp.concatenate([c2, c2, dm1])
+            _weighted_scatter(vert_ref, tgt, val, n_out)
+        if do_edge:
+            sent = jnp.int32(m_out)
+            tgt = jnp.concatenate([
+                jnp.where(valid, uid[e], sent),
+                jnp.where(valid, uid[pos], sent),
+            ])
+            val = jnp.concatenate([dm1, dm1])
+            _weighted_scatter(edge_ref, tgt, val, m_out)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("tile_cap", "n_pad", "m", "direction", "mode",
+                     "interpret"),
+)
+def fused_count_tiles_pallas(
+    tile_bounds: jax.Array,  # (n_tiles, 2) int32 per-tile [ws, we)
+    offsets: jax.Array,  # (n_pad + 1,) int32 CSR
+    neighbors: jax.Array,  # (e_pad,) int32
+    edge_src: jax.Array,  # (e_pad,) int32
+    undirected_id: jax.Array,  # (e_pad,) int32
+    w_off: jax.Array,  # (e_pad + 1,) int32 wedge prefix
+    *,
+    tile_cap: int,
+    n_pad: int,
+    m: int,
+    direction: str = "low",
+    mode: str = "all",
+    interpret: bool = True,
+):
+    """Fused tiled butterfly counting over vertex-aligned wedge tiles.
+
+    Returns ``(total_limbs int32 (2,), per_vertex int32 (n_pad,),
+    per_edge int32 (m,))`` — total_limbs holds (lo, hi) uint32-style
+    words of the exact global count; recombine with
+    ``core.count._combine_limbs``. Modes not requested by ``mode``
+    come back as zeros.
+    """
+    if direction not in ("low", "high"):
+        raise ValueError(f"direction must be low|high, got {direction}")
+    if mode not in ("global", "vertex", "edge", "all"):
+        raise ValueError(f"bad mode {mode}")
+    if tile_cap % TC != 0:
+        raise ValueError(
+            f"tile_cap must be a multiple of TC={TC}, got {tile_cap} — "
+            "the match-panel column loop requires it (callers pad the "
+            "planned chunk_cap up; see core.count)"
+        )
+    if tile_cap > MAX_TILE_CAP:
+        raise ValueError(
+            f"tile_cap {tile_cap} exceeds MAX_TILE_CAP {MAX_TILE_CAP} — "
+            "the f32 one-hot contractions would lose exactness; use the "
+            "pure-XLA fused engine for larger tiles"
+        )
+    T = int(tile_cap)
+    e_pad = int(neighbors.shape[0])
+    n_tiles = int(tile_bounds.shape[0])
+    n_out = _round_up(n_pad, TBV)
+    m_out = _round_up(m, TBV)
+    bs_steps = max(1, int(np.ceil(np.log2(max(e_pad + 1, 2)))) + 1)
+    kernel = _make_kernel(
+        T, e_pad, n_pad, n_out, m_out, bs_steps, direction, mode
+    )
+    full = lambda arr: pl.BlockSpec(arr.shape, lambda t: (0,))  # noqa: E731
+    tot, vert, edge = pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda t: (t, 0)),
+            full(offsets),
+            full(neighbors),
+            full(edge_src),
+            full(undirected_id),
+            full(w_off),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 2), lambda t: (0, 0)),
+            pl.BlockSpec((n_out,), lambda t: (0,)),
+            pl.BlockSpec((m_out,), lambda t: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, 2), jnp.int32),
+            jax.ShapeDtypeStruct((n_out,), jnp.int32),
+            jax.ShapeDtypeStruct((m_out,), jnp.int32),
+        ],
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("arbitrary",))
+        )
+        if not interpret
+        else None,
+        interpret=interpret,
+    )(
+        tile_bounds.astype(jnp.int32),
+        offsets.astype(jnp.int32),
+        neighbors.astype(jnp.int32),
+        edge_src.astype(jnp.int32),
+        undirected_id.astype(jnp.int32),
+        w_off.astype(jnp.int32),
+    )
+    return tot[0], vert[:n_pad], edge[:m]

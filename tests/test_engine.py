@@ -77,12 +77,14 @@ def test_mode_all_equals_three_single_modes(engine):
     assert np.array_equal(ra.per_edge, re_.per_edge)
 
 
-def test_mode_all_rejected_for_batch():
+def test_batch_requires_xla_engine():
+    """Batch aggregations fuse their own accumulation: kernel/fused
+    engines are rejected (mode="all" is supported since PR 3 — see
+    tests/test_fused.py)."""
     g = rand_graph(8, 8, 20, 0)
-    with pytest.raises(ValueError, match="batch"):
-        count_butterflies(g, aggregation="batch", mode="all")
-    with pytest.raises(ValueError, match="engine"):
-        count_butterflies(g, aggregation="batch", engine="pallas")
+    for engine in ("pallas", "fused", "fused_pallas"):
+        with pytest.raises(ValueError, match="engine"):
+            count_butterflies(g, aggregation="batch", engine=engine)
 
 
 @pytest.mark.parametrize("agg", ["sort", "hash"])
@@ -148,10 +150,10 @@ def test_hash_overflow_falls_back_in_graph():
     assert np.array_equal(np.asarray(be), pe)
 
 
-def test_pallas_choose2_overflow_guard():
-    """Group multiplicities >= 2^16 overflow the combine kernel's int32
-    C(d,2); the in-graph guard must fall back to the exact count-dtype
-    computation instead of returning wrapped counts."""
+def test_pallas_choose2_wide_multiplicities_stay_on_kernel():
+    """Group multiplicities >= 2^16 used to trip an in-graph fallback
+    to the exact count-dtype path; the widened two-limb combine kernel
+    now computes them exactly on the kernel (PR 1 follow-up)."""
     import jax.numpy as jnp
     from jax.experimental import enable_x64
 
@@ -170,12 +172,19 @@ def test_pallas_choose2_overflow_guard():
         )
 
     with enable_x64():
-        big = 70_000  # C(big, 2) > int32 max
-        g = groups_with([big, 3, 9, 0], [True, True, False, False])
+        big = 70_000  # C(big, 2) > int32 max -> needs the high limb
+        huge = 1 << 20  # C(huge, 2) ~ 2^39
+        g = groups_with([big, 3, huge, 9, 0], [True, True, True, False, False])
         got = np.asarray(_group_choose2(g, jnp.int64, "pallas"))
-        want = np.array([big * (big - 1) // 2, 3, 0, 0], np.int64)
+        want = np.array(
+            [big * (big - 1) // 2, 3, huge * (huge - 1) // 2, 0, 0], np.int64
+        )
         assert np.array_equal(got, want)
-        # small multiplicities stay on the kernel and agree with exact
+        # and the kernel path agrees bitwise with the exact xla path
+        assert np.array_equal(
+            got, np.asarray(_group_choose2(g, jnp.int64, "xla"))
+        )
+        # small multiplicities: likewise bitwise-equal
         g2 = groups_with([5, 2, 1, 0], [True, True, True, False])
         got2 = np.asarray(_group_choose2(g2, jnp.int64, "pallas"))
         assert np.array_equal(
