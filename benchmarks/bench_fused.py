@@ -145,11 +145,10 @@ def write_json(
             })
         else:
             try:
-                # int32: the kernel's documented accumulation dtype
-                # (64-bit dtypes trigger the wraparound warning)
+                # the kernel accumulates every output as two-limb int32
+                # pairs, so the bench's int64 count dtype is exact
                 t_fp = _time_count(
                     rg, repeats=repeats, mode="all", engine="fused_pallas",
-                    count_dtype=jnp.int32,
                 )
                 add_run(gname, "fused_pallas", "kernel", "all", t_fp, wedges)
             except ValueError as e:

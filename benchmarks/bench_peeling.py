@@ -2,12 +2,20 @@
 wedge-aggregation methods; reports ρ (peeling complexity) per graph.
 
 ``write_json`` additionally produces the machine-readable
-``BENCH_peeling.json`` trajectory comparing the host round loop against
-the device-resident ``engine="device"`` while_loop: per (graph, algo,
-engine, aggregation) wall time, round count ρ, and the number of
-blocking host syncs (``jax.device_get`` calls) the decomposition
-performs — the quantity the device engine exists to eliminate (one
-final fetch vs one per round).
+``BENCH_peeling.json`` trajectory (schema v2) comparing:
+
+  - the host round loop vs the device-resident ``engine="device"``
+    while_loop (wall time, round count ρ, blocking host syncs);
+  - the **fused** tile-streamed frontier subtract vs the PR 2
+    **materializing** expansion (``subtract=`` axis), including
+    compiled peak-temp-memory bytes for both device programs per
+    (graph, algo) — the O(tile) vs O(frontier) story in numbers;
+  - the Julienne-style **bucketed** decrease-key vs the PR 2
+    scatter + per-round ``bucket_min`` (``decrease_key=`` axis);
+  - the fixed vs **adaptive** capacity schedule (tail-round cost).
+
+``peel_wings`` now has its own engine rows (the PR 4 device engine) in
+the same format.
 """
 from __future__ import annotations
 
@@ -16,14 +24,19 @@ import json
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from .common import emit, timeit
+from .common import emit
 
 from repro.core import count_butterflies
 from repro.core.count import default_count_dtype
 from repro.core.peel import (
-    PEEL_ENGINES,
+    _csr,
+    _level2_totals,
+    _peel_tips_device,
+    _pow2_pad,
+    _stored_wedge_csr,
     peel_tips,
     peel_tips_stored,
     peel_wings,
@@ -35,24 +48,76 @@ PEEL_GRAPHS = {
     "peel_medium": lambda: powerlaw_bipartite(3_000, 2_500, 18_000, seed=8),
 }
 
-# Off-TPU the device round loop runs bucket_min in interpret mode and
-# pays O(frontier cap) redundant lanes per round on a CPU backend —
-# rows beyond this budget (or with the 32-probe in-loop hash table)
-# would time the interpreter, not the engine. Same policy as
-# bench_counting's pallas rows: skip visibly, never silently.
+# Off-TPU, decrease_key="scatter" rows run the bucket_min kernel in
+# interpret mode once per round and pay O(frontier cap) redundant lanes
+# on a CPU backend — rows beyond this budget (or with the 32-probe
+# in-loop hash table) would time the interpreter, not the engine. Same
+# policy as bench_counting's pallas rows: skip visibly, never silently.
 INTERPRET_FRONTIER_BUDGET = 1 << 18
+# decrease_key="bucket" rows run no interpret-mode kernel (the
+# dispatcher serves the jnp reference off-TPU), so they are gated only
+# by total expansion work.
+BUCKET_WORK_BUDGET = 1 << 22
+
+# Device-engine variants: (subtract, decrease_key, capacity_schedule).
+# (materialize, scatter, fixed) is the PR 2 baseline; (fused, scatter)
+# isolates the fused-vs-materializing subtract; (fused, bucket) is the
+# PR 4 default; the adaptive row shows the tail-round capacity win.
+DEVICE_VARIANTS = (
+    ("materialize", "scatter", "fixed"),
+    ("fused", "scatter", "fixed"),
+    ("fused", "bucket", "fixed"),
+    ("fused", "bucket", "adaptive"),
+)
 
 
-def _device_row_ok(g, side: int, agg: str) -> tuple[bool, str]:
+def _tip_workloads(g, side: int):
+    """Worst-case expansion totals used for row gating (mirrors the
+    device planner): level-1 (== m) and level-2 (Σ other-side deg²)."""
+    du, dv = g.degrees()
+    other = du if side == 1 else dv
+    lvl2 = int((other.astype(np.int64) ** 2).sum())
+    return int(g.m), lvl2
+
+
+def _device_row_ok(g, side, agg, subtract, decrease_key):
     if jax.default_backend() == "tpu":
         return True, ""
     if agg != "sort":
         return False, "interpret-mode budget (in-loop hash table)"
-    du, dv = g.degrees()
-    other = du if side == 1 else dv
-    cap2 = int((other.astype(np.int64) ** 2).sum())
-    if cap2 > INTERPRET_FRONTIER_BUDGET:
-        return False, f"interpret-mode budget (frontier cap2={cap2})"
+    _, lvl2 = _tip_workloads(g, side)
+    if decrease_key == "scatter":
+        if lvl2 > INTERPRET_FRONTIER_BUDGET:
+            return False, f"interpret-mode budget (frontier cap2={lvl2})"
+        return True, ""
+    if lvl2 > BUCKET_WORK_BUDGET:
+        return False, f"work budget (lvl2={lvl2})"
+    return True, ""
+
+
+def _wings_row_ok(g, subtract, decrease_key):
+    if jax.default_backend() == "tpu":
+        return True, ""
+    off, nbr, _ = _csr(g)
+    deg = np.diff(off)
+    ev = (g.edges[:, 1] + g.n_u).astype(np.int64)
+    lvl1 = int(deg[ev].sum())
+    # the wing loop re-expands its level-1 buffer every round (only the
+    # triple space is tiled), so CPU rows are bounded by cap1 x rho_e
+    if lvl1 > INTERPRET_FRONTIER_BUDGET:
+        return False, f"work budget (per-round level-1 cap1={lvl1})"
+    if subtract == "materialize":
+        eu = g.edges[:, 0].astype(np.int64)
+        a_rep = np.repeat(np.arange(g.m), deg[ev])
+        pos = np.concatenate([
+            np.arange(s, s + l) for s, l in zip(off[ev], deg[ev])
+        ]) if lvl1 else np.empty(0, np.int64)
+        u2 = nbr[pos]
+        w = np.minimum(deg[eu[a_rep]], deg[u2])
+        w[u2 == eu[a_rep]] = 0
+        lvl2 = int(w.sum())
+        if lvl2 > INTERPRET_FRONTIER_BUDGET:
+            return False, f"interpret-mode budget (triple cap2={lvl2})"
     return True, ""
 
 
@@ -91,20 +156,121 @@ def _tip_inputs(g):
     return side, np.asarray(rv.per_u if side == 0 else rv.per_v)
 
 
+def _device_temp_bytes(g, side: int, stored: bool) -> dict:
+    """Compiled peak-temp bytes of the device tip program: fused tile
+    subtract vs the PR 2 materializing expansion (same caps planning as
+    ``peel._peel_tips_device_run``)."""
+    n_side = g.n_u if side == 0 else g.n_v
+    base = 0 if side == 0 else g.n_u
+    if stored:
+        woff, w_u2 = _stored_wedge_csr(g, side)
+        rows = np.diff(woff)
+        lvl2 = int(woff[-1])
+        cap1 = 128
+        off_d = jnp.asarray(woff, jnp.int32)
+        nbr_d = jnp.asarray(w_u2 if lvl2 else np.zeros(1), jnp.int32)
+        work1 = jnp.zeros(n_side, jnp.int32)
+        work2 = jnp.asarray(rows.astype(np.int32))
+        max_row = int(rows.max(initial=0))
+    else:
+        off, nbr, _ = _csr(g)
+        deg = np.diff(off)
+        w2 = _level2_totals(off, nbr, base, n_side)
+        lvl2 = int(w2.sum())
+        cap1 = _pow2_pad(int(deg[base : base + n_side].sum()))
+        off_d = jnp.asarray(off, jnp.int32)
+        nbr_d = jnp.asarray(nbr, jnp.int32)
+        work1 = jnp.asarray(deg[base : base + n_side].astype(np.int32))
+        work2 = jnp.asarray(w2.astype(np.int32))
+        max_row = int(w2.max(initial=0))
+    from repro.core.peel import _DEFAULT_TILE_TARGET
+
+    tile_cap = _pow2_pad(max(min(_DEFAULT_TILE_TARGET, max(lvl2, 1)),
+                             2 * max_row))
+    dtype = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+    st = (
+        jnp.zeros(n_side, dtype),
+        jnp.ones((n_side,), jnp.bool_),
+        jnp.zeros((n_side,), dtype),
+        jnp.int32(0),
+        jnp.int32(0),
+        jnp.zeros((n_side,), jnp.int32),
+        jnp.array(False),
+        jnp.int32(0),
+        jnp.int32(0),
+        jnp.int32(0),
+    )
+    common = dict(
+        aggregation="sort", cap1=cap1, n_side=n_side, stored=stored,
+        hash_bits=None, decrease_key="bucket", use_kernel=False,
+        adaptive=False,
+    )
+    fused = _peel_tips_device.lower(
+        off_d, nbr_d, jnp.int32(base), work1, work2, st,
+        cap2=128, tile_cap=tile_cap, subtract="fused", **common,
+    ).compile().memory_analysis()
+    mat = _peel_tips_device.lower(
+        off_d, nbr_d, jnp.int32(base), work1, work2, st,
+        cap2=_pow2_pad(lvl2), tile_cap=tile_cap, subtract="materialize",
+        **common,
+    ).compile().memory_analysis()
+    return {
+        "frontier_wedges": lvl2,
+        "tile_cap": int(tile_cap),
+        "fused_temp_bytes": int(fused.temp_size_in_bytes),
+        "materialized_temp_bytes": int(mat.temp_size_in_bytes),
+        "temp_ratio": (
+            int(mat.temp_size_in_bytes)
+            / max(int(fused.temp_size_in_bytes), 1)
+        ),
+    }
+
+
 def write_json(path, graphs=("peel_small",), repeats: int = 1) -> dict:
-    """Host-vs-device peeling trajectory (rounds, wall time, host-sync
-    count per decomposition). Wall times exclude the butterfly counting
-    pass (counts are precomputed once per graph — the decomposition loop
-    is what the engines differ on). ``path=None`` builds the payload
-    without writing a file (the CSV emitter in ``main`` reuses it so
-    the sweep runs exactly once)."""
+    """Peeling engine trajectory (schema v2): per (graph, algo, engine,
+    aggregation, subtract, decrease_key, schedule) wall time, rounds,
+    and host-sync count; compiled fused-vs-materializing peak-temp
+    bytes per (graph, algo); derived fused-vs-PR2 speedups. Wall times
+    exclude the butterfly counting pass (counts are precomputed once
+    per graph — the decomposition loop is what the engines differ on).
+    ``path=None`` builds the payload without writing a file."""
     payload: dict = {
-        "schema": "bench_peeling/v1",
+        "schema": "bench_peeling/v2",
         "backend": jax.default_backend(),
         "graphs": {},
         "runs": [],
+        "memory": [],
+        "derived": {},
         "skipped": [],
     }
+
+    def add_row(gname, algo, engine, agg, subtract, decrease_key,
+                schedule, res, syncs, wall):
+        payload["runs"].append({
+            "graph": gname,
+            "algo": algo,
+            "engine": engine,
+            "aggregation": agg,
+            "subtract": subtract,
+            "decrease_key": decrease_key,
+            "schedule": schedule,
+            "rounds": int(res.rounds),
+            "max_number": int(res.numbers.max(initial=0)),
+            "host_syncs": syncs,
+            "wall_s": wall,
+        })
+
+    def skip(gname, algo, engine, agg, subtract, decrease_key, reason):
+        payload["skipped"].append({
+            "graph": gname,
+            "algo": algo,
+            "engine": engine,
+            "aggregation": agg,
+            "subtract": subtract,
+            "decrease_key": decrease_key,
+            "reason": reason,
+        })
+
     for gname in graphs:
         g = PEEL_GRAPHS[gname]()
         side, counts = _tip_inputs(g)
@@ -115,35 +281,97 @@ def write_json(path, graphs=("peel_small",), repeats: int = 1) -> dict:
             ("peel_tips", peel_tips),
             ("peel_tips_stored", peel_tips_stored),
         ):
-            for engine in PEEL_ENGINES:
-                for agg in ("sort", "hash"):
-                    if engine == "device":
-                        ok, reason = _device_row_ok(g, side, agg)
-                        if not ok:
-                            payload["skipped"].append({
-                                "graph": gname,
-                                "algo": algo,
-                                "engine": engine,
-                                "aggregation": agg,
-                                "reason": reason,
-                            })
-                            continue
+            # host engine: fused (default) vs materializing subtract
+            for agg in ("sort", "hash"):
+                for subtract in ("fused", "materialize"):
+                    if agg == "hash" and subtract == "materialize":
+                        continue  # matrix corner adds no information
                     run = lambda: fn(  # noqa: E731
                         g, counts=counts, side=side, aggregation=agg,
-                        engine=engine,
+                        engine="host", subtract=subtract,
+                    )
+                    res, syncs = _count_host_syncs(run)
+                    t = _time_warm(run, repeats=repeats)
+                    add_row(gname, algo, "host", agg, subtract, "host",
+                            "fixed", res, syncs, t)
+            # device engine: the variant matrix
+            for agg in ("sort", "hash"):
+                for subtract, dk, schedule in DEVICE_VARIANTS:
+                    if agg == "hash" and (subtract, dk, schedule) != (
+                            "fused", "bucket", "fixed"):
+                        continue
+                    ok, reason = _device_row_ok(g, side, agg, subtract, dk)
+                    if not ok:
+                        skip(gname, algo, "device", agg, subtract, dk,
+                             reason)
+                        continue
+                    run = lambda: fn(  # noqa: E731
+                        g, counts=counts, side=side, aggregation=agg,
+                        engine="device", subtract=subtract,
+                        decrease_key=dk, capacity_schedule=schedule,
                     )
                     res, syncs = _count_host_syncs(run)  # also warms jit
                     t = _time_warm(run, repeats=repeats)
-                    payload["runs"].append({
-                        "graph": gname,
-                        "algo": algo,
-                        "engine": engine,
-                        "aggregation": agg,
-                        "rounds": int(res.rounds),
-                        "max_tip": int(res.numbers.max(initial=0)),
-                        "host_syncs": syncs,
-                        "wall_s": t,
-                    })
+                    add_row(gname, algo, "device", agg, subtract, dk,
+                            schedule, res, syncs, t)
+            payload["memory"].append({
+                "graph": gname,
+                "algo": algo,
+                **_device_temp_bytes(g, side, algo == "peel_tips_stored"),
+            })
+
+        # PEEL-E: host loop + the PR 4 device engine
+        re_ = count_butterflies(
+            g, mode="edge", count_dtype=default_count_dtype()
+        )
+        ecounts = np.asarray(re_.per_edge)
+        run = lambda: peel_wings(g, counts=ecounts)  # noqa: E731
+        res, syncs = _count_host_syncs(run)
+        t = _time_warm(run, repeats=repeats)
+        add_row(gname, "peel_wings", "host", "sort", "fused", "host",
+                "fixed", res, syncs, t)
+        for subtract, dk, schedule in DEVICE_VARIANTS:
+            ok, reason = _wings_row_ok(g, subtract, dk)
+            if not ok:
+                skip(gname, "peel_wings", "device", "sort", subtract, dk,
+                     reason)
+                continue
+            run = lambda: peel_wings(  # noqa: E731
+                g, counts=ecounts, engine="device", subtract=subtract,
+                decrease_key=dk, capacity_schedule=schedule,
+            )
+            res, syncs = _count_host_syncs(run)
+            t = _time_warm(run, repeats=repeats)
+            add_row(gname, "peel_wings", "device", "sort", subtract, dk,
+                    schedule, res, syncs, t)
+
+    # derived: the ISSUE 4 acceptance comparisons (device, sort rows)
+    def _wall(gname, algo, subtract, dk, schedule="fixed"):
+        for r in payload["runs"]:
+            if (r["graph"], r["algo"], r["engine"], r["aggregation"],
+                    r["subtract"], r["decrease_key"], r["schedule"]) == (
+                    gname, algo, "device", "sort", subtract, dk, schedule):
+                return r["wall_s"]
+        return None
+
+    for gname in graphs:
+        for algo in ("peel_tips", "peel_tips_stored", "peel_wings"):
+            pr2 = _wall(gname, algo, "materialize", "scatter")
+            f_sc = _wall(gname, algo, "fused", "scatter")
+            f_bk = _wall(gname, algo, "fused", "bucket")
+            f_ad = _wall(gname, algo, "fused", "bucket", "adaptive")
+            d = {}
+            if pr2 and f_sc:
+                d["fused_vs_materializing_speedup"] = pr2 / f_sc
+            if f_sc and f_bk:
+                d["bucketed_vs_scatter_speedup"] = f_sc / f_bk
+            if pr2 and f_bk:
+                d["fused_default_vs_pr2_speedup"] = pr2 / f_bk
+                d["fused_no_slower_than_pr2"] = f_bk <= pr2
+            if f_bk and f_ad:
+                d["adaptive_vs_fixed_speedup"] = f_bk / f_ad
+            if d:
+                payload["derived"][f"{gname}/{algo}"] = d
     if path:
         with open(path, "w") as f:
             json.dump(payload, f, indent=2)
@@ -156,7 +384,7 @@ def main(argv=None):
     ap.add_argument("--graphs", nargs="*", default=list(PEEL_GRAPHS))
     ap.add_argument(
         "--json", default=None, metavar="PATH",
-        help="also write the BENCH_peeling.json host-vs-device trajectory",
+        help="also write the BENCH_peeling.json engine trajectory",
     )
     args = ap.parse_args(argv)
     # one sweep: the JSON payload is the source of truth, CSV rows are
@@ -164,29 +392,26 @@ def main(argv=None):
     payload = write_json(args.json, graphs=tuple(args.graphs))
     for r in payload["runs"]:
         emit(
-            f"{r['algo']}/{r['graph']}/{r['aggregation']}/{r['engine']}",
+            f"{r['algo']}/{r['graph']}/{r['aggregation']}/{r['engine']}/"
+            f"{r['subtract']}/{r['decrease_key']}/{r['schedule']}",
             r["wall_s"] * 1e6,
-            f"rho_v={r['rounds']},max_tip={r['max_tip']},"
+            f"rho={r['rounds']},max={r['max_number']},"
             f"syncs={r['host_syncs']}",
         )
     for s in payload["skipped"]:
         emit(
-            f"{s['algo']}/{s['graph']}/{s['aggregation']}/{s['engine']}",
+            f"{s['algo']}/{s['graph']}/{s['aggregation']}/{s['engine']}/"
+            f"{s['subtract']}/{s['decrease_key']}",
             -1.0,
             f"SKIPPED:{s['reason']}",
         )
-    # PEEL-E stays host-driven (kernel extract-min, no engine knob yet)
-    for gname in args.graphs:
-        g = PEEL_GRAPHS[gname]()
-        re_ = count_butterflies(
-            g, mode="edge", count_dtype=default_count_dtype()
-        )
-        res = peel_wings(g, counts=re_.per_edge)
-        t = timeit(lambda: peel_wings(g, counts=re_.per_edge), repeats=1)
+    for row in payload["memory"]:
         emit(
-            f"peel_wings/{gname}",
-            t * 1e6,
-            f"rho_e={res.rounds},max_wing={int(res.numbers.max(initial=0))}",
+            f"{row['algo']}/{row['graph']}/temp_bytes",
+            0.0,
+            f"fused={row['fused_temp_bytes']},"
+            f"materialized={row['materialized_temp_bytes']},"
+            f"ratio={row['temp_ratio']:.1f}",
         )
 
 

@@ -20,17 +20,30 @@ rounds / wall time / host-sync counts) so future PRs have trajectories
 to compare against.
 
 ``python -m benchmarks.run [section ...] [--quick]``
+
+``python -m benchmarks.run all`` is the JSON aggregator: it runs the
+counting + fused + peeling sections and refreshes all three
+``BENCH_*.json`` baselines in one invocation (the other sections print
+CSV only and are excluded — add them explicitly if wanted).
 """
 import argparse
 import sys
 
 SECTIONS = ("counting", "fused", "ranking", "sparsify", "peeling",
             "kernels", "distributed")
+# the sections that write machine-readable BENCH_*.json baselines;
+# `python -m benchmarks.run all` runs exactly these
+JSON_SECTIONS = ("counting", "fused", "peeling")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("sections", nargs="*", default=list(SECTIONS))
+    ap.add_argument(
+        "sections", nargs="*", default=list(SECTIONS),
+        help="sections to run; the special value 'all' expands to the "
+             "three BENCH_*.json-writing sections "
+             f"({', '.join(JSON_SECTIONS)})",
+    )
     ap.add_argument("--quick", action="store_true",
                     help="small graphs only (CI)")
     ap.add_argument("--json-out", default="BENCH_counting.json",
@@ -44,6 +57,11 @@ def main() -> None:
                          "(empty string disables)")
     args = ap.parse_args()
     sections = args.sections or list(SECTIONS)
+    if "all" in sections:
+        # the aggregator: counting + fused + peeling, refreshing all
+        # three BENCH_*.json trajectories in one pass
+        sections = [s for s in sections if s != "all"]
+        sections += [s for s in JSON_SECTIONS if s not in sections]
     print("name,us_per_call,derived")
     if "counting" in sections:
         from . import bench_counting

@@ -78,7 +78,6 @@ x64 (``jax.config.update("jax_enable_x64", True)``) and pass
 from __future__ import annotations
 
 import functools
-import warnings
 from typing import NamedTuple, Optional
 
 import jax
@@ -256,6 +255,50 @@ def _accumulate(
     return jnp.sum(g_add).astype(dtype), buf[: dg.n_pad], buf[dg.n_pad :]
 
 
+def _fused_tile_apply(
+    w: Wedges,
+    aggregation: str,
+    consume,
+    engine: str = "xla",
+    hash_bits: Optional[int] = None,
+    dense_n: Optional[int] = None,
+):
+    """Aggregate ONE generated wedge tile and hand it to ``consume``.
+
+    ``consume(wedges, groups)`` turns the tile's endpoint-pair groups
+    into whatever the caller accumulates — butterfly counts here, the
+    C(d, 2) frontier *subtraction* in ``peel``'s fused tile loop (the
+    machinery is shared so both sides keep the identical aggregation
+    semantics). For ``aggregation="hash"`` the overflow fallback is
+    in-graph: a ``lax.cond`` re-aggregates the *same* materialized tile
+    with the sort strategy only when the bounded-probe table failed,
+    instead of a host-side ``bool(ok)`` sync + pipeline re-run.
+    ``dense_n`` sizes the ``histogram`` strategy's key space (counting
+    passes ``dg.n_pad``; peeling does not use histogram).
+
+    Returns ``(consume(...), ok)``.
+    """
+    if aggregation == "sort":
+        groups, ws = aggregate_sort(w)
+        return consume(ws, groups), jnp.array(True)
+    if aggregation == "histogram":
+        groups = aggregate_dense(w, dense_n, engine=engine)
+        return consume(w, groups), jnp.array(True)
+    if aggregation == "hash":
+        groups = aggregate_hash(w, table_bits=hash_bits, engine=engine)
+
+        def _hash_path(_):
+            return consume(w, groups)
+
+        def _sort_path(_):
+            g2, ws = aggregate_sort(w)
+            return consume(ws, g2)
+
+        out = jax.lax.cond(groups.ok, _hash_path, _sort_path, None)
+        return out, groups.ok
+    raise ValueError(f"bad aggregation {aggregation}")
+
+
 def _aggregate_and_accumulate(
     dg: DeviceGraph,
     w: Wedges,
@@ -265,32 +308,15 @@ def _aggregate_and_accumulate(
     engine: str,
     hash_bits: Optional[int] = None,
 ):
-    """Aggregate one (chunk of the) wedge stream and accumulate counts.
-
-    For ``aggregation="hash"`` the overflow fallback is in-graph: a
-    ``lax.cond`` re-aggregates the *same* materialized wedges with the
-    sort strategy only when the bounded-probe table failed, instead of
-    the old host-side ``bool(ok)`` sync + full pipeline re-run.
-    """
-    if aggregation == "sort":
-        groups, ws = aggregate_sort(w)
-        return _accumulate(dg, ws, groups, mode, dtype, engine), jnp.array(True)
-    if aggregation == "histogram":
-        groups = aggregate_dense(w, dg.n_pad, engine=engine)
-        return _accumulate(dg, w, groups, mode, dtype, engine), jnp.array(True)
-    if aggregation == "hash":
-        groups = aggregate_hash(w, table_bits=hash_bits, engine=engine)
-
-        def _hash_path(_):
-            return _accumulate(dg, w, groups, mode, dtype, engine)
-
-        def _sort_path(_):
-            g2, ws = aggregate_sort(w)
-            return _accumulate(dg, ws, g2, mode, dtype, engine)
-
-        out = jax.lax.cond(groups.ok, _hash_path, _sort_path, None)
-        return out, groups.ok
-    raise ValueError(f"bad aggregation {aggregation}")
+    """Aggregate one (chunk of the) wedge stream and accumulate counts."""
+    return _fused_tile_apply(
+        w,
+        aggregation,
+        lambda wv, gv: _accumulate(dg, wv, gv, mode, dtype, engine),
+        engine,
+        hash_bits,
+        dense_n=dg.n_pad,
+    )
 
 
 @functools.partial(
@@ -347,7 +373,10 @@ def _fused_tile_step(
     """Generate -> aggregate -> accumulate ONE vertex-aligned wedge
     tile ``[ws, we)`` and discard it — the fused counting step shared
     by the streaming engine here and the distributed per-device loop
-    (``distributed._count``). The tile-alignment invariant of
+    (``distributed._count``). The aggregation core (including the
+    in-graph hash-overflow sort fallback) is ``_fused_tile_apply``,
+    which the peeling engines' fused frontier subtract also streams
+    through (``peel``). The tile-alignment invariant of
     ``plan_wedge_chunks`` guarantees no endpoint-pair group spans the
     tile, so the per-tile counts add exactly."""
     wid = ws + jnp.arange(chunk_cap, dtype=jnp.int32)
@@ -570,17 +599,10 @@ def _count_fused_pallas(
 ):
     """Dispatch the wedge_fused Pallas kernel: host-planned vertex-
     aligned tile bounds in flat wedge-id space, one kernel launch.
-    The kernel accumulates per-vertex/per-edge counts in int32 and the
-    global total in two int32 limbs (recombined into ``dtype``)."""
-    if mode != "global" and jnp.dtype(dtype).itemsize >= 8:
-        warnings.warn(
-            "engine='fused_pallas' accumulates per-vertex/per-edge counts "
-            "in int32 inside the kernel; a 64-bit count_dtype widens the "
-            "returned array but not the accumulation, so counts >= 2^31 "
-            "wrap — use engine='fused' for 64-bit accumulation "
-            "(limb-widened kernel outputs are a ROADMAP follow-up)",
-            stacklevel=3,
-        )
+    Every kernel output — the global total and the per-vertex/per-edge
+    arrays — accumulates as two int32 limbs with carry, exact for
+    counts < 2^63; the limbs recombine into ``dtype`` here (a 32-bit
+    ``count_dtype`` keeps the low word, like every other engine)."""
     tile_cap = max(
         _FUSED_TC, ((chunk_cap + _FUSED_TC - 1) // _FUSED_TC) * _FUSED_TC
     )
@@ -611,13 +633,15 @@ def _count_fused_pallas(
         use_pallas=True,
     )
     total = _combine_limbs(tot[0], tot[1], dtype)
+    vert = _combine_limbs(vert[..., 0], vert[..., 1], dtype)
+    edge = _combine_limbs(edge[..., 0], edge[..., 1], dtype)
     if mode == "global":
         return total
     if mode == "vertex":
-        return vert.astype(dtype)
+        return vert
     if mode == "edge":
-        return edge.astype(dtype)
-    return total, vert.astype(dtype), edge.astype(dtype)
+        return edge
+    return total, vert, edge
 
 
 def count_from_ranked(

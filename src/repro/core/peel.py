@@ -1,7 +1,7 @@
 """Butterfly peeling: tip (vertex) and wing (edge) decomposition
 (paper §4.3, Algs. 5-7).
 
-Round structure (both engines):
+Round structure (all engines):
   κ <- max(κ, min butterfly count among alive)   [bucketing extract-min]
   A <- all alive with count <= κ                 [peel whole bucket]
   enumerate wedges/butterflies incident to A     [prefix-sum expansion
@@ -17,43 +17,86 @@ extract-min + batch decrease-key are preserved; Julienne's
 skip-empty-buckets optimization is inherent (min jumps gaps in O(1)
 rounds).
 
-Engines (``engine="host"|"device"`` on ``peel_tips`` /
-``peel_tips_stored``, mirroring the counting ``engine=`` knob):
+Engine matrix
+-------------
+Every decomposition — tips (PEEL-V, Alg. 5), stored-wedge tips
+(WPEEL-V, Alg. 7), and wings (PEEL-E, Alg. 6) — supports
+``engine="host"|"device"``:
 
   - **host** — the original host-driven loop: one blocking
     ``jax.device_get`` per round for extract-min + bucket selection,
     numpy prefix-sum wedge expansion, device aggregation/subtraction.
-    O(W) total expansion work across all rounds.
   - **device** — the whole round loop is one jitted
     ``jax.lax.while_loop``; nothing leaves the device until the final
-    ``PeelResult`` fetch (a single ``device_get``). Per round the body
-    (1) extract-mins via ``kernels.ops.bucket_min`` (Pallas kernel:
-    compiled Mosaic on TPU, interpret mode in CI — the same
-    backend-aware dispatch as the counting engine), (2) selects the
-    peel bucket with a masked compare, (3) expands the peeled
-    frontier's wedges from a device-resident padded CSR into
-    fixed-capacity buffers (``wedges.expand_ragged`` — the searchsorted
-    analogue of the host prefix-sum expansion; two-level for PEEL-V's
-    2-hop enumeration, single-level for WPEEL-V's stored-wedge CSR),
-    and (4) subtracts contributions with the shared hash/sort
-    aggregation. Frontier capacities are planned host-side from exact
-    totals (``plan_wedge_chunks``-style: Σ side degrees for level 1,
-    Σ deg² for level 2 / the stored-wedge total), optionally bounded by
-    ``max_frontier``; a too-small capacity raises an in-graph overflow
-    flag and the caller transparently re-runs the host path — never a
-    silent truncation. Counts at or beyond INT32_MAX also route to the
-    host engine (``bucket_min`` reduces in int32).
+    ``PeelResult`` fetch (a single ``device_get`` under the fixed
+    capacity schedule). Extract-min is the ``bucket_min`` Pallas
+    kernel, or the min carried out of the previous round's bucketed
+    decrease-key (see below).
 
-    Per-round work is O(cap) regardless of the actual frontier size —
-    the classic SPMD trade: redundant lanes buy zero host synchronizes
-    per round, which is what dominates peeling wall time on
-    accelerators (Lakhotia et al. 2021).
+and a ``subtract="fused"|"materialize"`` axis:
+
+  - **materialize** (the PR 2 behavior) — expand the round's whole
+    frontier wedge space into fixed-capacity buffers, aggregate once,
+    subtract once. Peak per-round temp is O(frontier capacity).
+  - **fused** (default) — stream the frontier wedge space through
+    iterating-endpoint-aligned tiles that are generated
+    (``wedges.ragged_slots_at`` recovery), aggregated tile-locally
+    through the *same* ``count._fused_tile_apply`` machinery as the
+    fused counting engine (in-graph hash-overflow sort fallback
+    included), subtracted, and discarded. Peak per-round temp is
+    O(tile) — asserted by the compiled ``memory_analysis()``
+    regression in tests — and per-round device work tracks the
+    *actual* frontier size instead of the planned worst-case
+    capacity. Tile boundaries cut only at peeled-vertex boundaries
+    (``wedges.aligned_tile_end``), the ``plan_wedge_chunks``
+    invariant, so no endpoint-pair group spans a tile and the per-tile
+    C(d, 2) subtractions are exact. For WPEEL-V this removes the
+    per-round frontier buffer entirely (tiles are recovered straight
+    from the stored-wedge CSR); PEEL-V keeps only its level-1 buffer
+    (O(Σ deg_side) = O(m)) and tiles the dominant level-2 space;
+    PEEL-E keeps level-1/level-2 and tiles the dominant per-butterfly
+    triple space.
+
+Further device-engine knobs:
+
+  - ``decrease_key="bucket"|"scatter"`` — "scatter" is the PR 2
+    one-scatter-per-round subtract plus a separate ``bucket_min``
+    reduction at the top of the next round. "bucket" (default) routes
+    each aggregated update batch through ``kernels.ops.bucket_update``,
+    the Julienne-style batched decrease-key: the decrements, the next
+    round's masked min, and the O(log n) geometric-bucket occupancy all
+    come out of ONE pass over the count array — the separate per-round
+    extract-min reduction disappears (the carried min seeds κ). Both
+    produce bitwise-identical numbers (integer scatter sums commute).
+    The Pallas kernel runs compiled on TPU; elsewhere the dispatcher
+    serves the jnp reference (off-TPU the per-round kernel interpreter
+    would dominate, the same policy as ``peel_wings``'s host
+    extract-min).
+  - ``capacity_schedule="fixed"|"adaptive"`` — "fixed" plans every
+    frontier capacity once from round-0 worst-case totals (one
+    ``device_get`` per decomposition). "adaptive" shrinks the planned
+    expansion buffers geometrically as the graph empties: the loop
+    carries exact remaining-work bounds (Σ per-vertex expansion totals
+    over alive), exits when the bound falls to a quarter of a planned
+    capacity, and re-enters with pow2-shrunk buffers — O(log cap)
+    segments, one ``device_get`` each, cutting the O(cap) redundant
+    lanes that dominate tail rounds. Results are bitwise-identical to
+    the fixed schedule (the carried state is exact).
+  - ``tile_budget`` — wedge budget per fused-subtract tile. The
+    default target is deliberately small (1024; the planner floors it
+    by the largest single-vertex expansion so tiles always align):
+    unlike counting, peeling pays the full tile shape every round, so
+    memory-derived budgets would dominate tail rounds.
+  - ``max_frontier`` bounds the materializing/level-1 expansion
+    buffers; a too-small capacity raises an in-graph overflow flag and
+    the caller transparently re-runs the host path — never a silent
+    truncation. Counts at or beyond INT32_MAX also route to the host
+    engine (``bucket_min`` reduces in int32).
 
 The hash-aggregation overflow fallback is **in-graph** for both
-engines: ``lax.cond`` re-aggregates the same materialized wedge pairs
-with sort only when the bounded-probe table actually overflowed (the
-fix PR 1 applied to counting — no host ``bool(ok)`` sync, no silently
-wrong counts).
+engines: ``lax.cond`` re-aggregates the same materialized wedge tile
+with sort only when the bounded-probe table actually overflowed (no
+host ``bool(ok)`` sync, no silently wrong counts).
 
 Double-count avoidance (paper §4.3.1/§4.3.2): peeled-set members are
 processed against a virtual rank order (their id); an element of the
@@ -70,10 +113,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops as _kops
-from .aggregate import aggregate_hash, aggregate_sort
 from .graph import BipartiteGraph
-from .count import count_butterflies, default_count_dtype
-from .wedges import Wedges, expand_ragged
+from .count import _fused_tile_apply, count_butterflies, default_count_dtype
+from .wedges import (
+    Wedges,
+    _lower_bound_ragged,
+    aligned_tile_end,
+    expand_ragged,
+    greedy_vertex_blocks,
+    ragged_slots_at,
+)
 
 __all__ = [
     "PeelResult",
@@ -81,10 +130,28 @@ __all__ = [
     "peel_tips_stored",
     "peel_wings",
     "PEEL_ENGINES",
+    "PEEL_SUBTRACTS",
+    "PEEL_DECREASE_KEYS",
+    "PEEL_SCHEDULES",
 ]
 
 PEEL_ENGINES = ("host", "device")
+PEEL_SUBTRACTS = ("fused", "materialize")
+PEEL_DECREASE_KEYS = ("bucket", "scatter")
+PEEL_SCHEDULES = ("fixed", "adaptive")
 _I32_MAX = int(np.iinfo(np.int32).max)
+
+# Default fused-subtract tile target. Unlike counting — which streams
+# the whole wedge space through its tiles ONCE and wants them as large
+# as memory allows (auto_chunk_budget) — peeling pays the full tile
+# shape EVERY round regardless of the actual frontier size, so the
+# default is deliberately small: the planner takes
+# max(min(target, total), alignment floor), i.e. effectively the
+# 2x-largest-single-vertex alignment floor on real graphs (measured
+# ~30x faster than a memory-derived budget on the CPU bench graphs,
+# whose tail rounds dominate ρ). Raise ``tile_budget`` for graphs
+# whose rounds each release huge frontiers.
+_DEFAULT_TILE_TARGET = 1024
 
 
 class PeelResult(NamedTuple):
@@ -111,10 +178,6 @@ def _pow2_pad(x: int, floor: int = 128) -> int:
     while c < x:
         c <<= 1
     return c
-
-
-def _cap128(x: int) -> int:
-    return max(128, ((int(x) + 127) // 128) * 128)
 
 
 def _csr(g: BipartiteGraph):
@@ -166,23 +229,69 @@ def _stored_wedge_csr(g: BipartiteGraph, side: int):
     return woff, w_u2
 
 
-def _subtract_pair_groups_impl(
+def _level2_totals(off: np.ndarray, nbr: np.ndarray, base: int,
+                   n_side: int) -> np.ndarray:
+    """Per-vertex 2-hop expansion totals: w2[u] = Σ_{v in N(u)} deg(v).
+
+    The exact per-round frontier bound of PEEL-V's level-2 space —
+    feeds fused-tile alignment floors and the adaptive capacity
+    schedule's remaining-work tracking."""
+    deg = np.diff(off)
+    ids = np.arange(n_side) + base
+    d1 = deg[ids]
+    w2 = np.zeros(n_side, dtype=np.int64)
+    if d1.sum():
+        v_rep = nbr[_ranges(off[ids], d1)]
+        np.add.at(w2, np.repeat(np.arange(n_side), d1), deg[v_rep])
+    return w2
+
+
+def _masked_min(b: jax.Array, alive: jax.Array) -> jax.Array:
+    """Masked extract-min in the ``bucket_min`` clamp contract."""
+    return _kops.bucket_min(b, alive, use_pallas=False)
+
+
+def _apply_decrements(b, alive, tgt, dec, decrease_key, use_kernel):
+    """Apply one aggregated update batch to the count array.
+
+    ``"scatter"``: the PR 2 one-scatter subtract (min placeholder —
+    the round loop runs its own ``bucket_min``). ``"bucket"``: the
+    Julienne-style batched decrease-key (``kernels.ops.bucket_update``)
+    — decrements and the next round's masked min in one pass.
+    Returns ``(new_counts, min)``.
+    """
+    if decrease_key == "bucket":
+        # the bucket occupancy is discarded here, so inside the jitted
+        # round loops XLA dead-code-eliminates the reference path's
+        # histogram entirely (measured: bucket ~= scatter wall time on
+        # CPU); the kernel path computes it in-register for free
+        nb, mn, _hist = _kops.bucket_update(
+            b, alive, tgt, dec, use_pallas=use_kernel
+        )
+        return nb.astype(b.dtype), mn
+    return b.at[tgt].add(-dec), jnp.int32(_I32_MAX)
+
+
+def _subtract_tile(
     u1: jax.Array,
     u2: jax.Array,
     valid: jax.Array,
     b: jax.Array,
+    alive: Optional[jax.Array],
+    *,
     aggregation: str,
-    n_pad: int,
+    n_side: int,
     hash_bits: Optional[int] = None,
+    decrease_key: str = "scatter",
+    use_kernel: bool = False,
 ):
-    """Aggregate (u1, u2) wedge pairs -> subtract C(d,2) from B[u2].
-
-    Hash-table overflow falls back to sort **in-graph** (``lax.cond``
-    over the already-materialized pairs) — callers never see wrong
-    counts and never host-sync on the overflow flag. ``hash_bits``
-    overrides the table size (testing hook, as in counting).
+    """Aggregate one tile of (u1, u2) frontier wedge pairs and subtract
+    C(d, 2) from B[u2] — the peeling side of the shared fused tile
+    machinery (``count._fused_tile_apply``: tile-local sort/hash with
+    the in-graph hash-overflow sort fallback). Returns ``(b, min)``
+    (min meaningful under ``decrease_key="bucket"`` only).
     """
-    sent = jnp.int32(n_pad)
+    sent = jnp.int32(n_side)
     w = Wedges(
         x1=jnp.where(valid, u1, sent),
         x2=jnp.where(valid, u2, sent),
@@ -192,28 +301,24 @@ def _subtract_pair_groups_impl(
         valid=valid,
     )
 
-    def _apply(groups):
+    def consume(_wv, groups):
         d = groups.d.astype(b.dtype)
         dec = jnp.where(groups.valid, d * (d - 1) // 2, 0)
-        return b.at[groups.x2].add(-dec)
+        tgt = jnp.where(groups.valid, groups.x2, sent)
+        return _apply_decrements(b, alive, tgt, dec, decrease_key,
+                                 use_kernel)
 
-    if aggregation == "hash":
-        groups = aggregate_hash(w, table_bits=hash_bits)
-
-        def _hash_path(_):
-            return _apply(groups)
-
-        def _sort_path(_):
-            g2, _ = aggregate_sort(w)
-            return _apply(g2)
-
-        return jax.lax.cond(groups.ok, _hash_path, _sort_path, None)
-    groups, _ = aggregate_sort(w)
-    return _apply(groups)
+    out, _ok = _fused_tile_apply(w, aggregation, consume, "xla", hash_bits)
+    return out
 
 
 _subtract_pair_groups = jax.jit(
-    _subtract_pair_groups_impl,
+    lambda u1, u2, valid, b, aggregation, n_pad, hash_bits=None: (
+        _subtract_tile(
+            u1, u2, valid, b, None, aggregation=aggregation, n_side=n_pad,
+            hash_bits=hash_bits, decrease_key="scatter", use_kernel=False,
+        )[0]
+    ),
     static_argnames=("aggregation", "n_pad", "hash_bits"),
 )
 
@@ -226,6 +331,50 @@ def _subtract_triples(idx: jax.Array, valid: jax.Array, b: jax.Array):
     )
 
 
+def _host_subtract_frontier(
+    b_dev, u1_w, u2_w, n_side, aggregation, hash_bits, subtract, tile_cap
+):
+    """Host-engine frontier subtract: stream the round's (ascending-u1)
+    wedge pairs to the device in u1-aligned tiles (``subtract="fused"``
+    — O(tile) device temp, one fixed jit shape for the whole
+    decomposition) or as one pow2-padded buffer (``"materialize"`` —
+    the PR 2 behavior, O(frontier) temp)."""
+    if subtract == "materialize":
+        bounds = np.array([0, u1_w.size], dtype=np.int64)
+    else:
+        run_ends = np.flatnonzero(np.diff(u1_w)) + 1
+        row_off = np.concatenate([[0], run_ends, [u1_w.size]])
+        row_lens = np.diff(row_off)
+        vb, _ = greedy_vertex_blocks(
+            row_lens, row_lens.size, target=tile_cap
+        )
+        bounds = row_off[vb]
+    for ws, we in zip(bounds[:-1], bounds[1:]):
+        size = int(we - ws)
+        if size == 0:
+            continue
+        # pad each block to its own pow2 (still <= tile_cap under
+        # "fused"): tail rounds pay their actual size, and the jit
+        # cache stays O(log tile_cap) entries
+        cap = _pow2_pad(size)
+        u1p = np.full(cap, n_side, np.int32)
+        u2p = np.full(cap, n_side, np.int32)
+        u1p[:size] = u1_w[ws:we]
+        u2p[:size] = u2_w[ws:we]
+        validp = np.zeros(cap, bool)
+        validp[:size] = True
+        b_dev = _subtract_pair_groups(
+            jnp.asarray(u1p),
+            jnp.asarray(u2p),
+            jnp.asarray(validp),
+            b_dev,
+            aggregation=aggregation,
+            n_pad=n_side,
+            hash_bits=hash_bits,
+        )
+    return b_dev
+
+
 # ---------------------------------------------------------------------------
 # Device-resident tip engine: the whole round loop as one lax.while_loop
 # ---------------------------------------------------------------------------
@@ -233,41 +382,107 @@ def _subtract_triples(idx: jax.Array, valid: jax.Array, b: jax.Array):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("aggregation", "cap1", "cap2", "n_side", "stored",
-                     "hash_bits"),
+    static_argnames=(
+        "aggregation", "cap1", "cap2", "tile_cap", "n_side", "stored",
+        "hash_bits", "subtract", "decrease_key", "use_kernel", "adaptive",
+    ),
 )
 def _peel_tips_device(
     off: jax.Array,  # stored: (n_side+1,) wedge CSR | else (n+1,) graph CSR
     nbr: jax.Array,  # stored: (W,) second endpoints | else (2m,) neighbors
     base: jax.Array,  # () int32 global-id offset of the peeled side
-    b0: jax.Array,  # (n_side,) butterfly counts of the peeled side
+    work1: jax.Array,  # (n_side,) per-vertex level-1 expansion totals
+    work2: jax.Array,  # (n_side,) per-vertex level-2 / stored totals
+    state,  # 10-tuple carry (see st0 in the run wrapper)
     *,
     aggregation: str,
     cap1: int,  # level-1 frontier buffer (2-hop engine only)
-    cap2: int,  # wedge-pair buffer
+    cap2: int,  # wedge-pair buffer (subtract="materialize" only)
+    tile_cap: int,  # fused-subtract tile (subtract="fused" only)
     n_side: int,
     stored: bool,
     hash_bits: Optional[int] = None,
+    subtract: str = "fused",
+    decrease_key: str = "bucket",
+    use_kernel: bool = False,
+    adaptive: bool = False,
 ):
     """Jitted device round loop (PEEL-V / WPEEL-V). Returns the final
-    carry; the wrapper fetches it with a single ``device_get``.
+    carry; the wrapper fetches it with a single ``device_get`` per
+    segment (one segment total under the fixed schedule).
 
     The body never touches the host: extract-min is the ``bucket_min``
-    kernel, bucket selection a masked compare, frontier expansion a
-    fixed-capacity ``expand_ragged``, and the subtraction the shared
-    hash/sort aggregation (hash overflow handled in-graph). ``overflow``
-    latches when a round's frontier exceeds the planned capacity; the
-    loop then exits immediately and the caller re-runs the host path.
+    kernel or the min carried out of the previous round's
+    ``bucket_update`` pass, bucket selection a masked compare, frontier
+    expansion either a fixed-capacity ``expand_ragged``
+    (``"materialize"``) or the fused tile stream (``"fused"`` — tiles
+    recovered via ``ragged_slots_at``, aligned via
+    ``aligned_tile_end``), and the subtraction the shared hash/sort
+    aggregation (hash overflow handled in-graph). ``overflow`` latches
+    when a round's frontier exceeds a planned capacity; the loop exits
+    immediately and the caller re-runs the host path. Under
+    ``adaptive`` the loop additionally exits when the carried
+    remaining-work bound falls to a quarter of a planned capacity so
+    the wrapper can re-enter with pow2-shrunk buffers.
     """
-    dtype = b0.dtype
+    dtype = state[0].dtype
+    nbr_max = nbr.shape[0] - 1
 
     def cond(st):
-        _, alive, _, _, _, _, overflow = st
-        return jnp.any(alive) & ~overflow
+        b, alive, tip, kappa, rounds, sizes, overflow, mn_c, rem1, rem2 = st
+        go = jnp.any(alive) & ~overflow
+        if adaptive:
+            shrink = jnp.array(False)
+            if subtract == "materialize" and cap2 > 128:
+                shrink = shrink | (rem2 * 4 <= cap2)
+            if (not stored) and cap1 > 128:
+                shrink = shrink | (rem1 * 4 <= cap1)
+            go = go & ~shrink
+        return go
+
+    def _tile_loop(b, alive, roff, recover):
+        """Stream u1-aligned tiles of the round's frontier wedge space
+        [0, roff[-1]) through the shared tile subtract."""
+        total = roff[-1]
+
+        def tcond(c):
+            return c[1] < total
+
+        def tbody(c):
+            bt, ts, _mn = c
+            te = aligned_tile_end(roff, ts, tile_cap)
+            wid = ts + jnp.arange(tile_cap, dtype=jnp.int32)
+            tvalid = wid < te
+            u1, u2 = recover(wid)
+            u2c = jnp.clip(u2, 0, n_side - 1)
+            tvalid = tvalid & (u2 >= 0) & (u2 < n_side) & alive[u2c]
+            out = _subtract_tile(
+                u1.astype(jnp.int32), u2c.astype(jnp.int32), tvalid, bt,
+                alive, aggregation=aggregation, n_side=n_side,
+                hash_bits=hash_bits, decrease_key=decrease_key,
+                use_kernel=use_kernel,
+            )
+            return out[0], te, out[1]
+
+        b, _, mn = jax.lax.while_loop(
+            tcond, tbody, (b, jnp.int32(0), jnp.int32(_I32_MAX))
+        )
+        if decrease_key == "bucket":
+            # zero-tile rounds still need the post-peel masked min
+            mn = jax.lax.cond(
+                total > 0,
+                lambda _: mn,
+                lambda _: _masked_min(b, alive),
+                None,
+            )
+        return b, mn
 
     def body(st):
-        b, alive, tip, kappa, rounds, sizes, overflow = st
-        mn = _kops.bucket_min(b, alive, use_pallas=True)
+        b, alive, tip, kappa, rounds, sizes, overflow, mn_c, rem1, rem2 = st
+        if decrease_key == "bucket":
+            mn = mn_c
+        else:
+            mn = _kops.bucket_min(b, alive, use_pallas=True)
         kappa = jnp.maximum(kappa, mn)
         peel = alive & (b <= kappa.astype(dtype))
         tip = jnp.where(peel, kappa.astype(dtype), tip)
@@ -276,14 +491,34 @@ def _peel_tips_device(
         # scatter into the int32 sizes buffer would downcast-warn
         sizes = sizes.at[rounds].set(jnp.sum(peel, dtype=jnp.int32))
         rounds = rounds + 1
+        if adaptive:
+            rem1 = rem1 - jnp.sum(jnp.where(peel, work1, 0),
+                                  dtype=jnp.int32)
+            rem2 = rem2 - jnp.sum(jnp.where(peel, work2, 0),
+                                  dtype=jnp.int32)
 
         def _expand_and_subtract(args):
             b, alive, peel = args
             if stored:
                 # WPEEL-V: one stored-wedge CSR lookup per peeled vertex
                 lens = jnp.where(peel, off[1:] - off[:-1], 0)
+                if subtract == "fused":
+                    # zero-materialization: tiles recovered straight
+                    # from the wedge CSR — no frontier buffer at all
+                    roff = jnp.concatenate([
+                        jnp.zeros((1,), jnp.int32),
+                        jnp.cumsum(lens.astype(jnp.int32)),
+                    ])
+                    starts = off[:-1]
+
+                    def recover(wid):
+                        seg, pos = ragged_slots_at(roff, starts, wid)
+                        return seg, nbr[jnp.clip(pos, 0, nbr_max)]
+
+                    b_new, mn2 = _tile_loop(b, alive, roff, recover)
+                    return b_new, jnp.array(False), mn2
                 u1, pos, valid, total = expand_ragged(off[:-1], lens, cap2)
-                u2 = nbr[jnp.clip(pos, 0, nbr.shape[0] - 1)]
+                u2 = nbr[jnp.clip(pos, 0, nbr_max)]
                 ovf = total > cap2
             else:
                 # PEEL-V: 2-hop re-enumeration (GET-V-WEDGES). Level 1:
@@ -293,49 +528,68 @@ def _peel_tips_device(
                 seg1, pos1, valid1, tot1 = expand_ragged(
                     off[ids], lens1, cap1
                 )
-                v = nbr[jnp.clip(pos1, 0, nbr.shape[0] - 1)]
+                v = nbr[jnp.clip(pos1, 0, nbr_max)]
                 v = jnp.clip(v, 0, off.shape[0] - 2)
                 lens2 = jnp.where(valid1, off[v + 1] - off[v], 0)
+                if subtract == "fused":
+                    # level-1 stays materialized (O(m)); the dominant
+                    # level-2 space streams through aligned tiles
+                    roff2 = jnp.concatenate([
+                        jnp.zeros((1,), jnp.int32),
+                        jnp.cumsum(lens2.astype(jnp.int32)),
+                    ])
+                    t2 = jnp.zeros((n_side,), jnp.int32).at[
+                        jnp.where(valid1, seg1, jnp.int32(n_side))
+                    ].add(lens2.astype(jnp.int32))
+                    roff_u = jnp.concatenate([
+                        jnp.zeros((1,), jnp.int32), jnp.cumsum(t2),
+                    ])
+                    starts2 = off[v]
+
+                    def recover(wid):
+                        seg2, pos2 = ragged_slots_at(roff2, starts2, wid)
+                        u1 = seg1[jnp.clip(seg2, 0, cap1 - 1)]
+                        u2 = nbr[jnp.clip(pos2, 0, nbr_max)] - base
+                        return u1, u2
+
+                    b_new, mn2 = _tile_loop(b, alive, roff_u, recover)
+                    ovf = tot1 > cap1
+                    return jnp.where(ovf, b, b_new), ovf, mn2
                 seg2, pos2, valid, tot2 = expand_ragged(off[v], lens2, cap2)
                 u1 = seg1[seg2]
-                u2 = nbr[jnp.clip(pos2, 0, nbr.shape[0] - 1)] - base
+                u2 = nbr[jnp.clip(pos2, 0, nbr_max)] - base
                 ovf = (tot1 > cap1) | (tot2 > cap2)
-            # keep wedges whose second endpoint is still alive
+            # materializing subtract: whole frontier, one aggregation
             u2c = jnp.clip(u2, 0, n_side - 1)
             valid = valid & (u2 >= 0) & (u2 < n_side) & alive[u2c]
-            b_new = _subtract_pair_groups_impl(
+            b_new, mn2 = _subtract_tile(
                 u1.astype(jnp.int32),
                 u2c.astype(jnp.int32),
                 valid,
                 b,
-                aggregation,
-                n_side,
-                hash_bits,
+                alive,
+                aggregation=aggregation,
+                n_side=n_side,
+                hash_bits=hash_bits,
+                decrease_key=decrease_key,
+                use_kernel=use_kernel,
             )
-            return jnp.where(ovf, b, b_new), ovf
+            return jnp.where(ovf, b, b_new), ovf, mn2
 
         def _last_round(args):
             # nothing left alive: the subtract would be a masked no-op
             # (the host loops' `if not alive.any(): break`)
-            return args[0], jnp.array(False)
+            return args[0], jnp.array(False), jnp.int32(_I32_MAX)
 
-        b, ovf_i = jax.lax.cond(
+        b, ovf_i, mn_next = jax.lax.cond(
             jnp.any(alive), _expand_and_subtract, _last_round,
             (b, alive, peel),
         )
         overflow = overflow | ovf_i
-        return b, alive, tip, kappa, rounds, sizes, overflow
+        return (b, alive, tip, kappa, rounds, sizes, overflow, mn_next,
+                rem1, rem2)
 
-    st0 = (
-        b0,
-        jnp.ones((n_side,), jnp.bool_),
-        jnp.zeros((n_side,), dtype),
-        jnp.int32(0),
-        jnp.int32(0),
-        jnp.zeros((n_side,), jnp.int32),
-        jnp.array(False),
-    )
-    return jax.lax.while_loop(cond, body, st0)
+    return jax.lax.while_loop(cond, body, state)
 
 
 def _peel_tips_device_run(
@@ -347,59 +601,121 @@ def _peel_tips_device_run(
     max_frontier: Optional[int],
     hash_bits: Optional[int],
     csr,
+    subtract: str = "fused",
+    decrease_key: str = "bucket",
+    capacity_schedule: str = "fixed",
+    tile_budget: Optional[int] = None,
+    w2: Optional[np.ndarray] = None,
 ) -> Optional[PeelResult]:
-    """Capacity-plan, run the device loop, fetch once. Returns None when
-    the device engine does not apply (empty side, counts beyond int32,
-    totals beyond int32 indexing) or the frontier overflowed its
-    ``max_frontier``-bounded buffers — callers fall back to host.
-    ``csr`` is the caller-built ``(woff, w_u2)`` wedge CSR (stored) or
-    ``(off, nbr)`` graph CSR, shared with the host loop so a fallback
-    never rebuilds the dominant preprocessing."""
+    """Capacity-plan, run the device loop, fetch once per segment.
+    Returns None when the device engine does not apply (empty side,
+    counts beyond int32, totals beyond int32 indexing) or the frontier
+    overflowed its ``max_frontier``-bounded buffers — callers fall back
+    to host. ``csr`` is the caller-built ``(woff, w_u2)`` wedge CSR
+    (stored) or ``(off, nbr)`` graph CSR, shared with the host loop so
+    a fallback never rebuilds the dominant preprocessing."""
     n_side = g.n_u if side == 0 else g.n_v
     base = 0 if side == 0 else g.n_u
     if n_side == 0 or int(counts.max(initial=0)) >= _I32_MAX:
         return None
     budget = _I32_MAX if max_frontier is None else int(max_frontier)
+    tb = _DEFAULT_TILE_TARGET if tile_budget is None else int(tile_budget)
     if stored:
         woff, w_u2 = csr
         w_total = int(woff[-1])
         if w_total >= _I32_MAX:
             return None
+        rows = np.diff(woff)
+        work1 = np.zeros(n_side, np.int32)
+        work2 = rows.astype(np.int32)
+        lvl1, lvl2 = 0, w_total
+        max_row = int(rows.max(initial=0))
         cap1 = 128  # unused by the stored loop
-        cap2 = _cap128(min(w_total, budget))
+        cap2 = _pow2_pad(min(w_total, budget))
         off_d = jnp.asarray(woff, jnp.int32)
         nbr_d = jnp.asarray(w_u2 if w_total else np.zeros(1), jnp.int32)
     else:
         off, nbr = csr
         deg = np.diff(off)
         lvl1 = int(deg[base : base + n_side].sum())  # == m
-        other = np.concatenate([deg[:base], deg[base + n_side :]])
-        lvl2 = int((other.astype(np.int64) ** 2).sum())
+        if w2 is None:
+            w2 = _level2_totals(off, nbr, base, n_side)
+        lvl2 = int(w2.sum())
         if lvl2 >= _I32_MAX or 2 * g.m >= _I32_MAX:
             return None
-        cap1 = _cap128(min(lvl1, budget))
-        cap2 = _cap128(min(lvl2, budget))
+        work1 = deg[base : base + n_side].astype(np.int32)
+        work2 = w2.astype(np.int32)
+        max_row = int(w2.max(initial=0))
+        cap1 = _pow2_pad(min(lvl1, budget))
+        cap2 = _pow2_pad(min(lvl2, budget))
         off_d = jnp.asarray(off, jnp.int32)
         nbr_d = jnp.asarray(nbr if nbr.size else np.zeros(1), jnp.int32)
-    out = _peel_tips_device(
-        off_d,
-        nbr_d,
-        jnp.int32(base),
-        jnp.asarray(counts),
-        aggregation=aggregation,
-        cap1=cap1,
-        cap2=cap2,
-        n_side=n_side,
-        stored=stored,
-        hash_bits=hash_bits,
+    # fused tiles must fit the largest single-vertex expansion (the
+    # alignment floor, like plan_wedge_chunks' single-vertex chunks);
+    # the 2x headroom keeps greedy tiles at least half full
+    tile_cap = _pow2_pad(max(min(tb, max(lvl2, 1)), 2 * max_row))
+    b0 = jnp.asarray(counts)
+    use_kernel = (
+        not _kops.interpret_default()
+        and b0.dtype == jnp.int32
     )
-    # the single host sync of the whole decomposition
-    _, _, tip, _, rounds, sizes, overflow = jax.device_get(out)
-    if bool(overflow):
-        return None
-    rounds = int(rounds)
+    alive0 = jnp.ones((n_side,), jnp.bool_)
+    mn0 = (
+        _masked_min(b0, alive0)
+        if decrease_key == "bucket"
+        else jnp.int32(_I32_MAX)
+    )
+    state = (
+        b0,
+        alive0,
+        jnp.zeros((n_side,), b0.dtype),
+        jnp.int32(0),
+        jnp.int32(0),
+        jnp.zeros((n_side,), jnp.int32),
+        jnp.array(False),
+        mn0,
+        jnp.int32(min(lvl1, _I32_MAX - 1)),
+        jnp.int32(min(lvl2, _I32_MAX - 1)),
+    )
+    adaptive = capacity_schedule == "adaptive"
+    while True:
+        out = _peel_tips_device(
+            off_d,
+            nbr_d,
+            jnp.int32(base),
+            jnp.asarray(work1),
+            jnp.asarray(work2),
+            state,
+            aggregation=aggregation,
+            cap1=cap1,
+            cap2=cap2,
+            tile_cap=tile_cap,
+            n_side=n_side,
+            stored=stored,
+            hash_bits=hash_bits,
+            subtract=subtract,
+            decrease_key=decrease_key,
+            use_kernel=use_kernel,
+            adaptive=adaptive,
+        )
+        # the per-segment host sync — the only one of the whole
+        # decomposition under the fixed schedule
+        host = jax.device_get(out)
+        (_, alive_h, tip_h, _, rounds_h, sizes_h, overflow_h, _,
+         rem1_h, rem2_h) = host
+        if bool(overflow_h):
+            return None
+        if not adaptive or not alive_h.any():
+            break
+        # geometric shrink: re-enter with pow2-tightened static caps
+        if not stored:
+            cap1 = min(cap1, _pow2_pad(int(rem1_h)))
+        if subtract == "materialize":
+            cap2 = min(cap2, _pow2_pad(int(rem2_h)))
+        state = tuple(jnp.asarray(x) for x in host)
+    rounds = int(rounds_h)
     return PeelResult(
-        tip, side, rounds, sizes[:rounds].astype(np.int64)
+        tip_h, side, rounds, sizes_h[:rounds].astype(np.int64)
     )
 
 
@@ -410,6 +726,27 @@ def _check_engine(engine: str) -> None:
         )
 
 
+def _check_knobs(aggregation: str, subtract: str, decrease_key: str,
+                 capacity_schedule: str) -> None:
+    if aggregation not in ("sort", "hash"):
+        raise ValueError(
+            f"peeling aggregation must be sort|hash, got {aggregation}"
+        )
+    if subtract not in PEEL_SUBTRACTS:
+        raise ValueError(
+            f"subtract must be {'|'.join(PEEL_SUBTRACTS)}, got {subtract}"
+        )
+    if decrease_key not in PEEL_DECREASE_KEYS:
+        raise ValueError(
+            f"decrease_key must be {'|'.join(PEEL_DECREASE_KEYS)}, "
+            f"got {decrease_key}"
+        )
+    if capacity_schedule not in PEEL_SCHEDULES:
+        raise ValueError(
+            f"capacity_schedule must be {'|'.join(PEEL_SCHEDULES)}, "
+            f"got {capacity_schedule}"
+        )
+
 def peel_tips(
     g: BipartiteGraph,
     counts: Optional[np.ndarray] = None,
@@ -419,6 +756,10 @@ def peel_tips(
     engine: str = "host",
     max_frontier: Optional[int] = None,
     hash_bits: Optional[int] = None,
+    subtract: str = "fused",
+    decrease_key: str = "bucket",
+    capacity_schedule: str = "fixed",
+    tile_budget: Optional[int] = None,
 ) -> PeelResult:
     """Tip decomposition (PEEL-V, Alg. 5).
 
@@ -426,23 +767,51 @@ def peel_tips(
     ``side`` is forced. ``counts`` are per-vertex butterfly counts for
     the peeled side (computed if omitted). ``engine="device"`` runs the
     whole round loop on device (see module docstring); ``max_frontier``
-    bounds its per-round buffers (overflow falls back to host);
-    ``hash_bits`` overrides the hash-aggregation table size (testing
-    hook for the in-graph overflow fallback).
+    bounds its materializing/level-1 buffers (overflow falls back to
+    host); ``hash_bits`` overrides the hash-aggregation table size
+    (testing hook for the in-graph overflow fallback).
+
+    ``subtract="fused"`` (default) streams each round's frontier wedge
+    space through iterating-endpoint-aligned tiles — O(tile) peak temp
+    instead of O(frontier wedges) — on both engines;
+    ``"materialize"`` restores the PR 2 whole-frontier expansion.
+    ``tile_budget`` sizes the tiles (default: a small 1024 target —
+    peeling pays the tile shape every round — floored by the largest
+    single-vertex expansion). ``decrease_key="bucket"`` (default)
+    routes device-engine updates through the Julienne-style batched
+    ``bucket_update`` pass (decrements + next round's extract-min in
+    one sweep); ``"scatter"`` keeps the PR 2 scatter + per-round
+    ``bucket_min``. ``capacity_schedule="adaptive"`` shrinks the
+    device engine's planned buffers geometrically as the graph empties
+    (O(log cap) extra host syncs); ``"fixed"`` keeps the one-sync
+    guarantee. All knob combinations produce bitwise-identical
+    results.
     """
     _check_engine(engine)
+    _check_knobs(aggregation, subtract, decrease_key, capacity_schedule)
     side, counts = _side_and_counts(g, counts, side, count_kwargs)
     off, nbr, _ = _csr(g)
+    n_side = g.n_u if side == 0 else g.n_v
+    base = 0 if side == 0 else g.n_u  # global id offset of peeled side
+    # per-vertex 2-hop totals: shared between the device planner and the
+    # host tile plan so a device->host fallback never recomputes them
+    w2 = _level2_totals(off, nbr, base, n_side)
     if engine == "device":
         res = _peel_tips_device_run(
             g, counts, side, aggregation, False, max_frontier, hash_bits,
-            (off, nbr),
+            (off, nbr), subtract=subtract, decrease_key=decrease_key,
+            capacity_schedule=capacity_schedule, tile_budget=tile_budget,
+            w2=w2,
         )
         if res is not None:
             return res
-    n_side = g.n_u if side == 0 else g.n_v
-    base = 0 if side == 0 else g.n_u  # global id offset of peeled side
 
+    tile_cap = None
+    if subtract == "fused":
+        tb = _DEFAULT_TILE_TARGET if tile_budget is None else int(tile_budget)
+        tile_cap = _pow2_pad(
+            max(min(tb, max(int(w2.sum()), 1)), int(w2.max(initial=0)))
+        )
     alive = np.ones(n_side, dtype=bool)
     tip = np.zeros(n_side, dtype=counts.dtype)
     b_dev = jnp.asarray(counts)
@@ -473,21 +842,9 @@ def peel_tips(
         u1_w, u2_w = u1_w[ok], u2_w[ok]
         if u1_w.size == 0:
             continue
-        cap = _pow2_pad(u1_w.size)
-        u1p = np.full(cap, n_side, np.int32)
-        u2p = np.full(cap, n_side, np.int32)
-        u1p[: u1_w.size] = u1_w
-        u2p[: u2_w.size] = u2_w
-        valid = np.zeros(cap, bool)
-        valid[: u1_w.size] = True
-        b_dev = _subtract_pair_groups(
-            jnp.asarray(u1p),
-            jnp.asarray(u2p),
-            jnp.asarray(valid),
-            b_dev,
-            aggregation=aggregation,
-            n_pad=n_side,
-            hash_bits=hash_bits,
+        b_dev = _host_subtract_frontier(
+            b_dev, u1_w, u2_w, n_side, aggregation, hash_bits, subtract,
+            tile_cap,
         )
     return PeelResult(tip, side, rounds, np.asarray(sizes))
 
@@ -501,6 +858,10 @@ def peel_tips_stored(
     engine: str = "host",
     max_frontier: Optional[int] = None,
     hash_bits: Optional[int] = None,
+    subtract: str = "fused",
+    decrease_key: str = "bucket",
+    capacity_schedule: str = "fixed",
+    tile_budget: Optional[int] = None,
 ) -> PeelResult:
     """WPEEL-V (paper Alg. 7): store all side-oriented wedges upfront,
     then per round subtract via pure index lookups — O(b)-style work,
@@ -508,21 +869,35 @@ def peel_tips_stored(
     trade-off). One orientation suffices: every butterfly on the peeled
     side U is accounted by its U-endpoint wedge group (Lemma 4.2);
     the paper's W_c store handles the same butterflies from the other
-    orientation of its ranked wedge set. ``engine``/``max_frontier``/
-    ``hash_bits`` as in :func:`peel_tips`.
+    orientation of its ranked wedge set.
+
+    Knobs as in :func:`peel_tips`. Under ``subtract="fused"`` the
+    device engine recovers each tile straight from the stored-wedge
+    CSR — no per-round frontier buffer exists at all, so
+    ``max_frontier`` (and capacity overflow) only applies to
+    ``subtract="materialize"``.
     """
     _check_engine(engine)
+    _check_knobs(aggregation, subtract, decrease_key, capacity_schedule)
     side, counts = _side_and_counts(g, counts, side, count_kwargs)
     n_side = g.n_u if side == 0 else g.n_v
     woff, w_u2 = _stored_wedge_csr(g, side)
     if engine == "device":
         res = _peel_tips_device_run(
             g, counts, side, aggregation, True, max_frontier, hash_bits,
-            (woff, w_u2),
+            (woff, w_u2), subtract=subtract, decrease_key=decrease_key,
+            capacity_schedule=capacity_schedule, tile_budget=tile_budget,
         )
         if res is not None:
             return res
 
+    tile_cap = None
+    if subtract == "fused":
+        tb = _DEFAULT_TILE_TARGET if tile_budget is None else int(tile_budget)
+        rows = np.diff(woff)
+        tile_cap = _pow2_pad(
+            max(min(tb, max(int(woff[-1]), 1)), int(rows.max(initial=0)))
+        )
     alive = np.ones(n_side, dtype=bool)
     tip = np.zeros(n_side, dtype=counts.dtype)
     b_dev = jnp.asarray(counts)
@@ -549,39 +924,402 @@ def peel_tips_stored(
         u1_w, u2_w = u1_w[ok], u2_w[ok]
         if u1_w.size == 0:
             continue
-        cap = _pow2_pad(u1_w.size)
-        u1p = np.full(cap, n_side, np.int32)
-        u2p = np.full(cap, n_side, np.int32)
-        u1p[: u1_w.size] = u1_w
-        u2p[: u2_w.size] = u2_w
-        valid = np.zeros(cap, bool)
-        valid[: u1_w.size] = True
-        b_dev = _subtract_pair_groups(
-            jnp.asarray(u1p),
-            jnp.asarray(u2p),
-            jnp.asarray(valid),
-            b_dev,
-            aggregation=aggregation,
-            n_pad=n_side,
-            hash_bits=hash_bits,
+        b_dev = _host_subtract_frontier(
+            b_dev, u1_w, u2_w, n_side, aggregation, hash_bits, subtract,
+            tile_cap,
         )
     return PeelResult(tip, side, rounds, np.asarray(sizes))
 
+# ---------------------------------------------------------------------------
+# Device-resident wing engine (PEEL-E): triple enumeration in-graph
+# ---------------------------------------------------------------------------
+
+
+def _subtract_edge_groups(
+    tgt3: jax.Array,
+    valid3: jax.Array,
+    b: jax.Array,
+    alive: Optional[jax.Array],
+    *,
+    aggregation: str,
+    m: int,
+    hash_bits: Optional[int] = None,
+    decrease_key: str = "scatter",
+    use_kernel: bool = False,
+):
+    """Aggregate one tile of butterfly edge ids and subtract the group
+    multiplicities — the wing-side consumer of the shared fused tile
+    machinery. Each of the round's located butterflies contributes -1
+    to three still-present edges; grouping by edge id turns the raw
+    triple scatter into one subtract per distinct edge (same integer
+    sums, so bitwise-equal to the host engine's raw scatter), with the
+    in-graph hash-overflow sort fallback. Returns ``(b, min)``.
+    """
+    sent = jnp.int32(m)
+    key = jnp.where(valid3, tgt3, sent)
+    w = Wedges(
+        x1=key,
+        x2=key,
+        y=key,
+        center_slot=tgt3,
+        second_slot=tgt3,
+        valid=valid3,
+    )
+
+    def consume(_wv, groups):
+        dec = jnp.where(groups.valid, groups.d.astype(b.dtype), 0)
+        tgt = jnp.where(groups.valid, groups.x1, sent)
+        return _apply_decrements(b, alive, tgt, dec, decrease_key,
+                                 use_kernel)
+
+    out, _ok = _fused_tile_apply(w, aggregation, consume, "xla", hash_bits)
+    return out
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "aggregation", "cap1", "cap2", "tile_cap", "m", "hash_bits",
+        "subtract", "decrease_key", "use_kernel", "adaptive",
+    ),
+)
+def _peel_wings_device(
+    off: jax.Array,  # (n + 1,) graph CSR offsets
+    nbr: jax.Array,  # (2m,) neighbors (global ids)
+    uid: jax.Array,  # (2m,) undirected edge id per directed slot
+    eu: jax.Array,  # (m,) U endpoint (global id) per edge
+    ev: jax.Array,  # (m,) V endpoint (global id) per edge
+    work1: jax.Array,  # (m,) per-edge level-1 expansion totals
+    work2: jax.Array,  # (m,) per-edge level-2 (triple-space) totals
+    state,  # 10-tuple carry, mirrors _peel_tips_device
+    *,
+    aggregation: str,
+    cap1: int,  # level-1 buffer: peeled edge -> u2 in N(v1)
+    cap2: int,  # triple-space buffer (subtract="materialize" only)
+    tile_cap: int,  # fused-subtract tile (subtract="fused" only)
+    m: int,
+    hash_bits: Optional[int] = None,
+    subtract: str = "fused",
+    decrease_key: str = "bucket",
+    use_kernel: bool = False,
+    adaptive: bool = False,
+):
+    """Jitted device round loop for wing decomposition (PEEL-E, Alg. 6).
+
+    Three expansion levels run in-graph: (1) peeled edge a=(u1,v1) ->
+    candidate endpoints u2 in N(v1) (``expand_ragged``), (2) the
+    smaller of N(u1), N(u2) -> candidate centers v2 (the per-butterfly
+    triple space — materialized at ``cap2`` or streamed through
+    ``tile_cap`` tiles), and (3) per candidate, the edge-membership
+    binary search for (other, v2) over the CSR adjacency
+    (``wedges._lower_bound_ragged`` — the searchsorted analogue of the
+    host engine's lexsorted composite-key probe). This matches the
+    paper's Σ min(deg(u), deg(u')) work bound per peeled edge.
+    Presence of an edge x w.r.t. the peeled edge a follows the paper's
+    id-order tiebreak: alive-before-this-round and (not peeled this
+    round or x > a). Extract-min, bucket select, the overflow latch,
+    and the adaptive early-exit mirror ``_peel_tips_device``.
+    """
+    dtype = state[0].dtype
+    nbr_max = nbr.shape[0] - 1
+    deg = off[1:] - off[:-1]
+
+    def cond(st):
+        b, alive, wing, kappa, rounds, sizes, overflow, mn_c, rem1, rem2 = st
+        go = jnp.any(alive) & ~overflow
+        if adaptive:
+            shrink = jnp.array(False)
+            if cap1 > 128:
+                shrink = shrink | (rem1 * 4 <= cap1)
+            if subtract == "materialize" and cap2 > 128:
+                shrink = shrink | (rem2 * 4 <= cap2)
+            go = go & ~shrink
+        return go
+
+    def body(st):
+        b, alive, wing, kappa, rounds, sizes, overflow, mn_c, rem1, rem2 = st
+        if decrease_key == "bucket":
+            mn = mn_c
+        else:
+            mn = _kops.bucket_min(b, alive, use_pallas=True)
+        kappa = jnp.maximum(kappa, mn)
+        peel = alive & (b <= kappa.astype(dtype))
+        wing = jnp.where(peel, kappa.astype(dtype), wing)
+        sizes = sizes.at[rounds].set(jnp.sum(peel, dtype=jnp.int32))
+        rounds = rounds + 1
+        alive_prev = alive  # presence checks see the pre-removal state
+        alive = alive & ~peel
+        if adaptive:
+            rem1 = rem1 - jnp.sum(jnp.where(peel, work1, 0),
+                                  dtype=jnp.int32)
+            rem2 = rem2 - jnp.sum(jnp.where(peel, work2, 0),
+                                  dtype=jnp.int32)
+
+        def _expand_and_subtract(args):
+            b, alive, alive_prev, peel = args
+
+            def present(x, a):
+                xc = jnp.clip(x, 0, m - 1)
+                return alive_prev[xc] & (~peel[xc] | (x > a))
+
+            # level 1: peeled a=(u1,v1) -> u2 in N(v1)
+            lens1 = jnp.where(peel, deg[ev], 0)
+            seg1, pos1, valid1, tot1 = expand_ragged(off[ev], lens1, cap1)
+            pos1c = jnp.clip(pos1, 0, nbr_max)
+            a1 = jnp.clip(seg1, 0, m - 1)
+            u2 = nbr[pos1c]
+            b_edge = uid[pos1c]
+            u1 = eu[a1]
+            v1 = ev[a1]
+            keep1 = valid1 & (u2 != u1) & present(b_edge, a1)
+            # level 2 plan: scan the smaller of N(u1), N(u2)
+            s_is_u1 = deg[u1] <= deg[u2]
+            small = jnp.where(s_is_u1, u1, u2)
+            other = jnp.where(s_is_u1, u2, u1)
+            lens2 = jnp.where(keep1, deg[small], 0)
+
+            def _triples(b, seg2, pos2, tvalid):
+                """Locate butterflies for one slice of the triple space
+                and subtract their edge contributions."""
+                pos2c = jnp.clip(pos2, 0, nbr_max)
+                s2 = jnp.clip(seg2, 0, cap1 - 1)
+                v2 = nbr[pos2c]
+                e_small = uid[pos2c]
+                a2 = a1[s2]
+                v1_2 = v1[s2]
+                b_2 = b_edge[s2]
+                oth = other[s2]
+                si = s_is_u1[s2]
+                kp = keep1[s2]
+                # membership: (other, v2) must be an edge — binary
+                # search v2 inside N(other)
+                lo = off[oth]
+                hi = off[oth + 1]
+                p = _lower_bound_ragged(nbr, lo, hi, v2)
+                pc = jnp.clip(p, 0, nbr_max)
+                hit = (p < hi) & (nbr[pc] == v2)
+                e_other = uid[pc]
+                # c = (u1, v2), d = (u2, v2): map small/other back
+                c_edge = jnp.where(si, e_small, e_other)
+                d_edge = jnp.where(si, e_other, e_small)
+                ok = (
+                    tvalid
+                    & kp
+                    & hit
+                    & (v2 != v1_2)
+                    & present(c_edge, a2)
+                    & present(d_edge, a2)
+                )
+                tgt3 = jnp.concatenate([b_2, c_edge, d_edge])
+                ok3 = jnp.concatenate([ok, ok, ok])
+                return _subtract_edge_groups(
+                    tgt3.astype(jnp.int32), ok3, b, alive,
+                    aggregation=aggregation, m=m, hash_bits=hash_bits,
+                    decrease_key=decrease_key, use_kernel=use_kernel,
+                )
+
+            if subtract == "fused":
+                # stream the triple space in tiles; no alignment needed
+                # (every butterfly contributes independently)
+                roff2 = jnp.concatenate([
+                    jnp.zeros((1,), jnp.int32),
+                    jnp.cumsum(lens2.astype(jnp.int32)),
+                ])
+                total = roff2[-1]
+                starts2 = off[small]
+
+                def tcond(c):
+                    return c[1] < total
+
+                def tbody(c):
+                    bt, ts, _mn = c
+                    wid = ts + jnp.arange(tile_cap, dtype=jnp.int32)
+                    tvalid = wid < total
+                    seg2, pos2 = ragged_slots_at(roff2, starts2, wid)
+                    out = _triples(bt, seg2, pos2, tvalid)
+                    return out[0], ts + jnp.int32(tile_cap), out[1]
+
+                b_new, _, mn2 = jax.lax.while_loop(
+                    tcond, tbody, (b, jnp.int32(0), jnp.int32(_I32_MAX))
+                )
+                if decrease_key == "bucket":
+                    mn2 = jax.lax.cond(
+                        total > 0,
+                        lambda _: mn2,
+                        lambda _: _masked_min(b_new, alive),
+                        None,
+                    )
+                ovf = tot1 > cap1
+                return jnp.where(ovf, b, b_new), ovf, mn2
+            seg2, pos2, valid2, tot2 = expand_ragged(off[small], lens2, cap2)
+            b_new, mn2 = _triples(b, seg2, pos2, valid2)
+            ovf = (tot1 > cap1) | (tot2 > cap2)
+            return jnp.where(ovf, b, b_new), ovf, mn2
+
+        def _last_round(args):
+            return args[0], jnp.array(False), jnp.int32(_I32_MAX)
+
+        b, ovf_i, mn_next = jax.lax.cond(
+            jnp.any(alive), _expand_and_subtract, _last_round,
+            (b, alive, alive_prev, peel),
+        )
+        overflow = overflow | ovf_i
+        return (b, alive, wing, kappa, rounds, sizes, overflow, mn_next,
+                rem1, rem2)
+
+    return jax.lax.while_loop(cond, body, state)
+
+
+def _peel_wings_device_run(
+    g: BipartiteGraph,
+    counts: np.ndarray,
+    aggregation: str,
+    max_frontier: Optional[int],
+    hash_bits: Optional[int],
+    csr,
+    subtract: str = "fused",
+    decrease_key: str = "bucket",
+    capacity_schedule: str = "fixed",
+    tile_budget: Optional[int] = None,
+) -> Optional[PeelResult]:
+    """Capacity-plan and run the device wing loop; one ``device_get``
+    per segment (one total under the fixed schedule). Returns None when
+    the device engine does not apply (no edges, counts or expansion
+    totals beyond int32) or a bounded buffer overflowed — callers fall
+    back to the host loop, reusing ``csr``."""
+    off, nbr, uid = csr
+    m = g.m
+    if m == 0 or int(counts.max(initial=0)) >= _I32_MAX:
+        return None
+    if 2 * m >= _I32_MAX:
+        return None
+    deg = np.diff(off)
+    eu = g.edges[:, 0].astype(np.int64)
+    ev = (g.edges[:, 1] + g.n_u).astype(np.int64)
+    l1 = deg[ev]
+    lvl1 = int(l1.sum())
+    # exact per-edge triple-space totals: Σ_{u2 in N(v1), u2 != u1}
+    # min(deg(u1), deg(u2)) — the paper's work bound, reused for
+    # capacity planning and the adaptive remaining-work tracking
+    l2 = np.zeros(m, dtype=np.int64)
+    if lvl1:
+        a_rep = np.repeat(np.arange(m), l1)
+        u2_rep = nbr[_ranges(off[ev], l1)]
+        w = np.minimum(deg[eu[a_rep]], deg[u2_rep])
+        w[u2_rep == eu[a_rep]] = 0
+        np.add.at(l2, a_rep, w)
+    lvl2 = int(l2.sum())
+    if lvl1 >= _I32_MAX or lvl2 >= _I32_MAX:
+        return None
+    budget = _I32_MAX if max_frontier is None else int(max_frontier)
+    tb = _DEFAULT_TILE_TARGET if tile_budget is None else int(tile_budget)
+    cap1 = _pow2_pad(min(lvl1, budget))
+    cap2 = (
+        _pow2_pad(min(lvl2, budget)) if subtract == "materialize" else 128
+    )
+    tile_cap = _pow2_pad(min(tb, max(lvl2, 1)))
+    b0 = jnp.asarray(counts)
+    use_kernel = (
+        not _kops.interpret_default()
+        and b0.dtype == jnp.int32
+    )
+    alive0 = jnp.ones((m,), jnp.bool_)
+    mn0 = (
+        _masked_min(b0, alive0)
+        if decrease_key == "bucket"
+        else jnp.int32(_I32_MAX)
+    )
+    state = (
+        b0,
+        alive0,
+        jnp.zeros((m,), b0.dtype),
+        jnp.int32(0),
+        jnp.int32(0),
+        jnp.zeros((m,), jnp.int32),
+        jnp.array(False),
+        mn0,
+        jnp.int32(min(lvl1, _I32_MAX - 1)),
+        jnp.int32(min(lvl2, _I32_MAX - 1)),
+    )
+    args = (
+        jnp.asarray(off, jnp.int32),
+        jnp.asarray(nbr if nbr.size else np.zeros(1), jnp.int32),
+        jnp.asarray(uid if uid.size else np.zeros(1), jnp.int32),
+        jnp.asarray(eu, jnp.int32),
+        jnp.asarray(ev, jnp.int32),
+        jnp.asarray(l1.astype(np.int32)),
+        jnp.asarray(l2.astype(np.int32)),
+    )
+    adaptive = capacity_schedule == "adaptive"
+    while True:
+        out = _peel_wings_device(
+            *args,
+            state,
+            aggregation=aggregation,
+            cap1=cap1,
+            cap2=cap2,
+            tile_cap=tile_cap,
+            m=m,
+            hash_bits=hash_bits,
+            subtract=subtract,
+            decrease_key=decrease_key,
+            use_kernel=use_kernel,
+            adaptive=adaptive,
+        )
+        host = jax.device_get(out)
+        (_, alive_h, wing_h, _, rounds_h, sizes_h, overflow_h, _,
+         rem1_h, rem2_h) = host
+        if bool(overflow_h):
+            return None
+        if not adaptive or not alive_h.any():
+            break
+        cap1 = min(cap1, _pow2_pad(int(rem1_h)))
+        if subtract == "materialize":
+            cap2 = min(cap2, _pow2_pad(int(rem2_h)))
+        state = tuple(jnp.asarray(x) for x in host)
+    rounds = int(rounds_h)
+    return PeelResult(
+        wing_h, None, rounds, sizes_h[:rounds].astype(np.int64)
+    )
 
 def peel_wings(
     g: BipartiteGraph,
     counts: Optional[np.ndarray] = None,
     count_kwargs: Optional[dict] = None,
+    engine: str = "host",
+    aggregation: str = "sort",
+    max_frontier: Optional[int] = None,
+    hash_bits: Optional[int] = None,
+    subtract: str = "fused",
+    decrease_key: str = "bucket",
+    capacity_schedule: str = "fixed",
+    tile_budget: Optional[int] = None,
 ) -> PeelResult:
     """Wing decomposition (PEEL-E, Alg. 6).
 
     Butterflies incident to peeled edges are located individually via
-    min-degree-side intersections (binary search membership on the
-    lexsorted directed edge array), matching the paper's
-    Σ min(deg(u), deg(u')) work bound. The loop stays host-driven, but
-    the per-round extract-min runs through the ``bucket_min`` kernel
-    (``kernels.ops``) whenever the wing counts fit int32.
+    min-degree-side intersections, matching the paper's
+    Σ min(deg(u), deg(u')) work bound.
+
+    ``engine="host"`` (membership via binary search on the lexsorted
+    directed edge array) keeps the host round loop but routes the
+    per-round extract-min through the ``bucket_min`` kernel whenever
+    the wing counts fit int32. ``engine="device"`` runs the whole
+    decomposition as one jitted ``lax.while_loop`` — a third in-graph
+    expansion level enumerates the per-butterfly triples and an
+    in-graph CSR binary search replaces the composite-key membership
+    probe — with one ``device_get`` per decomposition (fixed
+    schedule). ``aggregation``/``hash_bits`` select the device
+    engine's grouped edge subtract strategy (the host engine's raw
+    triple scatter is bitwise-equivalent); ``subtract``/
+    ``decrease_key``/``capacity_schedule``/``tile_budget``/
+    ``max_frontier`` as in :func:`peel_tips` (the fused axis tiles the
+    triple space; levels 1-2 stay materialized). Counts at or beyond
+    INT32_MAX, expansion totals beyond int32, or a bounded-buffer
+    overflow transparently fall back to the host loop.
     """
+    _check_engine(engine)
+    _check_knobs(aggregation, subtract, decrease_key, capacity_schedule)
     if counts is None:
         r = count_butterflies(
             g, mode="edge", count_dtype=default_count_dtype(),
@@ -590,6 +1328,14 @@ def peel_wings(
         counts = r.per_edge
     counts = np.asarray(counts).copy()
     off, nbr, uid = _csr(g)
+    if engine == "device":
+        res = _peel_wings_device_run(
+            g, counts, aggregation, max_frontier, hash_bits,
+            (off, nbr, uid), subtract=subtract, decrease_key=decrease_key,
+            capacity_schedule=capacity_schedule, tile_budget=tile_budget,
+        )
+        if res is not None:
+            return res
     n, m = g.n, g.m
     # lexsorted composite keys for edge-membership binary search
     src = np.repeat(np.arange(n), np.diff(off))

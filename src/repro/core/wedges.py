@@ -46,6 +46,8 @@ __all__ = [
     "wedges_at",
     "gather_wedges",
     "expand_ragged",
+    "ragged_slots_at",
+    "aligned_tile_end",
     "greedy_vertex_blocks",
     "plan_wedge_chunks",
 ]
@@ -330,6 +332,55 @@ def gather_wedges(
     return wedges_at(dg, cnt, w_off, wid, valid, direction)
 
 
+def ragged_slots_at(
+    roff: jax.Array, starts: jax.Array, wid: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Recover (segment, absolute position) for arbitrary flat ragged ids.
+
+    ``roff`` is the exclusive prefix sum of the segment lengths (the flat
+    ragged id space), ``starts[i]`` the absolute start of segment ``i``'s
+    range. Flat id ``w`` belongs to segment ``seg`` with
+    ``roff[seg] <= w < roff[seg + 1]`` at absolute position
+    ``starts[seg] + w - roff[seg]``. Ids are clamped into
+    ``[0, roff[-1])`` — callers mask invalid lanes themselves.
+
+    This is the tile-sliced core of :func:`expand_ragged`: the fused
+    peeling subtract calls it once per frontier tile (``wid`` =
+    ``ts + arange(tile_cap)``) so no round ever materializes the full
+    frontier expansion.
+    """
+    total = roff[-1]
+    kc = jnp.minimum(wid.astype(jnp.int32), jnp.maximum(total - 1, 0))
+    seg = jnp.searchsorted(roff, kc, side="right").astype(jnp.int32) - 1
+    seg = jnp.clip(seg, 0, starts.shape[0] - 1)
+    pos = starts[seg] + kc - roff[seg]
+    return seg, pos
+
+
+def aligned_tile_end(
+    roff: jax.Array, ts: jax.Array, tile_cap: int
+) -> jax.Array:
+    """Largest segment boundary in ``roff`` at most ``ts + tile_cap``.
+
+    In-graph greedy tile planning for the fused peeling subtract: tiles
+    of the per-round frontier wedge space must cut only at iterating-
+    endpoint boundaries (the ``plan_wedge_chunks`` invariant — no
+    endpoint-pair group may span a tile, or its C(d, 2) contribution
+    would split inexactly). Callers guarantee ``tile_cap`` is at least
+    the largest single segment (host-planned from exact per-vertex
+    totals), which makes every returned boundary strictly advance past
+    ``ts`` whenever ``ts`` is itself a boundary below ``roff[-1]``.
+    """
+    i32_max = np.int32(np.iinfo(np.int32).max)
+    tgt = ts.astype(jnp.int32) + jnp.int32(min(int(tile_cap), int(i32_max)))
+    # saturate on int32 wrap: the saturated target still exceeds every
+    # boundary (totals are < 2^31 by the planners' guards), and the
+    # resulting tile is then strictly shorter than tile_cap
+    tgt = jnp.where(tgt < ts, i32_max, tgt)
+    ub = jnp.searchsorted(roff, tgt, side="right").astype(jnp.int32) - 1
+    return roff[jnp.clip(ub, 0, roff.shape[0] - 1)]
+
+
 def expand_ragged(
     starts: jax.Array, lens: jax.Array, cap: int
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
@@ -352,10 +403,7 @@ def expand_ragged(
     total = roff[-1]
     k = jnp.arange(cap, dtype=jnp.int32)
     valid = k < total
-    kc = jnp.minimum(k, jnp.maximum(total - 1, 0))
-    seg = jnp.searchsorted(roff, kc, side="right").astype(jnp.int32) - 1
-    seg = jnp.clip(seg, 0, lens.shape[0] - 1)
-    pos = starts[seg] + kc - roff[seg]
+    seg, pos = ragged_slots_at(roff, starts, k)
     return seg, pos, valid, total
 
 

@@ -1,6 +1,6 @@
 """Pallas TPU kernels for the butterfly counting/peeling hot paths.
 
-Four kernels cover the paper-identified compute hot spots, each with a
+Five kernels cover the paper-identified compute hot spots, each with a
 pure-jnp oracle in ``ref`` and a backend-aware dispatcher in ``ops``:
 
   - ``wedge_count.wedge_histogram_pallas`` — one-hot MXU histogram
@@ -9,17 +9,23 @@ pure-jnp oracle in ``ref`` and a backend-aware dispatcher in ``ops``:
     contribution transform (64-bit C(d,2) as two int32 limbs),
   - ``bucket_min.bucket_min_pallas`` — masked min-reduction (peeling
     extract-min),
+  - ``bucket_update.bucket_update_pallas`` — Julienne-style batched
+    decrease-key: apply one round's support decrements and re-derive
+    the masked min + geometric bucket occupancy in the same pass,
   - ``wedge_fused.fused_count_tiles_pallas`` — zero-materialization
     fused counting: per vertex-aligned tile, reconstruct the wedge
     slice in VMEM, aggregate, combine, and emit partial counts — the
-    global wedge array is never materialized.
+    global wedge array is never materialized (per-vertex/per-edge
+    accumulators are 64-bit two-limb pairs).
 
 The counting engine (``repro.core.count`` with ``engine="pallas"`` /
-``engine="fused_pallas"``) consumes them through the ``ops`` wrappers,
-which pick interpret mode automatically off the backend.
+``engine="fused_pallas"``) and the peeling engines (``repro.core.peel``
+``engine="device"``) consume them through the ``ops`` wrappers, which
+pick interpret mode automatically off the backend.
 """
 from .ops import (
     bucket_min,
+    bucket_update,
     butterfly_combine,
     fused_count_tiles,
     interpret_default,
@@ -28,6 +34,7 @@ from .ops import (
 
 __all__ = [
     "bucket_min",
+    "bucket_update",
     "butterfly_combine",
     "fused_count_tiles",
     "interpret_default",

@@ -1,0 +1,169 @@
+"""Pallas TPU kernel: Julienne-style batched decrease-key.
+
+The peeling frameworks' per-round *update* primitive (Lakhotia et al.
+2021; Julienne's bucketed priority structure): apply one round's
+aggregated support decrements to the count array and, in the same pass,
+re-derive everything the next round's extract-min needs —
+
+  1. ``new_counts = counts - scatter(idx, dec)`` (the decrease-key
+     batch; the one-scatter-per-round subtract of the PR 2 engines,
+     folded in),
+  2. the masked min of the updated counts over ``alive`` (the next
+     round's bucket floor — no separate ``bucket_min`` reduction pass),
+  3. the occupancy histogram of the O(log n) geometric bucket ranges
+     ``[2^k, 2^{k+1})`` (bucket of v = bit_length(v), 32 buckets for
+     int32 counts) — the Julienne bucket structure's view of the
+     updated array: each decremented element conceptually *moves* from
+     its old range to a lower one, and the histogram is the post-move
+     occupancy.
+
+Exactness contract: the decrement scatter is realized as one-hot MXU
+contractions over three 12-bit limbs of ``dec`` (lo/mid/hi), so every
+f32 column sum stays below ``MAX_UPDATE_CAP * 2^12 = 2^24`` — exact —
+for update batches of at most ``MAX_UPDATE_CAP`` (4096) entries and
+``dec`` anywhere in [0, 2^31). The wrapper enforces the batch bound at
+trace time; callers with larger batches use the jnp reference
+(``ref.bucket_update_ref`` via ``ops.bucket_update``), which has no
+bound. ``idx`` entries equal to ``counts.shape[0]`` (the sentinel) hit
+no bucket; their ``dec`` must be 0.
+
+Dispatched via ``ops.bucket_update`` with the same backend-aware
+interpret default as every kernel here (compiled on TPU, interpreted in
+CI). The device peeling engines (``core.peel`` ``decrease_key=
+"bucket"``) call it once per frontier tile inside the jitted round
+loop; off-TPU they route to the reference (the interpreter would
+dominate the round, same policy as ``peel_wings``'s host extract-min).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import numpy as np
+
+__all__ = ["bucket_update_pallas", "MAX_UPDATE_CAP", "NUM_BUCKETS", "TN"]
+
+TN = 512  # count-array tile (matches the one-hot panel width)
+NUM_BUCKETS = 32  # geometric ranges for int32 counts: bit_length in [0, 31]
+MAX_UPDATE_CAP = 4096  # keeps every f32 limb contraction exact (< 2^24)
+_INF = np.int32(np.iinfo(np.int32).max)
+
+
+def _update_kernel(counts_ref, alive_ref, idx_ref, dec_ref,
+                   out_ref, mn_ref, hist_ref):
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        mn_ref[...] = jnp.full_like(mn_ref, _INF)
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    c = counts_ref[...]
+    alive = alive_ref[...] > 0
+    idx = idx_ref[...]
+    dec = dec_ref[...]
+    rows = idx.shape[0]
+    base = k * TN
+
+    # -- 1. decrement scatter: one-hot MXU contraction, 12-bit limbs --
+    cols = jax.lax.broadcasted_iota(jnp.int32, (rows, TN), 1) + base
+    match = idx[:, None] == cols
+    ones8 = jnp.ones((8, rows), jnp.float32)
+    delta = jnp.zeros((TN,), jnp.int32)
+    for shift in (0, 12, 24):
+        limb = (dec >> shift) & jnp.int32(0xFFF)
+        panel = jnp.where(match, limb.astype(jnp.float32)[:, None], 0.0)
+        part = jax.lax.dot_general(
+            ones8, panel, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (8, TN); rows identical
+        delta = delta + (part[0].astype(jnp.int32) << shift)
+    new = c - delta
+    out_ref[...] = new
+
+    # -- 2. masked min of the updated tile ----------------------------
+    part_mn = jnp.min(jnp.where(alive, new, _INF)).reshape(1, 1)
+    mn_ref[...] = jnp.minimum(mn_ref[...], part_mn)
+
+    # -- 3. bucket-range occupancy: bucket(v) = bit_length(max(v, 0)) --
+    v = jnp.maximum(new, 0)
+    bl = jnp.zeros((TN,), jnp.int32)
+    for j in range(31):
+        bl = bl + (v >= jnp.int32(1 << j)).astype(jnp.int32)
+    bcols = jax.lax.broadcasted_iota(jnp.int32, (TN, 128), 1)
+    onehot = jnp.where(
+        (bl[:, None] == bcols) & alive[:, None], 1.0, 0.0
+    )
+    part_h = jax.lax.dot_general(
+        jnp.ones((8, TN), jnp.float32), onehot, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (8, 128)
+    hist_ref[...] = hist_ref[...] + part_h[:1].astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bucket_update_pallas(
+    counts: jax.Array,
+    alive: jax.Array,
+    idx: jax.Array,
+    dec: jax.Array,
+    interpret: bool = True,
+):
+    """Batched decrease-key: ``(new_counts, min, bucket_hist)``.
+
+    ``new_counts[i] = counts[i] - sum(dec[idx == i])`` (int32); ``min``
+    is the masked minimum of the updated counts over ``alive`` (int32,
+    INT32_MAX when none alive); ``bucket_hist`` is the (32,) occupancy
+    of the geometric ranges over alive entries. ``idx == counts.shape
+    [0]`` is the drop sentinel. Update batches beyond MAX_UPDATE_CAP
+    raise (use the jnp reference via ``ops.bucket_update``).
+    """
+    if idx.shape[0] > MAX_UPDATE_CAP:
+        raise ValueError(
+            f"bucket_update_pallas batch {idx.shape[0]} exceeds "
+            f"MAX_UPDATE_CAP {MAX_UPDATE_CAP} — the f32 limb "
+            "contractions would lose exactness; use the jnp reference "
+            "(ops.bucket_update(use_pallas=False))"
+        )
+    n = counts.shape[0]
+    n_pad = ((n + TN - 1) // TN) * TN
+    cp = jnp.pad(counts.astype(jnp.int32), (0, n_pad - n))
+    ap = jnp.pad(alive.astype(jnp.int32), (0, n_pad - n))
+    k = idx.shape[0]
+    k_pad = ((k + 127) // 128) * 128
+    # padded update lanes target the padded count region (>= n): their
+    # delta lands on lanes the wrapper slices off and alive masks out
+    ip = jnp.pad(idx.astype(jnp.int32), (0, k_pad - k),
+                 constant_values=n_pad)
+    ip = jnp.where((ip < 0) | (ip >= n), jnp.int32(n_pad), ip)
+    dp = jnp.pad(dec.astype(jnp.int32), (0, k_pad - k))
+    grid = (n_pad // TN,)
+    out, mn, hist = pl.pallas_call(
+        _update_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TN,), lambda t: (t,)),
+            pl.BlockSpec((TN,), lambda t: (t,)),
+            pl.BlockSpec((k_pad,), lambda t: (0,)),
+            pl.BlockSpec((k_pad,), lambda t: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TN,), lambda t: (t,)),
+            pl.BlockSpec((1, 1), lambda t: (0, 0)),
+            pl.BlockSpec((1, 128), lambda t: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+            jax.ShapeDtypeStruct((1, 128), jnp.int32),
+        ],
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("arbitrary",))
+        )
+        if not interpret
+        else None,
+        interpret=interpret,
+    )(cp, ap, ip, dp)
+    return out[:n], mn[0, 0], hist[0, :NUM_BUCKETS]

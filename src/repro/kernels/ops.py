@@ -25,6 +25,7 @@ import jax
 
 from . import ref as _ref
 from .bucket_min import bucket_min_pallas
+from .bucket_update import MAX_UPDATE_CAP, bucket_update_pallas
 from .butterfly_combine import butterfly_combine_pallas
 from .wedge_count import wedge_histogram_pallas
 from .wedge_fused import fused_count_tiles_pallas
@@ -34,6 +35,7 @@ __all__ = [
     "wedge_histogram",
     "butterfly_combine",
     "bucket_min",
+    "bucket_update",
     "fused_count_tiles",
 ]
 
@@ -82,6 +84,29 @@ def bucket_min(
     return _ref.bucket_min_ref(counts, alive)
 
 
+def bucket_update(
+    counts,
+    alive,
+    idx,
+    dec,
+    use_pallas: bool = False,
+    interpret: Optional[bool] = None,
+):
+    """Julienne-style batched decrease-key: apply the (idx, dec) update
+    batch to ``counts`` and return ``(new_counts, min over alive,
+    geometric-bucket occupancy)`` from the same pass (see
+    ``bucket_update``). The kernel path requires int32 counts and a
+    batch of at most MAX_UPDATE_CAP entries; callers outside that
+    contract (or off the compiled backend — the device peeling loops
+    decide at trace time) use the jnp reference.
+    """
+    if use_pallas and idx.shape[0] <= MAX_UPDATE_CAP:
+        return bucket_update_pallas(
+            counts, alive, idx, dec, interpret=_resolve(interpret)
+        )
+    return _ref.bucket_update_ref(counts, alive, idx, dec)
+
+
 def fused_count_tiles(
     tile_bounds,
     offsets,
@@ -100,7 +125,8 @@ def fused_count_tiles(
 ):
     """Zero-materialization fused counting over vertex-aligned wedge
     tiles (``engine="fused_pallas"`` hot path; see ``wedge_fused``).
-    Returns (total int32 limbs (2,), per_vertex (n_pad,), per_edge (m,)).
+    Returns (total int32 limbs (2,), per_vertex limbs (n_pad, 2),
+    per_edge limbs (m, 2)) — all exact 64-bit counts as (lo, hi) pairs.
     """
     kw = dict(
         tile_cap=tile_cap, n_pad=n_pad, m=m, direction=direction, mode=mode

@@ -15,6 +15,7 @@ __all__ = [
     "wedge_histogram_ref",
     "butterfly_combine_ref",
     "bucket_min_ref",
+    "bucket_update_ref",
     "fused_count_tiles_ref",
 ]
 
@@ -60,6 +61,49 @@ def bucket_min_ref(counts: jax.Array, alive: jax.Array) -> jax.Array:
     )
 
 
+def bucket_update_ref(
+    counts: jax.Array,
+    alive: jax.Array,
+    idx: jax.Array,
+    dec: jax.Array,
+):
+    """Mirror of ``bucket_update.bucket_update_pallas``: one batched
+    decrease-key pass returning ``(new_counts, min, bucket_hist)``.
+
+    ``new_counts`` stays in the counts dtype (the kernel is int32-only;
+    parity is asserted on int32 inputs). ``min`` follows the
+    ``bucket_min`` clamp contract for wider dtypes; ``bucket_hist`` is
+    the (32,) occupancy of the geometric ranges ``bucket(v) =
+    bit_length(max(v, 0))`` over alive entries. ``idx`` out of
+    ``[0, n)`` (the ``n`` sentinel included) drops the update; its
+    ``dec`` must be 0-safe anyway. ``dec`` must be nonnegative and
+    below 2^31 (the kernel's limb contract).
+    """
+    from .bucket_update import NUM_BUCKETS
+
+    n = counts.shape[0]
+    idx = idx.astype(jnp.int32)
+    safe = jnp.where((idx >= 0) & (idx < n), idx, jnp.int32(n))
+    new = counts.at[safe].add(-dec.astype(counts.dtype))
+    inf = jnp.int32(np.iinfo(np.int32).max)
+    c32 = new
+    if new.dtype.itemsize > 4:  # clamp, don't wrap (bucket_min contract)
+        c32 = jnp.minimum(new, jnp.asarray(inf, new.dtype))
+    c32 = c32.astype(jnp.int32)
+    live = alive.astype(jnp.int32) > 0
+    mn = jnp.min(jnp.where(live, c32, inf))
+    v = jnp.maximum(c32, 0)
+    bl = jnp.zeros(v.shape, jnp.int32)
+    for j in range(31):
+        bl = bl + (v >= jnp.int32(1 << j)).astype(jnp.int32)
+    hist = (
+        jnp.zeros((NUM_BUCKETS,), jnp.int32)
+        .at[bl]
+        .add(live.astype(jnp.int32))
+    )
+    return new, mn, hist
+
+
 def fused_count_tiles_ref(
     tile_bounds: jax.Array,
     offsets: jax.Array,
@@ -78,12 +122,25 @@ def fused_count_tiles_ref(
     vertex-aligned tile semantics (reconstruct, aggregate in-tile,
     combine, accumulate partials) expressed with plain jnp scatter-adds
     instead of one-hot MXU panels. Bit-identical integer outputs: the
-    kernel's f32 contractions are exact by the MAX_TILE_CAP contract."""
+    kernel's f32 contractions are exact by the MAX_TILE_CAP contract,
+    and the per-vertex/per-edge (lo, hi) limb accumulation mirrors the
+    kernel's per-tile uint32 carry chain exactly."""
+
+    def _limb_add(lo, hi, part):
+        """Accumulate a nonnegative int32 per-tile partial into (lo, hi)
+        uint32-style limbs — the kernel's carry chain."""
+        part_u = part.astype(jnp.uint32)
+        lo_u = lo.astype(jnp.uint32) + part_u
+        carry = (lo_u < part_u).astype(jnp.int32)
+        return lo_u.astype(jnp.int32), hi + carry
+
     e_pad = int(neighbors.shape[0])
     n_tiles = int(tile_bounds.shape[0])
     tot = jnp.zeros((2,), jnp.int32)
-    vert = jnp.zeros((n_pad,), jnp.int32)
-    edge = jnp.zeros((m,), jnp.int32)
+    vlo = jnp.zeros((n_pad,), jnp.int32)
+    vhi = jnp.zeros((n_pad,), jnp.int32)
+    elo = jnp.zeros((m,), jnp.int32)
+    ehi = jnp.zeros((m,), jnp.int32)
     lid = jnp.arange(tile_cap, dtype=jnp.int32)
     for t in range(n_tiles):
         ws = tile_bounds[t, 0]
@@ -125,11 +182,19 @@ def fused_count_tiles_ref(
             tot = jnp.stack([lo_new.astype(jnp.int32), tot[1] + carry])
         if mode in ("vertex", "all"):
             oob = jnp.int32(n_pad)  # scatter drops out-of-bounds
-            vert = vert.at[jnp.where(rep, x1, oob)].add(c2)
-            vert = vert.at[jnp.where(rep, x2, oob)].add(c2)
-            vert = vert.at[jnp.where(valid, y, oob)].add(dm1)
+            part = jnp.zeros((n_pad,), jnp.int32)
+            part = part.at[jnp.where(rep, x1, oob)].add(c2)
+            part = part.at[jnp.where(rep, x2, oob)].add(c2)
+            part = part.at[jnp.where(valid, y, oob)].add(dm1)
+            vlo, vhi = _limb_add(vlo, vhi, part)
         if mode in ("edge", "all"):
             oob = jnp.int32(m)
-            edge = edge.at[jnp.where(valid, undirected_id[e], oob)].add(dm1)
-            edge = edge.at[jnp.where(valid, undirected_id[pos], oob)].add(dm1)
-    return tot, vert, edge
+            part = jnp.zeros((m,), jnp.int32)
+            part = part.at[jnp.where(valid, undirected_id[e], oob)].add(dm1)
+            part = part.at[jnp.where(valid, undirected_id[pos], oob)].add(dm1)
+            elo, ehi = _limb_add(elo, ehi, part)
+    return (
+        tot,
+        jnp.stack([vlo, vhi], axis=-1),
+        jnp.stack([elo, ehi], axis=-1),
+    )

@@ -34,8 +34,11 @@ Precision contract (all outputs exact):
     time.
   - the global total accumulates across tiles as two uint32-style int32
     limbs with carry (exact for totals < 2^63);
-  - per-vertex / per-edge outputs accumulate in int32 (callers wanting
-    wider counts use the pure-XLA fused flavor in ``core.count``).
+  - per-vertex / per-edge outputs accumulate the same way: two-limb
+    (lo, hi) int32 pairs with per-element carry across tiles (the
+    ``butterfly_combine`` widening applied to the scatter panels), so
+    counts >= 2^31 stay exact — recombine with
+    ``core.count._combine_limbs``.
 
 Off-TPU this runs in interpret mode like every kernel in this package
 (``kernels/ops`` backend dispatch); the in-kernel vector gathers and
@@ -62,11 +65,14 @@ def _round_up(x: int, to: int) -> int:
     return ((max(int(x), 1) + to - 1) // to) * to
 
 
-def _weighted_scatter(out_ref, tgt, val, n_out):
-    """out[b] += Σ_i val[i] * [tgt[i] == b] via one-hot MXU panels.
+def _weighted_scatter(lo_ref, hi_ref, tgt, val, n_out):
+    """(lo, hi)[b] += Σ_i val[i] * [tgt[i] == b] via one-hot MXU panels.
 
     ``tgt`` entries equal to ``n_out`` (the sentinel) match no bucket.
-    Exact: ``val`` < 2^23 and every column sum < 2^24 (module contract).
+    Each tile's partial sum is exact (``val`` < 2^23, every column sum
+    < 2^24 — module contract) and accumulates into the two-limb output
+    with a per-element uint32 carry, so per-bucket totals stay exact
+    across arbitrarily many grid steps (counts < 2^63).
     """
     rows = tgt.shape[0]
     ones = jnp.ones((8, rows), jnp.float32)
@@ -82,7 +88,12 @@ def _weighted_scatter(out_ref, tgt, val, n_out):
             (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
         )  # (8, TBV); rows identical
-        out_ref[bt * TBV : (bt + 1) * TBV] += part[0].astype(jnp.int32)
+        sl = slice(bt * TBV, (bt + 1) * TBV)
+        part_u = part[0].astype(jnp.int32).astype(jnp.uint32)
+        lo_u = lo_ref[sl].astype(jnp.uint32) + part_u
+        carry = (lo_u < part_u).astype(jnp.int32)
+        lo_ref[sl] = lo_u.astype(jnp.int32)
+        hi_ref[sl] = hi_ref[sl] + carry
 
 
 def _make_kernel(T, e_pad, n_pad, n_out, m_out, bs_steps, direction, mode):
@@ -91,14 +102,16 @@ def _make_kernel(T, e_pad, n_pad, n_out, m_out, bs_steps, direction, mode):
     do_global = mode in ("global", "all")
 
     def kernel(bounds_ref, off_ref, nbr_ref, src_ref, uid_ref, woff_ref,
-               tot_ref, vert_ref, edge_ref):
+               tot_ref, vlo_ref, vhi_ref, elo_ref, ehi_ref):
         t = pl.program_id(0)
 
         @pl.when(t == 0)
         def _init():
             tot_ref[...] = jnp.zeros_like(tot_ref)
-            vert_ref[...] = jnp.zeros_like(vert_ref)
-            edge_ref[...] = jnp.zeros_like(edge_ref)
+            vlo_ref[...] = jnp.zeros_like(vlo_ref)
+            vhi_ref[...] = jnp.zeros_like(vhi_ref)
+            elo_ref[...] = jnp.zeros_like(elo_ref)
+            ehi_ref[...] = jnp.zeros_like(ehi_ref)
 
         ws = bounds_ref[0, 0]
         we = bounds_ref[0, 1]
@@ -192,7 +205,7 @@ def _make_kernel(T, e_pad, n_pad, n_out, m_out, bs_steps, direction, mode):
                 jnp.where(valid, y, sent),
             ])
             val = jnp.concatenate([c2, c2, dm1])
-            _weighted_scatter(vert_ref, tgt, val, n_out)
+            _weighted_scatter(vlo_ref, vhi_ref, tgt, val, n_out)
         if do_edge:
             sent = jnp.int32(m_out)
             tgt = jnp.concatenate([
@@ -200,7 +213,7 @@ def _make_kernel(T, e_pad, n_pad, n_out, m_out, bs_steps, direction, mode):
                 jnp.where(valid, uid[pos], sent),
             ])
             val = jnp.concatenate([dm1, dm1])
-            _weighted_scatter(edge_ref, tgt, val, m_out)
+            _weighted_scatter(elo_ref, ehi_ref, tgt, val, m_out)
 
     return kernel
 
@@ -227,9 +240,10 @@ def fused_count_tiles_pallas(
 ):
     """Fused tiled butterfly counting over vertex-aligned wedge tiles.
 
-    Returns ``(total_limbs int32 (2,), per_vertex int32 (n_pad,),
-    per_edge int32 (m,))`` — total_limbs holds (lo, hi) uint32-style
-    words of the exact global count; recombine with
+    Returns ``(total_limbs int32 (2,), per_vertex int32 (n_pad, 2),
+    per_edge int32 (m, 2))`` — every output is (lo, hi) uint32-style
+    limb words of the exact 64-bit count (the per-vertex/per-edge
+    arrays stack the limbs on the last axis); recombine with
     ``core.count._combine_limbs``. Modes not requested by ``mode``
     come back as zeros.
     """
@@ -259,7 +273,7 @@ def fused_count_tiles_pallas(
         T, e_pad, n_pad, n_out, m_out, bs_steps, direction, mode
     )
     full = lambda arr: pl.BlockSpec(arr.shape, lambda t: (0,))  # noqa: E731
-    tot, vert, edge = pl.pallas_call(
+    tot, vlo, vhi, elo, ehi = pl.pallas_call(
         kernel,
         grid=(n_tiles,),
         in_specs=[
@@ -273,11 +287,15 @@ def fused_count_tiles_pallas(
         out_specs=[
             pl.BlockSpec((1, 2), lambda t: (0, 0)),
             pl.BlockSpec((n_out,), lambda t: (0,)),
+            pl.BlockSpec((n_out,), lambda t: (0,)),
+            pl.BlockSpec((m_out,), lambda t: (0,)),
             pl.BlockSpec((m_out,), lambda t: (0,)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((1, 2), jnp.int32),
             jax.ShapeDtypeStruct((n_out,), jnp.int32),
+            jax.ShapeDtypeStruct((n_out,), jnp.int32),
+            jax.ShapeDtypeStruct((m_out,), jnp.int32),
             jax.ShapeDtypeStruct((m_out,), jnp.int32),
         ],
         compiler_params=dict(
@@ -294,4 +312,6 @@ def fused_count_tiles_pallas(
         undirected_id.astype(jnp.int32),
         w_off.astype(jnp.int32),
     )
-    return tot[0], vert[:n_pad], edge[:m]
+    vert = jnp.stack([vlo[:n_pad], vhi[:n_pad]], axis=-1)
+    edge = jnp.stack([elo[:m], ehi[:m]], axis=-1)
+    return tot[0], vert, edge

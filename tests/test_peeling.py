@@ -145,7 +145,13 @@ def test_device_engine_frontier_overflow_falls_back():
     frontier buffers; the engine must fall back to the host path (never
     silently truncate) and still match the oracle. The graph is big
     enough that some round's frontier exceeds the 128-slot floor, so
-    the in-graph overflow latch genuinely fires (device run -> None)."""
+    the in-graph overflow latch genuinely fires (device run -> None).
+    The materializing subtract trips it on both algorithms; the fused
+    subtract has no level-2/stored frontier buffer left to overflow, so
+    WPEEL-V fused stays on device even under max_frontier=1 (asserted),
+    and PEEL-V fused only latches when a round's *level-1* expansion
+    exceeds the cap (forced with a disjoint-biclique graph whose first
+    peel round releases 15 vertices of degree 15 at once)."""
     import repro.core.peel as peel_mod
 
     g = rand_graph(30, 20, 300, 0)
@@ -160,18 +166,42 @@ def test_device_engine_frontier_overflow_falls_back():
 
     peel_mod._peel_tips_device_run = spy
     try:
-        d = peel_tips(g, side=0, engine="device", max_frontier=1)
-        ds = peel_tips_stored(g, side=0, engine="device", max_frontier=1)
+        dm = peel_tips(
+            g, side=0, engine="device", max_frontier=1,
+            subtract="materialize",
+        )
+        ds = peel_tips_stored(
+            g, side=0, engine="device", max_frontier=1,
+            subtract="materialize",
+        )
+        # WPEEL-V fused has no frontier buffer: the cap cannot overflow
+        dsf = peel_tips_stored(g, side=0, engine="device", max_frontier=1)
         # sanity: without the cap, the device engine handles this graph
         full = peel_tips(g, side=0, engine="device")
     finally:
         peel_mod._peel_tips_device_run = orig
-    # both capped runs overflowed on device and fell back to host
+    # the capped materializing runs overflowed -> host fallback
     assert device_returns[0] is None and device_returns[1] is None
-    assert device_returns[2] is not None
-    assert np.array_equal(d.numbers, want)
-    assert np.array_equal(ds.numbers, want)
-    assert np.array_equal(full.numbers, want)
+    assert device_returns[2] is not None  # stored fused stays on device
+    assert device_returns[3] is not None
+    for r in (dm, ds, dsf, full):
+        assert np.array_equal(r.numbers, want)
+
+    # fused PEEL-V level-1 latch: K(15,15) peels in one >128-slot round
+    a = np.stack([np.repeat(np.arange(15), 15),
+                  np.tile(np.arange(15), 15)], axis=1)
+    b = np.stack([np.repeat(np.arange(20), 20) + 15,
+                  np.tile(np.arange(20), 20) + 15], axis=1)
+    g2 = BipartiteGraph(35, 35, np.concatenate([a, b]))
+    want2 = oracle_tip(g2, 0)
+    device_returns.clear()
+    peel_mod._peel_tips_device_run = spy
+    try:
+        d2 = peel_tips(g2, side=0, engine="device", max_frontier=1)
+    finally:
+        peel_mod._peel_tips_device_run = orig
+    assert device_returns[0] is None  # level-1 overflow -> host fallback
+    assert np.array_equal(d2.numbers, want2)
 
 
 def test_stored_hash_overflow_regression():
@@ -211,6 +241,244 @@ def test_tip_monotone_under_kappa():
     g = rand_graph(15, 12, 60, 11)
     r = peel_tips(g, side=0)
     assert (np.diff([0] + sorted(r.numbers.tolist())) >= 0).all()
+
+
+# -- fused subtract / bucketed decrease-key / adaptive schedule (PR 4) --
+
+
+@pytest.mark.parametrize("subtract", ["fused", "materialize"])
+@pytest.mark.parametrize("decrease_key", ["bucket", "scatter"])
+def test_subtract_decrease_key_matrix_bitwise(subtract, decrease_key):
+    """Every (subtract, decrease_key) combination — on both engines and
+    both tip algorithms — produces bitwise-identical numbers, rounds,
+    and round sizes (integer scatter sums commute, tiles never split a
+    group)."""
+    g = rand_graph(12, 9, 40, 3)
+    base = peel_tips(g, side=0, subtract="materialize",
+                     decrease_key="scatter")
+    for engine in ("host", "device"):
+        r = peel_tips(g, side=0, engine=engine, subtract=subtract,
+                      decrease_key=decrease_key)
+        rs = peel_tips_stored(g, side=0, engine=engine, subtract=subtract,
+                              decrease_key=decrease_key)
+        for got in (r, rs):
+            assert np.array_equal(got.numbers, base.numbers)
+            assert got.rounds == base.rounds
+            assert np.array_equal(got.round_sizes, base.round_sizes)
+    assert np.array_equal(base.numbers, oracle_tip(g, 0))
+
+
+def test_fused_subtract_forced_multi_tile():
+    """A tiny tile_budget forces the fused subtract through many tiles
+    per round (tile_cap collapses to the single-vertex alignment
+    floor); results stay bitwise-equal on both engines."""
+    g = rand_graph(14, 11, 60, 5)
+    want = peel_tips(g, side=0, subtract="materialize")
+    for engine in ("host", "device"):
+        got = peel_tips(g, side=0, engine=engine, subtract="fused",
+                        tile_budget=1)
+        assert np.array_equal(got.numbers, want.numbers), engine
+        gs = peel_tips_stored(g, side=0, engine=engine, subtract="fused",
+                              tile_budget=1)
+        assert np.array_equal(gs.numbers, want.numbers), engine
+    wd = peel_wings(g, engine="device", subtract="fused", tile_budget=1)
+    assert np.array_equal(wd.numbers, peel_wings(g).numbers)
+
+
+def test_fused_subtract_hash_overflow_in_tile():
+    """Forced hash-table overflow (4-slot table) inside the fused tile
+    loop falls back to sort in-graph, per tile, on both engines."""
+    g = rand_graph(12, 9, 50, 0)
+    want = oracle_tip(g, 0)
+    for engine in ("host", "device"):
+        got = peel_tips(g, side=0, aggregation="hash", engine=engine,
+                        subtract="fused", hash_bits=2)
+        assert np.array_equal(got.numbers, want), engine
+
+
+def test_adaptive_capacity_schedule_parity_and_segments(monkeypatch):
+    """capacity_schedule="adaptive" shrinks the device engine's planned
+    buffers as the graph empties: results stay bitwise-identical to the
+    fixed schedule, and the decomposition genuinely re-enters with
+    smaller caps (more than one device_get, still O(log cap) many)."""
+    g = rand_graph(30, 20, 300, 0)
+    want = peel_tips(g, side=0)
+    calls = []
+    orig = jax.device_get
+    monkeypatch.setattr(
+        jax, "device_get", lambda x: (calls.append(1), orig(x))[1]
+    )
+    for subtract in ("fused", "materialize"):
+        calls.clear()
+        got = peel_tips(
+            g, side=0, engine="device", subtract=subtract,
+            capacity_schedule="adaptive", counts=_tip_counts(g, 0),
+        )
+        assert np.array_equal(got.numbers, want.numbers), subtract
+        assert got.rounds == want.rounds
+        n_segments = len(calls)
+        assert 1 < n_segments <= 20, (subtract, n_segments)
+
+
+def _tip_counts(g, side):
+    from repro.core import count_butterflies
+
+    r = count_butterflies(g, mode="vertex")
+    return r.per_u if side == 0 else r.per_v
+
+
+def test_fused_peel_subtract_temp_memory_is_o_tile():
+    """The acceptance-criterion regression: the fused peeling
+    subtract's compiled temp footprint must NOT scale with the frontier
+    wedge total, while the materializing (PR 2) path's does. Two graphs
+    with ~9x stored-wedge totals; the fused tile budget held fixed
+    across both (the shared alignment floor)."""
+    import repro.core.peel as pm
+
+    graphs = {
+        "small": rand_graph(2500, 2000, 6000, 11),  # sparse, few wedges
+        "big": rand_graph(70, 55, 6000, 11),  # dense, many wedges
+    }
+    plans = {}
+    tile_cap = 128
+    for name, g in graphs.items():
+        woff, w_u2 = pm._stored_wedge_csr(g, 0)
+        rows = np.diff(woff)
+        plans[name] = (g, woff, w_u2)
+        tile_cap = max(tile_cap, pm._pow2_pad(2 * int(rows.max(initial=0))))
+    stats = {}
+    for name, (g, woff, w_u2) in plans.items():
+        import jax.numpy as jnp
+
+        n_side = g.n_u
+        w_total = int(woff[-1])
+        off_d = jnp.asarray(woff, jnp.int32)
+        nbr_d = jnp.asarray(w_u2, jnp.int32)
+        work1 = jnp.zeros(n_side, jnp.int32)
+        work2 = jnp.asarray(np.diff(woff).astype(np.int32))
+        st = (
+            jnp.zeros(n_side, jnp.int32),
+            jnp.ones((n_side,), jnp.bool_),
+            jnp.zeros((n_side,), jnp.int32),
+            jnp.int32(0),
+            jnp.int32(0),
+            jnp.zeros((n_side,), jnp.int32),
+            jnp.array(False),
+            jnp.int32(0),
+            jnp.int32(0),
+            jnp.int32(0),
+        )
+        common = dict(
+            aggregation="hash", cap1=128, n_side=n_side, stored=True,
+            hash_bits=None, decrease_key="bucket", use_kernel=False,
+            adaptive=False,
+        )
+        fused = pm._peel_tips_device.lower(
+            off_d, nbr_d, jnp.int32(0), work1, work2, st,
+            cap2=128, tile_cap=tile_cap, subtract="fused", **common,
+        ).compile().memory_analysis()
+        mat = pm._peel_tips_device.lower(
+            off_d, nbr_d, jnp.int32(0), work1, work2, st,
+            cap2=pm._pow2_pad(w_total), tile_cap=tile_cap,
+            subtract="materialize", **common,
+        ).compile().memory_analysis()
+        stats[name] = dict(
+            wedges=w_total,
+            fused_temp=int(fused.temp_size_in_bytes),
+            mat_temp=int(mat.temp_size_in_bytes),
+        )
+    ratio_w = stats["big"]["wedges"] / max(stats["small"]["wedges"], 1)
+    assert ratio_w >= 8, stats  # the experiment is meaningful
+    ratio_fused = stats["big"]["fused_temp"] / max(
+        stats["small"]["fused_temp"], 1
+    )
+    ratio_mat = stats["big"]["mat_temp"] / max(stats["small"]["mat_temp"], 1)
+    # fused: O(tile) — flat in the frontier wedge total;
+    # materializing: O(frontier) — tracks the wedge ratio
+    assert ratio_fused < 2.0, stats
+    assert ratio_mat > ratio_w / 2, stats
+    assert stats["big"]["fused_temp"] < stats["big"]["mat_temp"], stats
+
+
+# -- device wing engine (PEEL-E) ----------------------------------------
+
+
+@pytest.mark.parametrize("order", ["degree", "side"])
+@pytest.mark.parametrize("agg", ["sort", "hash"])
+def test_wings_device_parity(order, agg):
+    """peel_wings engine="device" is bitwise-equal to the host engine
+    and the recompute oracle across aggregation × ranking (the counts
+    ordering), for several graphs."""
+    for seed in range(2):
+        g = rand_graph(10, 8, 30, seed)
+        kw = dict(count_kwargs={"order": order}, aggregation=agg)
+        h = peel_wings(g, **kw)
+        d = peel_wings(g, engine="device", **kw)
+        assert np.array_equal(h.numbers, d.numbers), (order, agg, seed)
+        assert h.rounds == d.rounds
+        assert np.array_equal(h.round_sizes, d.round_sizes)
+        assert np.array_equal(d.numbers, oracle_wing(g))
+
+
+def test_wings_device_hash_overflow_in_graph():
+    """Forced hash overflow in the device wing engine's grouped edge
+    subtract falls back to sort in-graph and stays oracle-exact."""
+    g = rand_graph(9, 8, 28, 1)
+    d = peel_wings(g, engine="device", aggregation="hash", hash_bits=2)
+    assert np.array_equal(d.numbers, oracle_wing(g))
+
+
+def test_wings_device_matrix_bitwise():
+    """subtract × decrease_key on the device wing engine all match the
+    host engine bitwise."""
+    g = rand_graph(9, 8, 28, 2)
+    h = peel_wings(g)
+    for subtract in ("fused", "materialize"):
+        for dk in ("bucket", "scatter"):
+            d = peel_wings(g, engine="device", subtract=subtract,
+                           decrease_key=dk)
+            assert np.array_equal(h.numbers, d.numbers), (subtract, dk)
+            assert h.rounds == d.rounds
+
+
+def test_wings_device_no_per_round_sync(monkeypatch):
+    """The device wing round loop never host-syncs: with counts
+    precomputed, the whole decomposition performs exactly one
+    jax.device_get (the final PeelResult fetch)."""
+    from repro.core import count_butterflies
+
+    g = rand_graph(12, 9, 40, 3)
+    counts = count_butterflies(g, mode="edge").per_edge
+    calls = []
+    orig = jax.device_get
+    monkeypatch.setattr(
+        jax, "device_get", lambda x: (calls.append(1), orig(x))[1]
+    )
+    d = peel_wings(g, counts=counts, engine="device")
+    assert len(calls) == 1
+    assert d.rounds >= 2  # the loop really ran multiple rounds
+    assert np.array_equal(d.numbers, oracle_wing(g))
+
+
+def test_wings_adaptive_schedule_parity():
+    """Adaptive capacity schedule on the wing engine stays bitwise."""
+    g = rand_graph(20, 15, 120, 4)
+    h = peel_wings(g)
+    d = peel_wings(g, engine="device", capacity_schedule="adaptive")
+    assert np.array_equal(h.numbers, d.numbers)
+    assert h.rounds == d.rounds
+
+
+def test_peel_knob_validation():
+    g = rand_graph(6, 5, 12, 0)
+    with pytest.raises(ValueError, match="subtract"):
+        peel_tips(g, subtract="banana")
+    with pytest.raises(ValueError, match="decrease_key"):
+        peel_tips_stored(g, decrease_key="fibheap")
+    with pytest.raises(ValueError, match="capacity_schedule"):
+        peel_wings(g, capacity_schedule="sometimes")
+    with pytest.raises(ValueError, match="aggregation"):
+        peel_tips(g, aggregation="histogram")
 
 
 # -- Fibonacci heap (paper §5) ------------------------------------------
