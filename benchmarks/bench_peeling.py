@@ -2,20 +2,25 @@
 wedge-aggregation methods; reports ρ (peeling complexity) per graph.
 
 ``write_json`` additionally produces the machine-readable
-``BENCH_peeling.json`` trajectory (schema v2) comparing:
+``BENCH_peeling.json`` trajectory (schema v3) comparing:
 
   - the host round loop vs the device-resident ``engine="device"``
     while_loop (wall time, round count ρ, blocking host syncs);
   - the **fused** tile-streamed frontier subtract vs the PR 2
     **materializing** expansion (``subtract=`` axis), including
     compiled peak-temp-memory bytes for both device programs per
-    (graph, algo) — the O(tile) vs O(frontier) story in numbers;
+    (graph, algo) — the O(tile) vs O(frontier) story in numbers
+    (``peel_wings`` included since the two-level fused recovery
+    dropped its materialized O(Σ deg²) level-1/level-2 buffers);
   - the Julienne-style **bucketed** decrease-key vs the PR 2
     scatter + per-round ``bucket_min`` (``decrease_key=`` axis);
-  - the fixed vs **adaptive** capacity schedule (tail-round cost).
-
-``peel_wings`` now has its own engine rows (the PR 4 device engine) in
-the same format.
+  - the fixed vs **adaptive** capacity schedule (tail-round cost);
+  - **exact vs bucket-range rounds** (``peel_mode=`` axis, schema v3):
+    every row records both ρ (bucket rounds under range mode) and the
+    re-settle iteration count ``sub_rounds``; the derived
+    ``range_rho_reduction`` per (graph, algo) is the measured
+    Lakhotia-style round-count win, and ``range_bitwise_equal``
+    asserts the numbers stayed bitwise-identical.
 """
 from __future__ import annotations
 
@@ -33,14 +38,18 @@ from repro.core import count_butterflies
 from repro.core.count import default_count_dtype
 from repro.core.peel import (
     _csr,
+    _init_state,
     _level2_totals,
     _peel_tips_device,
+    _peel_wings_device,
     _pow2_pad,
     _stored_wedge_csr,
+    _wing_work_totals,
     peel_tips,
     peel_tips_stored,
     peel_wings,
 )
+from repro.core.wedges import degree_sorted_csr
 from repro.data.graphs import powerlaw_bipartite
 
 PEEL_GRAPHS = {
@@ -95,29 +104,30 @@ def _device_row_ok(g, side, agg, subtract, decrease_key):
     return True, ""
 
 
+def _wings_workloads(g):
+    """Worst-case wing expansion totals — the device planner's own
+    per-edge totals (`peel._wing_work_totals`), summed."""
+    off, nbr, _ = _csr(g)
+    _, _, l1, l2 = _wing_work_totals(g, off, nbr)
+    return int(l1.sum()), int(l2.sum())
+
+
 def _wings_row_ok(g, subtract, decrease_key):
     if jax.default_backend() == "tpu":
         return True, ""
-    off, nbr, _ = _csr(g)
-    deg = np.diff(off)
-    ev = (g.edges[:, 1] + g.n_u).astype(np.int64)
-    lvl1 = int(deg[ev].sum())
-    # the wing loop re-expands its level-1 buffer every round (only the
-    # triple space is tiled), so CPU rows are bounded by cap1 x rho_e
-    if lvl1 > INTERPRET_FRONTIER_BUDGET:
-        return False, f"work budget (per-round level-1 cap1={lvl1})"
+    lvl1, lvl2 = _wings_workloads(g)
     if subtract == "materialize":
-        eu = g.edges[:, 0].astype(np.int64)
-        a_rep = np.repeat(np.arange(g.m), deg[ev])
-        pos = np.concatenate([
-            np.arange(s, s + l) for s, l in zip(off[ev], deg[ev])
-        ]) if lvl1 else np.empty(0, np.int64)
-        u2 = nbr[pos]
-        w = np.minimum(deg[eu[a_rep]], deg[u2])
-        w[u2 == eu[a_rep]] = 0
-        lvl2 = int(w.sum())
+        # the materializing loop re-expands its fixed-capacity level-1
+        # and triple buffers every round, so CPU rows pay cap x rho_e
+        if lvl1 > INTERPRET_FRONTIER_BUDGET:
+            return False, f"interpret-mode budget (level-1 cap1={lvl1})"
         if lvl2 > INTERPRET_FRONTIER_BUDGET:
             return False, f"interpret-mode budget (triple cap2={lvl2})"
+        return True, ""
+    # fused rows have no frontier buffers (two-level recovery): gated
+    # only by the total streamed triple work
+    if lvl2 > BUCKET_WORK_BUDGET:
+        return False, f"work budget (triple space lvl2={lvl2})"
     return True, ""
 
 
@@ -188,18 +198,9 @@ def _device_temp_bytes(g, side: int, stored: bool) -> dict:
     tile_cap = _pow2_pad(max(min(_DEFAULT_TILE_TARGET, max(lvl2, 1)),
                              2 * max_row))
     dtype = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
-    st = (
-        jnp.zeros(n_side, dtype),
-        jnp.ones((n_side,), jnp.bool_),
-        jnp.zeros((n_side,), dtype),
-        jnp.int32(0),
-        jnp.int32(0),
-        jnp.zeros((n_side,), jnp.int32),
-        jnp.array(False),
-        jnp.int32(0),
-        jnp.int32(0),
-        jnp.int32(0),
-    )
+    st = _init_state(jnp.zeros(n_side, dtype), n_side,
+                     decrease_key="bucket", peel_mode="exact",
+                     lvl1=0, lvl2=0)
     common = dict(
         aggregation="sort", cap1=cap1, n_side=n_side, stored=stored,
         hash_bits=None, decrease_key="bucket", use_kernel=False,
@@ -226,16 +227,66 @@ def _device_temp_bytes(g, side: int, stored: bool) -> dict:
     }
 
 
+def _wings_temp_bytes(g) -> dict:
+    """Compiled peak-temp bytes of the device wing program: the
+    two-level fused recovery (no materialized buffers) vs the
+    materializing expansion whose level-1/triple capacities scale with
+    O(Σ deg²)-class totals (same planning as
+    ``peel._peel_wings_device_run``)."""
+    from repro.core.peel import _DEFAULT_TILE_TARGET
+
+    off, nbr, uid = _csr(g)
+    m = g.m
+    eu, ev, l1, l2 = _wing_work_totals(g, off, nbr)
+    lvl1, lvl2 = int(l1.sum()), int(l2.sum())
+    nbr_ds, uid_ds, degs_ds, cumdeg = degree_sorted_csr(off, nbr, uid)
+    tile_cap = _pow2_pad(min(_DEFAULT_TILE_TARGET, max(lvl2, 1)))
+    dtype = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+    st = _init_state(jnp.zeros(m, dtype), m, decrease_key="bucket",
+                     peel_mode="exact", lvl1=0, lvl2=0)
+    args = tuple(
+        jnp.asarray(a if np.asarray(a).size else np.zeros(1), jnp.int32)
+        for a in (off, nbr, uid, eu, ev, nbr_ds, uid_ds, degs_ds, cumdeg,
+                  l1, l2)
+    )
+    common = dict(
+        aggregation="sort", m=m, hash_bits=None, decrease_key="bucket",
+        use_kernel=False, adaptive=False,
+    )
+    fused = _peel_wings_device.lower(
+        *args, st, cap1=128, cap2=128, tile_cap=tile_cap,
+        subtract="fused", **common,
+    ).compile().memory_analysis()
+    mat = _peel_wings_device.lower(
+        *args, st, cap1=_pow2_pad(lvl1), cap2=_pow2_pad(lvl2),
+        tile_cap=tile_cap, subtract="materialize", **common,
+    ).compile().memory_analysis()
+    return {
+        "frontier_wedges": lvl2,
+        "tile_cap": int(tile_cap),
+        "fused_temp_bytes": int(fused.temp_size_in_bytes),
+        "materialized_temp_bytes": int(mat.temp_size_in_bytes),
+        "temp_ratio": (
+            int(mat.temp_size_in_bytes)
+            / max(int(fused.temp_size_in_bytes), 1)
+        ),
+    }
+
+
 def write_json(path, graphs=("peel_small",), repeats: int = 1) -> dict:
-    """Peeling engine trajectory (schema v2): per (graph, algo, engine,
-    aggregation, subtract, decrease_key, schedule) wall time, rounds,
-    and host-sync count; compiled fused-vs-materializing peak-temp
-    bytes per (graph, algo); derived fused-vs-PR2 speedups. Wall times
-    exclude the butterfly counting pass (counts are precomputed once
-    per graph — the decomposition loop is what the engines differ on).
-    ``path=None`` builds the payload without writing a file."""
+    """Peeling engine trajectory (schema v3): per (graph, algo, engine,
+    aggregation, subtract, decrease_key, schedule, peel_mode) wall
+    time, rounds (bucket rounds under ``peel_mode="range"``),
+    re-settle ``sub_rounds``, and host-sync count; compiled
+    fused-vs-materializing peak-temp bytes per (graph, algo) incl. the
+    wing engine; derived fused-vs-PR2 speedups and the range-mode ρ
+    reduction (with a bitwise-parity check against the exact rows).
+    Wall times exclude the butterfly counting pass (counts are
+    precomputed once per graph — the decomposition loop is what the
+    engines differ on). ``path=None`` builds the payload without
+    writing a file."""
     payload: dict = {
-        "schema": "bench_peeling/v2",
+        "schema": "bench_peeling/v3",
         "backend": jax.default_backend(),
         "graphs": {},
         "runs": [],
@@ -245,7 +296,7 @@ def write_json(path, graphs=("peel_small",), repeats: int = 1) -> dict:
     }
 
     def add_row(gname, algo, engine, agg, subtract, decrease_key,
-                schedule, res, syncs, wall):
+                schedule, res, syncs, wall, peel_mode="exact"):
         payload["runs"].append({
             "graph": gname,
             "algo": algo,
@@ -254,7 +305,11 @@ def write_json(path, graphs=("peel_small",), repeats: int = 1) -> dict:
             "subtract": subtract,
             "decrease_key": decrease_key,
             "schedule": schedule,
+            "peel_mode": peel_mode,
             "rounds": int(res.rounds),
+            "sub_rounds": int(
+                res.rounds if res.sub_rounds is None else res.sub_rounds
+            ),
             "max_number": int(res.numbers.max(initial=0)),
             "host_syncs": syncs,
             "wall_s": wall,
@@ -271,6 +326,39 @@ def write_json(path, graphs=("peel_small",), repeats: int = 1) -> dict:
             "reason": reason,
         })
 
+    range_info: dict = {}
+
+    def range_rows(gname, algo, run_host, run_device, device_ok,
+                   ref_res):
+        """One host + one default-device ``peel_mode="range"`` row,
+        plus the derived ρ-reduction bookkeeping vs the exact rows."""
+        res, syncs = _count_host_syncs(run_host)
+        t = _time_warm(run_host, repeats=repeats)
+        add_row(gname, algo, "host", "sort", "fused", "host", "fixed",
+                res, syncs, t, peel_mode="range")
+        equal = bool(np.array_equal(res.numbers, ref_res.numbers))
+        rng_rounds = int(res.rounds)
+        ok, reason = device_ok
+        if ok:
+            dres, syncs = _count_host_syncs(run_device)
+            t = _time_warm(run_device, repeats=repeats)
+            add_row(gname, algo, "device", "sort", "fused", "bucket",
+                    "fixed", dres, syncs, t, peel_mode="range")
+            equal = equal and bool(
+                np.array_equal(dres.numbers, ref_res.numbers)
+            )
+            rng_rounds = int(dres.rounds)
+        else:
+            skip(gname, algo, "device", "sort", "fused", "bucket",
+                 reason)
+        range_info[f"{gname}/{algo}"] = {
+            "exact_rho": int(ref_res.rounds),
+            "range_rho": rng_rounds,
+            "range_rho_reduction": int(ref_res.rounds) / max(rng_rounds, 1),
+            "range_sub_rounds": int(res.sub_rounds),
+            "range_bitwise_equal": equal,
+        }
+
     for gname in graphs:
         g = PEEL_GRAPHS[gname]()
         side, counts = _tip_inputs(g)
@@ -281,6 +369,7 @@ def write_json(path, graphs=("peel_small",), repeats: int = 1) -> dict:
             ("peel_tips", peel_tips),
             ("peel_tips_stored", peel_tips_stored),
         ):
+            ref_res = None  # host (sort, fused) exact run: parity ref
             # host engine: fused (default) vs materializing subtract
             for agg in ("sort", "hash"):
                 for subtract in ("fused", "materialize"):
@@ -291,6 +380,8 @@ def write_json(path, graphs=("peel_small",), repeats: int = 1) -> dict:
                         engine="host", subtract=subtract,
                     )
                     res, syncs = _count_host_syncs(run)
+                    if agg == "sort" and subtract == "fused":
+                        ref_res = res
                     t = _time_warm(run, repeats=repeats)
                     add_row(gname, algo, "host", agg, subtract, "host",
                             "fixed", res, syncs, t)
@@ -314,22 +405,32 @@ def write_json(path, graphs=("peel_small",), repeats: int = 1) -> dict:
                     t = _time_warm(run, repeats=repeats)
                     add_row(gname, algo, "device", agg, subtract, dk,
                             schedule, res, syncs, t)
+            # peel_mode="range": bucket rounds, bitwise-equal numbers
+            range_rows(
+                gname, algo,
+                lambda: fn(g, counts=counts, side=side, engine="host",
+                           peel_mode="range"),
+                lambda: fn(g, counts=counts, side=side, engine="device",
+                           peel_mode="range"),
+                _device_row_ok(g, side, "sort", "fused", "bucket"),
+                ref_res,
+            )
             payload["memory"].append({
                 "graph": gname,
                 "algo": algo,
                 **_device_temp_bytes(g, side, algo == "peel_tips_stored"),
             })
 
-        # PEEL-E: host loop + the PR 4 device engine
+        # PEEL-E: host loop + the device engine
         re_ = count_butterflies(
             g, mode="edge", count_dtype=default_count_dtype()
         )
         ecounts = np.asarray(re_.per_edge)
         run = lambda: peel_wings(g, counts=ecounts)  # noqa: E731
-        res, syncs = _count_host_syncs(run)
+        wres, syncs = _count_host_syncs(run)
         t = _time_warm(run, repeats=repeats)
         add_row(gname, "peel_wings", "host", "sort", "fused", "host",
-                "fixed", res, syncs, t)
+                "fixed", wres, syncs, t)
         for subtract, dk, schedule in DEVICE_VARIANTS:
             ok, reason = _wings_row_ok(g, subtract, dk)
             if not ok:
@@ -344,13 +445,29 @@ def write_json(path, graphs=("peel_small",), repeats: int = 1) -> dict:
             t = _time_warm(run, repeats=repeats)
             add_row(gname, "peel_wings", "device", "sort", subtract, dk,
                     schedule, res, syncs, t)
+        range_rows(
+            gname, "peel_wings",
+            lambda: peel_wings(g, counts=ecounts, engine="host",
+                               peel_mode="range"),
+            lambda: peel_wings(g, counts=ecounts, engine="device",
+                               peel_mode="range"),
+            _wings_row_ok(g, "fused", "bucket"),
+            wres,
+        )
+        payload["memory"].append({
+            "graph": gname,
+            "algo": "peel_wings",
+            **_wings_temp_bytes(g),
+        })
 
     # derived: the ISSUE 4 acceptance comparisons (device, sort rows)
     def _wall(gname, algo, subtract, dk, schedule="fixed"):
         for r in payload["runs"]:
             if (r["graph"], r["algo"], r["engine"], r["aggregation"],
-                    r["subtract"], r["decrease_key"], r["schedule"]) == (
-                    gname, algo, "device", "sort", subtract, dk, schedule):
+                    r["subtract"], r["decrease_key"], r["schedule"],
+                    r["peel_mode"]) == (
+                    gname, algo, "device", "sort", subtract, dk, schedule,
+                    "exact"):
                 return r["wall_s"]
         return None
 
@@ -370,8 +487,10 @@ def write_json(path, graphs=("peel_small",), repeats: int = 1) -> dict:
                 d["fused_no_slower_than_pr2"] = f_bk <= pr2
             if f_bk and f_ad:
                 d["adaptive_vs_fixed_speedup"] = f_bk / f_ad
+            key = f"{gname}/{algo}"
+            d.update(range_info.get(key, {}))
             if d:
-                payload["derived"][f"{gname}/{algo}"] = d
+                payload["derived"][key] = d
     if path:
         with open(path, "w") as f:
             json.dump(payload, f, indent=2)
@@ -393,10 +512,11 @@ def main(argv=None):
     for r in payload["runs"]:
         emit(
             f"{r['algo']}/{r['graph']}/{r['aggregation']}/{r['engine']}/"
-            f"{r['subtract']}/{r['decrease_key']}/{r['schedule']}",
+            f"{r['subtract']}/{r['decrease_key']}/{r['schedule']}/"
+            f"{r['peel_mode']}",
             r["wall_s"] * 1e6,
-            f"rho={r['rounds']},max={r['max_number']},"
-            f"syncs={r['host_syncs']}",
+            f"rho={r['rounds']},sub={r['sub_rounds']},"
+            f"max={r['max_number']},syncs={r['host_syncs']}",
         )
     for s in payload["skipped"]:
         emit(

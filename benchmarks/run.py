@@ -19,12 +19,17 @@ time + temp-memory footprint), and the peeling section writes
 rounds / wall time / host-sync counts) so future PRs have trajectories
 to compare against.
 
-``python -m benchmarks.run [section ...] [--quick]``
+``python -m benchmarks.run [section ...] [--quick | --smoke]``
 
 ``python -m benchmarks.run all`` is the JSON aggregator: it runs the
 counting + fused + peeling sections and refreshes all three
 ``BENCH_*.json`` baselines in one invocation (the other sections print
 CSV only and are excluded — add them explicitly if wanted).
+
+``--smoke`` is the CI variant of ``--quick``: smallest graph only, one
+timing rep, and the CSV sweeps are skipped — each JSON section goes
+straight to its ``write_json`` so a clean checkout refreshes all three
+``BENCH_*.json`` artifacts in minutes.
 """
 import argparse
 import sys
@@ -46,6 +51,9 @@ def main() -> None:
     )
     ap.add_argument("--quick", action="store_true",
                     help="small graphs only (CI)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="smallest graph only, 1 rep, JSON baselines "
+                         "only (CI smoke job)")
     ap.add_argument("--json-out", default="BENCH_counting.json",
                     help="path for the counting perf baseline "
                          "(empty string disables)")
@@ -63,6 +71,27 @@ def main() -> None:
         sections = [s for s in sections if s != "all"]
         sections += [s for s in JSON_SECTIONS if s not in sections]
     print("name,us_per_call,derived")
+    if args.smoke:
+        # CI smoke: JSON baselines only, smallest graph, one rep
+        if "counting" in sections and args.json_out:
+            from . import bench_counting
+            bench_counting.write_json(
+                args.json_out, graphs=("pl_small",), repeats=1
+            )
+            print(f"# wrote {args.json_out}", file=sys.stderr)
+        if "fused" in sections and args.json_out_fused:
+            from . import bench_fused
+            bench_fused.write_json(
+                args.json_out_fused, graphs=("pl_small",), repeats=1
+            )
+            print(f"# wrote {args.json_out_fused}", file=sys.stderr)
+        if "peeling" in sections and args.json_out_peeling:
+            from . import bench_peeling
+            bench_peeling.write_json(
+                args.json_out_peeling, graphs=("peel_small",), repeats=1
+            )
+            print(f"# wrote {args.json_out_peeling}", file=sys.stderr)
+        return
     if "counting" in sections:
         from . import bench_counting
         bench_counting.run(["pl_small"], bench_counting.AGGS,

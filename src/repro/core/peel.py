@@ -54,8 +54,10 @@ and a ``subtract="fused"|"materialize"`` axis:
     per-round frontier buffer entirely (tiles are recovered straight
     from the stored-wedge CSR); PEEL-V keeps only its level-1 buffer
     (O(Σ deg_side) = O(m)) and tiles the dominant level-2 space;
-    PEEL-E keeps level-1/level-2 and tiles the dominant per-butterfly
-    triple space.
+    PEEL-E recovers its per-butterfly triple space straight from flat
+    ids via the degree-sorted CSR (two chained binary searches plus a
+    division — ``wedges.degree_sorted_csr``), dropping the materialized
+    O(Σ deg²) level-1/level-2 buffers the PR 4 engine carried.
 
 Further device-engine knobs:
 
@@ -98,6 +100,53 @@ engines: ``lax.cond`` re-aggregates the same materialized wedge tile
 with sort only when the bounded-probe table actually overflowed (no
 host ``bool(ok)`` sync, no silently wrong counts).
 
+Bucket-range multi-bucket peeling (``peel_mode``)
+-------------------------------------------------
+Every decomposition and engine supports ``peel_mode="exact"|"range"``:
+
+  - **exact** (default) — one round per distinct peel value: the
+    classic κ-driven loop above; ρ = number of distinct-value rounds.
+  - **range** — Julienne/Lakhotia-style bucket-range rounds ("Parallel
+    Peeling of Bipartite Networks", Lakhotia et al. 2021): each round
+    selects the **lowest non-empty geometric bucket** ``[2^(k-1), 2^k)``
+    and processes it to completion. Under ``decrease_key="bucket"`` the
+    selection consumes the O(log n) occupancy histogram that the
+    ``bucket_update`` decrease-key pass already produces every round
+    (previously computed and dead-code-eliminated); under
+    ``"scatter"`` (and on the host engine) the bucket is derived from
+    the masked min's bit length — the two selections provably agree,
+    because the min inhabits the lowest non-empty range. Final
+    tip/wing numbers are **bitwise-identical** to exact peeling: the
+    in-graph *re-settle* iterations within a bucket round replay the
+    exact κ trajectory (peel ``<= κ``, subtract, advance κ) until the
+    masked min leaves the bucket — fall-ins (survivors whose count
+    drops into the active range mid-round) are caught by the same
+    test. ``PeelResult.rounds`` counts bucket rounds — the
+    sync/parallel-round metric that range processing slashes on
+    high-ρ graphs — and ``PeelResult.sub_rounds`` keeps the re-settle
+    iteration count (== exact mode's ρ) so the trade stays measurable
+    (``BENCH_peeling.json`` schema v3 records both).
+
+Shared round-loop substrate
+---------------------------
+Both jitted device engines are thin parameterizations of one substrate
+(the tips and wings loops previously each carried their own copy):
+
+  - ``_device_round_loop`` — the ``lax.while_loop`` round skeleton:
+    carried-min/extract-min, κ update, exact-vs-range round
+    accounting, peel-set selection, adaptive remaining-work tracking,
+    and the overflow latch, parameterized by an ``expand`` callable
+    that turns one round's peel set into count decrements.
+  - ``_stream_tiles`` — the fused-subtract tile ``while_loop``:
+    streams a flat per-round id space through fixed-shape tiles
+    (iterating-endpoint-aligned for the C(d, 2) tip subtract,
+    unaligned for the linear wing subtract), parameterized by a
+    per-tile recover/subtract callable; re-derives the carried
+    (min, occupancy) on zero-frontier rounds.
+  - ``_drive_segments`` — the host-side capacity-segment driver: one
+    ``device_get`` per segment, geometric cap shrinking under the
+    adaptive schedule, ``None`` on overflow (host-engine fallback).
+
 Double-count avoidance (paper §4.3.1/§4.3.2): peeled-set members are
 processed against a virtual rank order (their id); an element of the
 current peel set A is "present" for a lower-id member's enumeration and
@@ -113,12 +162,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops as _kops
+from ..kernels.bucket_update import (
+    NUM_BUCKETS,
+    bit_length,
+    bucket_upper_bound,
+    lowest_nonempty_bucket,
+)
 from .graph import BipartiteGraph
 from .count import _fused_tile_apply, count_butterflies, default_count_dtype
 from .wedges import (
     Wedges,
     _lower_bound_ragged,
     aligned_tile_end,
+    degree_sorted_csr,
     expand_ragged,
     greedy_vertex_blocks,
     ragged_slots_at,
@@ -133,12 +189,14 @@ __all__ = [
     "PEEL_SUBTRACTS",
     "PEEL_DECREASE_KEYS",
     "PEEL_SCHEDULES",
+    "PEEL_MODES",
 ]
 
 PEEL_ENGINES = ("host", "device")
 PEEL_SUBTRACTS = ("fused", "materialize")
 PEEL_DECREASE_KEYS = ("bucket", "scatter")
 PEEL_SCHEDULES = ("fixed", "adaptive")
+PEEL_MODES = ("exact", "range")
 _I32_MAX = int(np.iinfo(np.int32).max)
 
 # Default fused-subtract tile target. Unlike counting — which streams
@@ -157,8 +215,10 @@ _DEFAULT_TILE_TARGET = 1024
 class PeelResult(NamedTuple):
     numbers: np.ndarray  # tip number per side-vertex, or wing per edge
     side: Optional[int]  # 0 = U peeled, 1 = V peeled (tips only)
-    rounds: int  # ρ (peeling complexity)
+    rounds: int  # ρ: distinct-value rounds (exact) / bucket rounds (range)
     round_sizes: np.ndarray  # peeled per round
+    sub_rounds: Optional[int] = None  # range mode: re-settle iterations
+    # (== exact mode's ρ); equals ``rounds`` under peel_mode="exact"
 
 
 def _ranges(starts: np.ndarray, lens: np.ndarray) -> np.ndarray:
@@ -246,30 +306,48 @@ def _level2_totals(off: np.ndarray, nbr: np.ndarray, base: int,
     return w2
 
 
-def _masked_min(b: jax.Array, alive: jax.Array) -> jax.Array:
-    """Masked extract-min in the ``bucket_min`` clamp contract."""
-    return _kops.bucket_min(b, alive, use_pallas=False)
+def _empty_hist(want_hist: bool) -> jax.Array:
+    """Carried-occupancy placeholder: a real (NUM_BUCKETS,) histogram
+    slot when range mode consumes it, a zero-length array otherwise —
+    keeping the unused histogram OUT of the while_loop carry is what
+    lets XLA dead-code-eliminate the reference path's bit-length
+    scatter under ``peel_mode="exact"`` (loop state is always live)."""
+    return jnp.zeros((NUM_BUCKETS if want_hist else 0,), jnp.int32)
 
 
-def _apply_decrements(b, alive, tgt, dec, decrease_key, use_kernel):
+def _masked_state(b: jax.Array, alive: jax.Array, want_hist: bool):
+    """Masked extract-min (+ occupancy when consumed) in the
+    ``bucket_min``/``bucket_update`` contracts — seeds the carried
+    state before round 0 and re-derives it on zero-frontier rounds."""
+    if want_hist:
+        return _kops.bucket_state(b, alive)
+    return _kops.bucket_min(b, alive, use_pallas=False), _empty_hist(False)
+
+
+def _apply_decrements(b, alive, tgt, dec, decrease_key, use_kernel,
+                      want_hist=False):
     """Apply one aggregated update batch to the count array.
 
     ``"scatter"``: the PR 2 one-scatter subtract (min placeholder —
     the round loop runs its own ``bucket_min``). ``"bucket"``: the
     Julienne-style batched decrease-key (``kernels.ops.bucket_update``)
-    — decrements and the next round's masked min in one pass.
-    Returns ``(new_counts, min)``.
+    — decrements, the next round's masked min, and (when ``want_hist``,
+    i.e. range mode) the geometric-bucket occupancy, all in one pass.
+    Returns ``(new_counts, min, hist)`` (hist zero-length unless
+    ``want_hist`` — see ``_empty_hist``).
     """
     if decrease_key == "bucket":
-        # the bucket occupancy is discarded here, so inside the jitted
-        # round loops XLA dead-code-eliminates the reference path's
-        # histogram entirely (measured: bucket ~= scatter wall time on
-        # CPU); the kernel path computes it in-register for free
-        nb, mn, _hist = _kops.bucket_update(
+        nb, mn, hist = _kops.bucket_update(
             b, alive, tgt, dec, use_pallas=use_kernel
         )
-        return nb.astype(b.dtype), mn
-    return b.at[tgt].add(-dec), jnp.int32(_I32_MAX)
+        if not want_hist:
+            # discarded before it reaches the loop carry -> XLA DCEs
+            # the reference path's histogram under exact mode (measured:
+            # bucket ~= scatter wall time on CPU); the kernel path
+            # computes it in-register for free either way
+            hist = _empty_hist(False)
+        return nb.astype(b.dtype), mn, hist
+    return b.at[tgt].add(-dec), jnp.int32(_I32_MAX), _empty_hist(want_hist)
 
 
 def _subtract_tile(
@@ -284,12 +362,14 @@ def _subtract_tile(
     hash_bits: Optional[int] = None,
     decrease_key: str = "scatter",
     use_kernel: bool = False,
+    want_hist: bool = False,
 ):
     """Aggregate one tile of (u1, u2) frontier wedge pairs and subtract
     C(d, 2) from B[u2] — the peeling side of the shared fused tile
     machinery (``count._fused_tile_apply``: tile-local sort/hash with
-    the in-graph hash-overflow sort fallback). Returns ``(b, min)``
-    (min meaningful under ``decrease_key="bucket"`` only).
+    the in-graph hash-overflow sort fallback). Returns
+    ``(b, min, hist)`` (min/hist meaningful under
+    ``decrease_key="bucket"`` only; hist only when ``want_hist``).
     """
     sent = jnp.int32(n_side)
     w = Wedges(
@@ -306,7 +386,7 @@ def _subtract_tile(
         dec = jnp.where(groups.valid, d * (d - 1) // 2, 0)
         tgt = jnp.where(groups.valid, groups.x2, sent)
         return _apply_decrements(b, alive, tgt, dec, decrease_key,
-                                 use_kernel)
+                                 use_kernel, want_hist)
 
     out, _ok = _fused_tile_apply(w, aggregation, consume, "xla", hash_bits)
     return out
@@ -376,7 +456,214 @@ def _host_subtract_frontier(
 
 
 # ---------------------------------------------------------------------------
-# Device-resident tip engine: the whole round loop as one lax.while_loop
+# Shared device round-loop substrate (tips and wings parameterize it)
+# ---------------------------------------------------------------------------
+
+
+class _LoopState(NamedTuple):
+    """Carry of the jitted device round loops (both decompositions)."""
+
+    b: jax.Array  # counts (peeled side / per edge)
+    alive: jax.Array  # bool mask
+    out: jax.Array  # tip / wing numbers
+    kappa: jax.Array  # () int32 peel threshold
+    rounds: jax.Array  # () int32 — bucket rounds under range mode
+    subr: jax.Array  # () int32 re-settle iterations (== rounds, exact)
+    sizes: jax.Array  # (n_out,) int32 peeled per round
+    overflow: jax.Array  # () bool capacity latch
+    mn: jax.Array  # () int32 carried masked min (decrease_key="bucket")
+    hist: jax.Array  # (NUM_BUCKETS,) carried occupancy, or (0,) unused
+    hi: jax.Array  # () int32 active bucket's exclusive upper bound
+    rem1: jax.Array  # () int32 remaining level-1 work (adaptive)
+    rem2: jax.Array  # () int32 remaining level-2 work (adaptive)
+
+
+def _prefix(lens: jax.Array) -> jax.Array:
+    """Exclusive-prefix flat id space over per-segment lengths."""
+    return jnp.concatenate([
+        jnp.zeros((1,), jnp.int32),
+        jnp.cumsum(lens.astype(jnp.int32)),
+    ])
+
+
+def _init_state(b0: jax.Array, n_out: int, *, decrease_key: str,
+                peel_mode: str, lvl1: int, lvl2: int) -> _LoopState:
+    """Round-0 carry for ``_device_round_loop`` (shared by the run
+    wrappers, the benchmarks' memory-analysis probes, and tests)."""
+    alive0 = jnp.ones((n_out,), jnp.bool_)
+    want_hist = peel_mode == "range" and decrease_key == "bucket"
+    if decrease_key == "bucket":
+        mn0, hist0 = _masked_state(b0, alive0, want_hist)
+    else:
+        mn0, hist0 = jnp.int32(_I32_MAX), _empty_hist(False)
+    return _LoopState(
+        b=b0,
+        alive=alive0,
+        out=jnp.zeros((n_out,), b0.dtype),
+        kappa=jnp.int32(0),
+        rounds=jnp.int32(0),
+        subr=jnp.int32(0),
+        sizes=jnp.zeros((n_out,), jnp.int32),
+        overflow=jnp.array(False),
+        mn=mn0,
+        hist=hist0,
+        hi=jnp.int32(0),
+        rem1=jnp.int32(min(lvl1, _I32_MAX - 1)),
+        rem2=jnp.int32(min(lvl2, _I32_MAX - 1)),
+    )
+
+
+def _stream_tiles(b, alive, roff, tile_fn, *, tile_cap: int, aligned: bool,
+                  decrease_key: str, want_hist: bool):
+    """Stream the flat per-round id space ``[0, roff[-1])`` through
+    fixed-shape tiles — the fused-subtract while_loop shared by every
+    decomposition. ``tile_fn(b, wid, tvalid) -> (b, mn, hist)``
+    recovers and subtracts one tile. ``aligned`` cuts tile boundaries
+    at segment boundaries (``aligned_tile_end`` — required when the
+    consumer's per-group C(d, 2) must not split); unaligned tiles
+    advance by the full ``tile_cap`` (linear subtracts split exactly).
+    Returns ``(b, mn, hist)`` with the zero-frontier carried state
+    re-derived via ``_masked_state``.
+    """
+    total = roff[-1]
+
+    def tcond(c):
+        return c[1] < total
+
+    def tbody(c):
+        bt, ts, _mn, _h = c
+        if aligned:
+            te = aligned_tile_end(roff, ts, tile_cap)
+        else:
+            te = jnp.minimum(ts + jnp.int32(tile_cap), total)
+        wid = ts + jnp.arange(tile_cap, dtype=jnp.int32)
+        out_b, mn, h = tile_fn(bt, wid, wid < te)
+        return out_b, te, mn, h
+
+    b, _, mn, hist = jax.lax.while_loop(
+        tcond, tbody,
+        (b, jnp.int32(0), jnp.int32(_I32_MAX), _empty_hist(want_hist)),
+    )
+    if decrease_key == "bucket":
+        # zero-tile rounds still need the post-peel carried state
+        mn, hist = jax.lax.cond(
+            total > 0,
+            lambda _: (mn, hist),
+            lambda _: _masked_state(b, alive, want_hist),
+            None,
+        )
+    return b, mn, hist
+
+
+def _device_round_loop(state: _LoopState, expand, work1, work2, *,
+                       decrease_key: str, peel_mode: str, adaptive: bool,
+                       shrink_caps: tuple):
+    """The jitted round-loop skeleton shared by the tips and wings
+    device engines: extract-min (carried or ``bucket_min``), κ update,
+    exact-vs-range round accounting, peel-set selection/assignment,
+    adaptive remaining-work tracking, and the overflow latch.
+
+    ``expand((b, alive, alive_prev, peel)) -> (b, ovf, mn, hist)``
+    turns one round's peel set into count decrements (the only part
+    the decompositions differ on). ``shrink_caps`` is a static tuple
+    of ``(planned_cap, rem_slot)`` pairs driving the adaptive
+    early-exit (slot 0 = rem1, 1 = rem2).
+
+    Range mode (``peel_mode="range"``): a new bucket round starts
+    whenever the masked min has left the active range ``[.., hi)``;
+    the next range is the lowest non-empty geometric bucket — read
+    from the carried ``bucket_update`` occupancy histogram under
+    ``decrease_key="bucket"``, from the min's bit length otherwise
+    (identical by construction). Iterations *within* a bucket round
+    are the in-graph re-settle: they replay the exact κ trajectory,
+    so the assigned numbers are bitwise-identical to exact mode —
+    only the round accounting (``rounds``, ``sizes``) is per bucket.
+    """
+    dtype = state.b.dtype
+    want_hist = peel_mode == "range" and decrease_key == "bucket"
+
+    def cond(st):
+        go = jnp.any(st.alive) & ~st.overflow
+        if adaptive:
+            shrink = jnp.array(False)
+            rems = (st.rem1, st.rem2)
+            for cap, slot in shrink_caps:
+                if cap > 128:
+                    shrink = shrink | (rems[slot] * 4 <= cap)
+            go = go & ~shrink
+        return go
+
+    def body(st):
+        if decrease_key == "bucket":
+            mn = st.mn
+        else:
+            mn = _kops.bucket_min(st.b, st.alive, use_pallas=True)
+        kappa = jnp.maximum(st.kappa, mn)
+        rounds, hi = st.rounds, st.hi
+        if peel_mode == "range":
+            new_bucket = mn >= hi
+            k_sel = (
+                lowest_nonempty_bucket(st.hist)
+                if want_hist
+                else bit_length(mn)
+            )
+            hi = jnp.where(new_bucket, bucket_upper_bound(k_sel), hi)
+            rounds = rounds + new_bucket.astype(jnp.int32)
+        else:
+            rounds = rounds + 1
+        subr = st.subr + 1
+        peel = st.alive & (st.b <= kappa.astype(dtype))
+        out = jnp.where(peel, kappa.astype(dtype), st.out)
+        alive_prev = st.alive
+        alive = st.alive & ~peel
+        # explicit dtype: under x64 jnp.sum promotes to int64 and the
+        # scatter into the int32 sizes buffer would downcast-warn
+        sizes = st.sizes.at[rounds - 1].add(jnp.sum(peel, dtype=jnp.int32))
+        rem1, rem2 = st.rem1, st.rem2
+        if adaptive:
+            rem1 = rem1 - jnp.sum(jnp.where(peel, work1, 0),
+                                  dtype=jnp.int32)
+            rem2 = rem2 - jnp.sum(jnp.where(peel, work2, 0),
+                                  dtype=jnp.int32)
+
+        def _last_round(args):
+            # nothing left alive: the subtract would be a masked no-op
+            # (the host loops' `if not alive.any(): break`)
+            return (args[0], jnp.array(False), jnp.int32(_I32_MAX),
+                    _empty_hist(want_hist))
+
+        b, ovf_i, mn_next, hist_next = jax.lax.cond(
+            jnp.any(alive), expand, _last_round,
+            (st.b, alive, alive_prev, peel),
+        )
+        return _LoopState(
+            b, alive, out, kappa, rounds, subr, sizes,
+            st.overflow | ovf_i, mn_next, hist_next, hi, rem1, rem2,
+        )
+
+    return jax.lax.while_loop(cond, body, state)
+
+
+def _drive_segments(run, state: _LoopState, adaptive: bool, update_caps):
+    """Host-side capacity-segment driver shared by the run wrappers:
+    invoke the jitted loop, fetch the carry (the per-segment host sync
+    — the only one of the whole decomposition under the fixed
+    schedule), and under the adaptive schedule let ``update_caps``
+    pow2-shrink the planned buffers before re-entering. Returns the
+    final host-side ``_LoopState``, or None when the in-graph overflow
+    latch fired (callers fall back to the host engine)."""
+    while True:
+        host = jax.device_get(run(state))
+        if bool(host.overflow):
+            return None
+        if not adaptive or not host.alive.any():
+            return host
+        update_caps(host)
+        state = _LoopState(*(jnp.asarray(x) for x in host))
+
+
+# ---------------------------------------------------------------------------
+# Device-resident tip engine: the substrate with 2-hop / stored recovery
 # ---------------------------------------------------------------------------
 
 
@@ -385,6 +672,7 @@ def _host_subtract_frontier(
     static_argnames=(
         "aggregation", "cap1", "cap2", "tile_cap", "n_side", "stored",
         "hash_bits", "subtract", "decrease_key", "use_kernel", "adaptive",
+        "peel_mode",
     ),
 )
 def _peel_tips_device(
@@ -393,7 +681,7 @@ def _peel_tips_device(
     base: jax.Array,  # () int32 global-id offset of the peeled side
     work1: jax.Array,  # (n_side,) per-vertex level-1 expansion totals
     work2: jax.Array,  # (n_side,) per-vertex level-2 / stored totals
-    state,  # 10-tuple carry (see st0 in the run wrapper)
+    state: _LoopState,
     *,
     aggregation: str,
     cap1: int,  # level-1 frontier buffer (2-hop engine only)
@@ -406,190 +694,121 @@ def _peel_tips_device(
     decrease_key: str = "bucket",
     use_kernel: bool = False,
     adaptive: bool = False,
+    peel_mode: str = "exact",
 ):
-    """Jitted device round loop (PEEL-V / WPEEL-V). Returns the final
-    carry; the wrapper fetches it with a single ``device_get`` per
-    segment (one segment total under the fixed schedule).
-
-    The body never touches the host: extract-min is the ``bucket_min``
-    kernel or the min carried out of the previous round's
-    ``bucket_update`` pass, bucket selection a masked compare, frontier
-    expansion either a fixed-capacity ``expand_ragged``
-    (``"materialize"``) or the fused tile stream (``"fused"`` — tiles
-    recovered via ``ragged_slots_at``, aligned via
-    ``aligned_tile_end``), and the subtraction the shared hash/sort
-    aggregation (hash overflow handled in-graph). ``overflow`` latches
-    when a round's frontier exceeds a planned capacity; the loop exits
-    immediately and the caller re-runs the host path. Under
-    ``adaptive`` the loop additionally exits when the carried
-    remaining-work bound falls to a quarter of a planned capacity so
-    the wrapper can re-enter with pow2-shrunk buffers.
+    """Jitted device round loop (PEEL-V / WPEEL-V): the shared
+    ``_device_round_loop`` substrate with the tip decompositions'
+    expand callable. Frontier expansion is either a fixed-capacity
+    ``expand_ragged`` (``subtract="materialize"``) or the
+    ``_stream_tiles`` fused tile stream (tiles recovered via
+    ``ragged_slots_at``, boundaries aligned via ``aligned_tile_end``);
+    the subtraction is the shared hash/sort aggregation (hash overflow
+    handled in-graph). ``overflow`` latches when a round's frontier
+    exceeds a planned capacity; the loop exits immediately and the
+    caller re-runs the host path.
     """
-    dtype = state[0].dtype
     nbr_max = nbr.shape[0] - 1
+    want_hist = peel_mode == "range" and decrease_key == "bucket"
 
-    def cond(st):
-        b, alive, tip, kappa, rounds, sizes, overflow, mn_c, rem1, rem2 = st
-        go = jnp.any(alive) & ~overflow
-        if adaptive:
-            shrink = jnp.array(False)
-            if subtract == "materialize" and cap2 > 128:
-                shrink = shrink | (rem2 * 4 <= cap2)
-            if (not stored) and cap1 > 128:
-                shrink = shrink | (rem1 * 4 <= cap1)
-            go = go & ~shrink
-        return go
-
-    def _tile_loop(b, alive, roff, recover):
-        """Stream u1-aligned tiles of the round's frontier wedge space
-        [0, roff[-1]) through the shared tile subtract."""
-        total = roff[-1]
-
-        def tcond(c):
-            return c[1] < total
-
-        def tbody(c):
-            bt, ts, _mn = c
-            te = aligned_tile_end(roff, ts, tile_cap)
-            wid = ts + jnp.arange(tile_cap, dtype=jnp.int32)
-            tvalid = wid < te
+    def _tiles(b, alive, roff, recover):
+        def tile_fn(bt, wid, tvalid):
             u1, u2 = recover(wid)
             u2c = jnp.clip(u2, 0, n_side - 1)
-            tvalid = tvalid & (u2 >= 0) & (u2 < n_side) & alive[u2c]
-            out = _subtract_tile(
-                u1.astype(jnp.int32), u2c.astype(jnp.int32), tvalid, bt,
+            tv = tvalid & (u2 >= 0) & (u2 < n_side) & alive[u2c]
+            return _subtract_tile(
+                u1.astype(jnp.int32), u2c.astype(jnp.int32), tv, bt,
                 alive, aggregation=aggregation, n_side=n_side,
                 hash_bits=hash_bits, decrease_key=decrease_key,
-                use_kernel=use_kernel,
+                use_kernel=use_kernel, want_hist=want_hist,
             )
-            return out[0], te, out[1]
 
-        b, _, mn = jax.lax.while_loop(
-            tcond, tbody, (b, jnp.int32(0), jnp.int32(_I32_MAX))
+        return _stream_tiles(
+            b, alive, roff, tile_fn, tile_cap=tile_cap, aligned=True,
+            decrease_key=decrease_key, want_hist=want_hist,
         )
-        if decrease_key == "bucket":
-            # zero-tile rounds still need the post-peel masked min
-            mn = jax.lax.cond(
-                total > 0,
-                lambda _: mn,
-                lambda _: _masked_min(b, alive),
-                None,
-            )
-        return b, mn
 
-    def body(st):
-        b, alive, tip, kappa, rounds, sizes, overflow, mn_c, rem1, rem2 = st
-        if decrease_key == "bucket":
-            mn = mn_c
+    def expand(args):
+        b, alive, _alive_prev, peel = args
+        if stored:
+            # WPEEL-V: one stored-wedge CSR lookup per peeled vertex
+            lens = jnp.where(peel, off[1:] - off[:-1], 0)
+            if subtract == "fused":
+                # zero-materialization: tiles recovered straight
+                # from the wedge CSR — no frontier buffer at all
+                roff = _prefix(lens)
+                starts = off[:-1]
+
+                def recover(wid):
+                    seg, pos = ragged_slots_at(roff, starts, wid)
+                    return seg, nbr[jnp.clip(pos, 0, nbr_max)]
+
+                b_new, mn2, h2 = _tiles(b, alive, roff, recover)
+                return b_new, jnp.array(False), mn2, h2
+            u1, pos, valid, total = expand_ragged(off[:-1], lens, cap2)
+            u2 = nbr[jnp.clip(pos, 0, nbr_max)]
+            ovf = total > cap2
         else:
-            mn = _kops.bucket_min(b, alive, use_pallas=True)
-        kappa = jnp.maximum(kappa, mn)
-        peel = alive & (b <= kappa.astype(dtype))
-        tip = jnp.where(peel, kappa.astype(dtype), tip)
-        alive = alive & ~peel
-        # explicit dtype: under x64 jnp.sum promotes to int64 and the
-        # scatter into the int32 sizes buffer would downcast-warn
-        sizes = sizes.at[rounds].set(jnp.sum(peel, dtype=jnp.int32))
-        rounds = rounds + 1
-        if adaptive:
-            rem1 = rem1 - jnp.sum(jnp.where(peel, work1, 0),
-                                  dtype=jnp.int32)
-            rem2 = rem2 - jnp.sum(jnp.where(peel, work2, 0),
-                                  dtype=jnp.int32)
-
-        def _expand_and_subtract(args):
-            b, alive, peel = args
-            if stored:
-                # WPEEL-V: one stored-wedge CSR lookup per peeled vertex
-                lens = jnp.where(peel, off[1:] - off[:-1], 0)
-                if subtract == "fused":
-                    # zero-materialization: tiles recovered straight
-                    # from the wedge CSR — no frontier buffer at all
-                    roff = jnp.concatenate([
-                        jnp.zeros((1,), jnp.int32),
-                        jnp.cumsum(lens.astype(jnp.int32)),
-                    ])
-                    starts = off[:-1]
-
-                    def recover(wid):
-                        seg, pos = ragged_slots_at(roff, starts, wid)
-                        return seg, nbr[jnp.clip(pos, 0, nbr_max)]
-
-                    b_new, mn2 = _tile_loop(b, alive, roff, recover)
-                    return b_new, jnp.array(False), mn2
-                u1, pos, valid, total = expand_ragged(off[:-1], lens, cap2)
-                u2 = nbr[jnp.clip(pos, 0, nbr_max)]
-                ovf = total > cap2
-            else:
-                # PEEL-V: 2-hop re-enumeration (GET-V-WEDGES). Level 1:
-                # peeled u1 -> centers v; level 2: v -> endpoints u2.
-                ids = jnp.arange(n_side, dtype=jnp.int32) + base
-                lens1 = jnp.where(peel, off[ids + 1] - off[ids], 0)
-                seg1, pos1, valid1, tot1 = expand_ragged(
-                    off[ids], lens1, cap1
-                )
-                v = nbr[jnp.clip(pos1, 0, nbr_max)]
-                v = jnp.clip(v, 0, off.shape[0] - 2)
-                lens2 = jnp.where(valid1, off[v + 1] - off[v], 0)
-                if subtract == "fused":
-                    # level-1 stays materialized (O(m)); the dominant
-                    # level-2 space streams through aligned tiles
-                    roff2 = jnp.concatenate([
-                        jnp.zeros((1,), jnp.int32),
-                        jnp.cumsum(lens2.astype(jnp.int32)),
-                    ])
-                    t2 = jnp.zeros((n_side,), jnp.int32).at[
-                        jnp.where(valid1, seg1, jnp.int32(n_side))
-                    ].add(lens2.astype(jnp.int32))
-                    roff_u = jnp.concatenate([
-                        jnp.zeros((1,), jnp.int32), jnp.cumsum(t2),
-                    ])
-                    starts2 = off[v]
-
-                    def recover(wid):
-                        seg2, pos2 = ragged_slots_at(roff2, starts2, wid)
-                        u1 = seg1[jnp.clip(seg2, 0, cap1 - 1)]
-                        u2 = nbr[jnp.clip(pos2, 0, nbr_max)] - base
-                        return u1, u2
-
-                    b_new, mn2 = _tile_loop(b, alive, roff_u, recover)
-                    ovf = tot1 > cap1
-                    return jnp.where(ovf, b, b_new), ovf, mn2
-                seg2, pos2, valid, tot2 = expand_ragged(off[v], lens2, cap2)
-                u1 = seg1[seg2]
-                u2 = nbr[jnp.clip(pos2, 0, nbr_max)] - base
-                ovf = (tot1 > cap1) | (tot2 > cap2)
-            # materializing subtract: whole frontier, one aggregation
-            u2c = jnp.clip(u2, 0, n_side - 1)
-            valid = valid & (u2 >= 0) & (u2 < n_side) & alive[u2c]
-            b_new, mn2 = _subtract_tile(
-                u1.astype(jnp.int32),
-                u2c.astype(jnp.int32),
-                valid,
-                b,
-                alive,
-                aggregation=aggregation,
-                n_side=n_side,
-                hash_bits=hash_bits,
-                decrease_key=decrease_key,
-                use_kernel=use_kernel,
+            # PEEL-V: 2-hop re-enumeration (GET-V-WEDGES). Level 1:
+            # peeled u1 -> centers v; level 2: v -> endpoints u2.
+            ids = jnp.arange(n_side, dtype=jnp.int32) + base
+            lens1 = jnp.where(peel, off[ids + 1] - off[ids], 0)
+            seg1, pos1, valid1, tot1 = expand_ragged(
+                off[ids], lens1, cap1
             )
-            return jnp.where(ovf, b, b_new), ovf, mn2
+            v = nbr[jnp.clip(pos1, 0, nbr_max)]
+            v = jnp.clip(v, 0, off.shape[0] - 2)
+            lens2 = jnp.where(valid1, off[v + 1] - off[v], 0)
+            if subtract == "fused":
+                # level-1 stays materialized (O(m)); the dominant
+                # level-2 space streams through aligned tiles
+                roff2 = _prefix(lens2)
+                t2 = jnp.zeros((n_side,), jnp.int32).at[
+                    jnp.where(valid1, seg1, jnp.int32(n_side))
+                ].add(lens2.astype(jnp.int32))
+                roff_u = _prefix(t2)
+                starts2 = off[v]
 
-        def _last_round(args):
-            # nothing left alive: the subtract would be a masked no-op
-            # (the host loops' `if not alive.any(): break`)
-            return args[0], jnp.array(False), jnp.int32(_I32_MAX)
+                def recover(wid):
+                    seg2, pos2 = ragged_slots_at(roff2, starts2, wid)
+                    u1 = seg1[jnp.clip(seg2, 0, cap1 - 1)]
+                    u2 = nbr[jnp.clip(pos2, 0, nbr_max)] - base
+                    return u1, u2
 
-        b, ovf_i, mn_next = jax.lax.cond(
-            jnp.any(alive), _expand_and_subtract, _last_round,
-            (b, alive, peel),
+                b_new, mn2, h2 = _tiles(b, alive, roff_u, recover)
+                ovf = tot1 > cap1
+                return jnp.where(ovf, b, b_new), ovf, mn2, h2
+            seg2, pos2, valid, tot2 = expand_ragged(off[v], lens2, cap2)
+            u1 = seg1[seg2]
+            u2 = nbr[jnp.clip(pos2, 0, nbr_max)] - base
+            ovf = (tot1 > cap1) | (tot2 > cap2)
+        # materializing subtract: whole frontier, one aggregation
+        u2c = jnp.clip(u2, 0, n_side - 1)
+        valid = valid & (u2 >= 0) & (u2 < n_side) & alive[u2c]
+        b_new, mn2, h2 = _subtract_tile(
+            u1.astype(jnp.int32),
+            u2c.astype(jnp.int32),
+            valid,
+            b,
+            alive,
+            aggregation=aggregation,
+            n_side=n_side,
+            hash_bits=hash_bits,
+            decrease_key=decrease_key,
+            use_kernel=use_kernel,
+            want_hist=want_hist,
         )
-        overflow = overflow | ovf_i
-        return (b, alive, tip, kappa, rounds, sizes, overflow, mn_next,
-                rem1, rem2)
+        return jnp.where(ovf, b, b_new), ovf, mn2, h2
 
-    return jax.lax.while_loop(cond, body, state)
+    shrink_caps = []
+    if subtract == "materialize":
+        shrink_caps.append((cap2, 1))
+    if not stored:
+        shrink_caps.append((cap1, 0))
+    return _device_round_loop(
+        state, expand, work1, work2, decrease_key=decrease_key,
+        peel_mode=peel_mode, adaptive=adaptive,
+        shrink_caps=tuple(shrink_caps),
+    )
 
 
 def _peel_tips_device_run(
@@ -606,6 +825,7 @@ def _peel_tips_device_run(
     capacity_schedule: str = "fixed",
     tile_budget: Optional[int] = None,
     w2: Optional[np.ndarray] = None,
+    peel_mode: str = "exact",
 ) -> Optional[PeelResult]:
     """Capacity-plan, run the device loop, fetch once per segment.
     Returns None when the device engine does not apply (empty side,
@@ -659,36 +879,24 @@ def _peel_tips_device_run(
         not _kops.interpret_default()
         and b0.dtype == jnp.int32
     )
-    alive0 = jnp.ones((n_side,), jnp.bool_)
-    mn0 = (
-        _masked_min(b0, alive0)
-        if decrease_key == "bucket"
-        else jnp.int32(_I32_MAX)
-    )
-    state = (
-        b0,
-        alive0,
-        jnp.zeros((n_side,), b0.dtype),
-        jnp.int32(0),
-        jnp.int32(0),
-        jnp.zeros((n_side,), jnp.int32),
-        jnp.array(False),
-        mn0,
-        jnp.int32(min(lvl1, _I32_MAX - 1)),
-        jnp.int32(min(lvl2, _I32_MAX - 1)),
+    state = _init_state(
+        b0, n_side, decrease_key=decrease_key, peel_mode=peel_mode,
+        lvl1=lvl1, lvl2=lvl2,
     )
     adaptive = capacity_schedule == "adaptive"
-    while True:
-        out = _peel_tips_device(
+    caps = {"cap1": cap1, "cap2": cap2}
+
+    def run(st):
+        return _peel_tips_device(
             off_d,
             nbr_d,
             jnp.int32(base),
             jnp.asarray(work1),
             jnp.asarray(work2),
-            state,
+            st,
             aggregation=aggregation,
-            cap1=cap1,
-            cap2=cap2,
+            cap1=caps["cap1"],
+            cap2=caps["cap2"],
             tile_cap=tile_cap,
             n_side=n_side,
             stored=stored,
@@ -697,25 +905,23 @@ def _peel_tips_device_run(
             decrease_key=decrease_key,
             use_kernel=use_kernel,
             adaptive=adaptive,
+            peel_mode=peel_mode,
         )
-        # the per-segment host sync — the only one of the whole
-        # decomposition under the fixed schedule
-        host = jax.device_get(out)
-        (_, alive_h, tip_h, _, rounds_h, sizes_h, overflow_h, _,
-         rem1_h, rem2_h) = host
-        if bool(overflow_h):
-            return None
-        if not adaptive or not alive_h.any():
-            break
+
+    def update_caps(host):
         # geometric shrink: re-enter with pow2-tightened static caps
         if not stored:
-            cap1 = min(cap1, _pow2_pad(int(rem1_h)))
+            caps["cap1"] = min(caps["cap1"], _pow2_pad(int(host.rem1)))
         if subtract == "materialize":
-            cap2 = min(cap2, _pow2_pad(int(rem2_h)))
-        state = tuple(jnp.asarray(x) for x in host)
-    rounds = int(rounds_h)
+            caps["cap2"] = min(caps["cap2"], _pow2_pad(int(host.rem2)))
+
+    host = _drive_segments(run, state, adaptive, update_caps)
+    if host is None:
+        return None
+    rounds = int(host.rounds)
     return PeelResult(
-        tip_h, side, rounds, sizes_h[:rounds].astype(np.int64)
+        host.out, side, rounds, host.sizes[:rounds].astype(np.int64),
+        sub_rounds=int(host.subr),
     )
 
 
@@ -727,7 +933,7 @@ def _check_engine(engine: str) -> None:
 
 
 def _check_knobs(aggregation: str, subtract: str, decrease_key: str,
-                 capacity_schedule: str) -> None:
+                 capacity_schedule: str, peel_mode: str = "exact") -> None:
     if aggregation not in ("sort", "hash"):
         raise ValueError(
             f"peeling aggregation must be sort|hash, got {aggregation}"
@@ -746,6 +952,40 @@ def _check_knobs(aggregation: str, subtract: str, decrease_key: str,
             f"capacity_schedule must be {'|'.join(PEEL_SCHEDULES)}, "
             f"got {capacity_schedule}"
         )
+    if peel_mode not in PEEL_MODES:
+        raise ValueError(
+            f"peel_mode must be {'|'.join(PEEL_MODES)}, got {peel_mode}"
+        )
+
+
+class _RoundAccounting:
+    """Host-loop round bookkeeping shared by the three host engines —
+    the host mirror of the substrate's exact-vs-range accounting.
+    Exact mode opens one round per iteration; range mode opens a round
+    only when the min leaves the active geometric bucket (the host has
+    no carried histogram, so the next range comes from the min's bit
+    length — identical to the device selection, see module docstring).
+    """
+
+    def __init__(self, peel_mode: str):
+        self.range = peel_mode == "range"
+        self.rounds = 0
+        self.sub_rounds = 0
+        self.sizes: list = []
+        self._hi = 0
+
+    def open_round(self, mn: int) -> None:
+        """Called once per iteration with the pre-peel masked min."""
+        self.sub_rounds += 1
+        if self.range and mn < self._hi:
+            return  # re-settle iteration inside the active bucket
+        if self.range:
+            self._hi = 1 << int(mn).bit_length()
+        self.rounds += 1
+        self.sizes.append(0)
+
+    def peeled(self, k: int) -> None:
+        self.sizes[-1] += int(k)
 
 def peel_tips(
     g: BipartiteGraph,
@@ -760,6 +1000,7 @@ def peel_tips(
     decrease_key: str = "bucket",
     capacity_schedule: str = "fixed",
     tile_budget: Optional[int] = None,
+    peel_mode: str = "exact",
 ) -> PeelResult:
     """Tip decomposition (PEEL-V, Alg. 5).
 
@@ -784,11 +1025,15 @@ def peel_tips(
     ``bucket_min``. ``capacity_schedule="adaptive"`` shrinks the
     device engine's planned buffers geometrically as the graph empties
     (O(log cap) extra host syncs); ``"fixed"`` keeps the one-sync
-    guarantee. All knob combinations produce bitwise-identical
-    results.
+    guarantee. ``peel_mode="range"`` switches to bucket-range rounds
+    (process the whole lowest non-empty geometric bucket per round,
+    Lakhotia-style — see module docstring): same numbers, ρ counted in
+    bucket rounds, re-settle iterations in ``sub_rounds``. All knob
+    combinations produce bitwise-identical numbers.
     """
     _check_engine(engine)
-    _check_knobs(aggregation, subtract, decrease_key, capacity_schedule)
+    _check_knobs(aggregation, subtract, decrease_key, capacity_schedule,
+                 peel_mode)
     side, counts = _side_and_counts(g, counts, side, count_kwargs)
     off, nbr, _ = _csr(g)
     n_side = g.n_u if side == 0 else g.n_v
@@ -801,7 +1046,7 @@ def peel_tips(
             g, counts, side, aggregation, False, max_frontier, hash_bits,
             (off, nbr), subtract=subtract, decrease_key=decrease_key,
             capacity_schedule=capacity_schedule, tile_budget=tile_budget,
-            w2=w2,
+            w2=w2, peel_mode=peel_mode,
         )
         if res is not None:
             return res
@@ -816,17 +1061,17 @@ def peel_tips(
     tip = np.zeros(n_side, dtype=counts.dtype)
     b_dev = jnp.asarray(counts)
     kappa = 0
-    rounds = 0
-    sizes = []
+    acct = _RoundAccounting(peel_mode)
     while alive.any():
         cnt_host = np.asarray(jax.device_get(b_dev))
         cur = np.where(alive, cnt_host, np.iinfo(cnt_host.dtype).max)
-        kappa = max(kappa, int(cur.min()))
+        mn = int(cur.min())
+        kappa = max(kappa, mn)
+        acct.open_round(mn)
         a_ids = np.flatnonzero(alive & (cur <= kappa))
         tip[a_ids] = kappa
         alive[a_ids] = False
-        rounds += 1
-        sizes.append(a_ids.size)
+        acct.peeled(a_ids.size)
         if not alive.any():
             break
         # -- wedge enumeration from peeled set (GET-V-WEDGES) --
@@ -846,7 +1091,8 @@ def peel_tips(
             b_dev, u1_w, u2_w, n_side, aggregation, hash_bits, subtract,
             tile_cap,
         )
-    return PeelResult(tip, side, rounds, np.asarray(sizes))
+    return PeelResult(tip, side, acct.rounds, np.asarray(acct.sizes),
+                      sub_rounds=acct.sub_rounds)
 
 
 def peel_tips_stored(
@@ -862,6 +1108,7 @@ def peel_tips_stored(
     decrease_key: str = "bucket",
     capacity_schedule: str = "fixed",
     tile_budget: Optional[int] = None,
+    peel_mode: str = "exact",
 ) -> PeelResult:
     """WPEEL-V (paper Alg. 7): store all side-oriented wedges upfront,
     then per round subtract via pure index lookups — O(b)-style work,
@@ -878,7 +1125,8 @@ def peel_tips_stored(
     ``subtract="materialize"``.
     """
     _check_engine(engine)
-    _check_knobs(aggregation, subtract, decrease_key, capacity_schedule)
+    _check_knobs(aggregation, subtract, decrease_key, capacity_schedule,
+                 peel_mode)
     side, counts = _side_and_counts(g, counts, side, count_kwargs)
     n_side = g.n_u if side == 0 else g.n_v
     woff, w_u2 = _stored_wedge_csr(g, side)
@@ -887,6 +1135,7 @@ def peel_tips_stored(
             g, counts, side, aggregation, True, max_frontier, hash_bits,
             (woff, w_u2), subtract=subtract, decrease_key=decrease_key,
             capacity_schedule=capacity_schedule, tile_budget=tile_budget,
+            peel_mode=peel_mode,
         )
         if res is not None:
             return res
@@ -902,17 +1151,17 @@ def peel_tips_stored(
     tip = np.zeros(n_side, dtype=counts.dtype)
     b_dev = jnp.asarray(counts)
     kappa = 0
-    rounds = 0
-    sizes = []
+    acct = _RoundAccounting(peel_mode)
     while alive.any():
         cnt_host = np.asarray(jax.device_get(b_dev))
         cur = np.where(alive, cnt_host, np.iinfo(cnt_host.dtype).max)
-        kappa = max(kappa, int(cur.min()))
+        mn = int(cur.min())
+        kappa = max(kappa, mn)
+        acct.open_round(mn)
         a_ids = np.flatnonzero(alive & (cur <= kappa))
         tip[a_ids] = kappa
         alive[a_ids] = False
-        rounds += 1
-        sizes.append(a_ids.size)
+        acct.peeled(a_ids.size)
         if not alive.any():
             break
         # stored-wedge lookup instead of 2-hop re-enumeration
@@ -928,7 +1177,8 @@ def peel_tips_stored(
             b_dev, u1_w, u2_w, n_side, aggregation, hash_bits, subtract,
             tile_cap,
         )
-    return PeelResult(tip, side, rounds, np.asarray(sizes))
+    return PeelResult(tip, side, acct.rounds, np.asarray(acct.sizes),
+                      sub_rounds=acct.sub_rounds)
 
 # ---------------------------------------------------------------------------
 # Device-resident wing engine (PEEL-E): triple enumeration in-graph
@@ -946,6 +1196,7 @@ def _subtract_edge_groups(
     hash_bits: Optional[int] = None,
     decrease_key: str = "scatter",
     use_kernel: bool = False,
+    want_hist: bool = False,
 ):
     """Aggregate one tile of butterfly edge ids and subtract the group
     multiplicities — the wing-side consumer of the shared fused tile
@@ -953,7 +1204,7 @@ def _subtract_edge_groups(
     to three still-present edges; grouping by edge id turns the raw
     triple scatter into one subtract per distinct edge (same integer
     sums, so bitwise-equal to the host engine's raw scatter), with the
-    in-graph hash-overflow sort fallback. Returns ``(b, min)``.
+    in-graph hash-overflow sort fallback. Returns ``(b, min, hist)``.
     """
     sent = jnp.int32(m)
     key = jnp.where(valid3, tgt3, sent)
@@ -970,7 +1221,7 @@ def _subtract_edge_groups(
         dec = jnp.where(groups.valid, groups.d.astype(b.dtype), 0)
         tgt = jnp.where(groups.valid, groups.x1, sent)
         return _apply_decrements(b, alive, tgt, dec, decrease_key,
-                                 use_kernel)
+                                 use_kernel, want_hist)
 
     out, _ok = _fused_tile_apply(w, aggregation, consume, "xla", hash_bits)
     return out
@@ -980,7 +1231,7 @@ def _subtract_edge_groups(
     jax.jit,
     static_argnames=(
         "aggregation", "cap1", "cap2", "tile_cap", "m", "hash_bits",
-        "subtract", "decrease_key", "use_kernel", "adaptive",
+        "subtract", "decrease_key", "use_kernel", "adaptive", "peel_mode",
     ),
 )
 def _peel_wings_device(
@@ -989,12 +1240,16 @@ def _peel_wings_device(
     uid: jax.Array,  # (2m,) undirected edge id per directed slot
     eu: jax.Array,  # (m,) U endpoint (global id) per edge
     ev: jax.Array,  # (m,) V endpoint (global id) per edge
+    nbr_ds: jax.Array,  # (2m,) neighbors, degree-sorted within row
+    uid_ds: jax.Array,  # (2m,) edge ids matching nbr_ds
+    degs_ds: jax.Array,  # (2m,) deg(nbr_ds[p])
+    cumdeg: jax.Array,  # (2m,) in-row exclusive prefix of degs_ds
     work1: jax.Array,  # (m,) per-edge level-1 expansion totals
-    work2: jax.Array,  # (m,) per-edge level-2 (triple-space) totals
-    state,  # 10-tuple carry, mirrors _peel_tips_device
+    work2: jax.Array,  # (m,) per-edge triple-space totals
+    state: _LoopState,
     *,
     aggregation: str,
-    cap1: int,  # level-1 buffer: peeled edge -> u2 in N(v1)
+    cap1: int,  # level-1 buffer (subtract="materialize" only)
     cap2: int,  # triple-space buffer (subtract="materialize" only)
     tile_cap: int,  # fused-subtract tile (subtract="fused" only)
     m: int,
@@ -1003,171 +1258,196 @@ def _peel_wings_device(
     decrease_key: str = "bucket",
     use_kernel: bool = False,
     adaptive: bool = False,
+    peel_mode: str = "exact",
 ):
-    """Jitted device round loop for wing decomposition (PEEL-E, Alg. 6).
+    """Jitted device round loop for wing decomposition (PEEL-E, Alg. 6):
+    the shared ``_device_round_loop`` substrate with the wing expand
+    callable.
 
-    Three expansion levels run in-graph: (1) peeled edge a=(u1,v1) ->
-    candidate endpoints u2 in N(v1) (``expand_ragged``), (2) the
-    smaller of N(u1), N(u2) -> candidate centers v2 (the per-butterfly
-    triple space — materialized at ``cap2`` or streamed through
-    ``tile_cap`` tiles), and (3) per candidate, the edge-membership
-    binary search for (other, v2) over the CSR adjacency
-    (``wedges._lower_bound_ragged`` — the searchsorted analogue of the
-    host engine's lexsorted composite-key probe). This matches the
-    paper's Σ min(deg(u), deg(u')) work bound per peeled edge.
+    ``subtract="fused"`` uses the **two-level fused recovery**: the
+    per-butterfly triple space — for each peeled edge a = (u1, v1),
+    for each candidate u2 in N(v1), scan the smaller of N(u1)/N(u2)
+    for centers v2 — is recovered straight from flat ids with NO
+    materialized level-1 or level-2 buffer. A flat triple id inverts
+    in O(log) per lane: (1) the per-edge exclusive prefix of the
+    static triple totals (``work2``, scattered over this round's peel
+    set) locates the edge via ``ragged_slots_at``; (2) inside the
+    edge's row of the **degree-sorted** CSR, the candidates u2 with
+    ``deg(u2) < deg(u1)`` form a prefix whose ragged inner sizes are
+    readable from ``cumdeg`` (one binary search), and the remaining
+    candidates all scan exactly ``deg(u1)`` centers (one division) —
+    see ``wedges.degree_sorted_csr``. The enumeration covers the same
+    candidate multiset as the host engine in a different order, and
+    every subtraction is a linear scatter, so results are bitwise
+    identical; the paper's Σ min(deg(u), deg(u')) work bound per
+    peeled edge is preserved. Per-lane edge membership of (other, v2)
+    stays the CSR binary search (``wedges._lower_bound_ragged``).
+    ``subtract="materialize"`` keeps the PR 4 fixed-capacity
+    ``expand_ragged`` levels (``cap1``/``cap2``; the only wing path
+    ``max_frontier``/overflow still applies to).
+
     Presence of an edge x w.r.t. the peeled edge a follows the paper's
     id-order tiebreak: alive-before-this-round and (not peeled this
-    round or x > a). Extract-min, bucket select, the overflow latch,
-    and the adaptive early-exit mirror ``_peel_tips_device``.
+    round or x > a).
     """
-    dtype = state[0].dtype
     nbr_max = nbr.shape[0] - 1
     deg = off[1:] - off[:-1]
+    want_hist = peel_mode == "range" and decrease_key == "bucket"
 
-    def cond(st):
-        b, alive, wing, kappa, rounds, sizes, overflow, mn_c, rem1, rem2 = st
-        go = jnp.any(alive) & ~overflow
-        if adaptive:
-            shrink = jnp.array(False)
-            if cap1 > 128:
-                shrink = shrink | (rem1 * 4 <= cap1)
-            if subtract == "materialize" and cap2 > 128:
-                shrink = shrink | (rem2 * 4 <= cap2)
-            go = go & ~shrink
-        return go
+    def expand(args):
+        b, alive, alive_prev, peel = args
 
-    def body(st):
-        b, alive, wing, kappa, rounds, sizes, overflow, mn_c, rem1, rem2 = st
-        if decrease_key == "bucket":
-            mn = mn_c
-        else:
-            mn = _kops.bucket_min(b, alive, use_pallas=True)
-        kappa = jnp.maximum(kappa, mn)
-        peel = alive & (b <= kappa.astype(dtype))
-        wing = jnp.where(peel, kappa.astype(dtype), wing)
-        sizes = sizes.at[rounds].set(jnp.sum(peel, dtype=jnp.int32))
-        rounds = rounds + 1
-        alive_prev = alive  # presence checks see the pre-removal state
-        alive = alive & ~peel
-        if adaptive:
-            rem1 = rem1 - jnp.sum(jnp.where(peel, work1, 0),
-                                  dtype=jnp.int32)
-            rem2 = rem2 - jnp.sum(jnp.where(peel, work2, 0),
-                                  dtype=jnp.int32)
+        def present(x, a):
+            xc = jnp.clip(x, 0, m - 1)
+            return alive_prev[xc] & (~peel[xc] | (x > a))
 
-        def _expand_and_subtract(args):
-            b, alive, alive_prev, peel = args
+        def _locate_and_subtract(bt, a2, v1_2, b_2, oth, si, kp, pos2,
+                                 tvalid):
+            """Membership-check one tile of (edge, u2, v2-slot) triples
+            and subtract the located butterflies' edge contributions.
+            ``pos2`` are absolute CSR slots inside N(small)."""
+            pos2c = jnp.clip(pos2, 0, nbr_max)
+            v2 = nbr[pos2c]
+            e_small = uid[pos2c]
+            # membership: (other, v2) must be an edge — binary
+            # search v2 inside N(other)
+            lo = off[oth]
+            hi = off[oth + 1]
+            p = _lower_bound_ragged(nbr, lo, hi, v2)
+            pc = jnp.clip(p, 0, nbr_max)
+            hit = (p < hi) & (nbr[pc] == v2)
+            e_other = uid[pc]
+            # c = (u1, v2), d = (u2, v2): map small/other back
+            c_edge = jnp.where(si, e_small, e_other)
+            d_edge = jnp.where(si, e_other, e_small)
+            ok = (
+                tvalid
+                & kp
+                & hit
+                & (v2 != v1_2)
+                & present(c_edge, a2)
+                & present(d_edge, a2)
+            )
+            tgt3 = jnp.concatenate([b_2, c_edge, d_edge])
+            ok3 = jnp.concatenate([ok, ok, ok])
+            return _subtract_edge_groups(
+                tgt3.astype(jnp.int32), ok3, bt, alive,
+                aggregation=aggregation, m=m, hash_bits=hash_bits,
+                decrease_key=decrease_key, use_kernel=use_kernel,
+                want_hist=want_hist,
+            )
 
-            def present(x, a):
-                xc = jnp.clip(x, 0, m - 1)
-                return alive_prev[xc] & (~peel[xc] | (x > a))
+        if subtract == "fused":
+            # two-level fused recovery: per-edge triple totals are
+            # static (work2), so the round's flat triple space is one
+            # masked prefix — no level-1/level-2 buffers exist at all
+            roff_tri = _prefix(jnp.where(peel, work2, 0))
 
-            # level 1: peeled a=(u1,v1) -> u2 in N(v1)
-            lens1 = jnp.where(peel, deg[ev], 0)
-            seg1, pos1, valid1, tot1 = expand_ragged(off[ev], lens1, cap1)
-            pos1c = jnp.clip(pos1, 0, nbr_max)
-            a1 = jnp.clip(seg1, 0, m - 1)
-            u2 = nbr[pos1c]
-            b_edge = uid[pos1c]
-            u1 = eu[a1]
-            v1 = ev[a1]
-            keep1 = valid1 & (u2 != u1) & present(b_edge, a1)
-            # level 2 plan: scan the smaller of N(u1), N(u2)
-            s_is_u1 = deg[u1] <= deg[u2]
-            small = jnp.where(s_is_u1, u1, u2)
-            other = jnp.where(s_is_u1, u2, u1)
-            lens2 = jnp.where(keep1, deg[small], 0)
-
-            def _triples(b, seg2, pos2, tvalid):
-                """Locate butterflies for one slice of the triple space
-                and subtract their edge contributions."""
-                pos2c = jnp.clip(pos2, 0, nbr_max)
-                s2 = jnp.clip(seg2, 0, cap1 - 1)
-                v2 = nbr[pos2c]
-                e_small = uid[pos2c]
-                a2 = a1[s2]
-                v1_2 = v1[s2]
-                b_2 = b_edge[s2]
-                oth = other[s2]
-                si = s_is_u1[s2]
-                kp = keep1[s2]
-                # membership: (other, v2) must be an edge — binary
-                # search v2 inside N(other)
-                lo = off[oth]
-                hi = off[oth + 1]
-                p = _lower_bound_ragged(nbr, lo, hi, v2)
-                pc = jnp.clip(p, 0, nbr_max)
-                hit = (p < hi) & (nbr[pc] == v2)
-                e_other = uid[pc]
-                # c = (u1, v2), d = (u2, v2): map small/other back
-                c_edge = jnp.where(si, e_small, e_other)
-                d_edge = jnp.where(si, e_other, e_small)
-                ok = (
-                    tvalid
-                    & kp
-                    & hit
-                    & (v2 != v1_2)
-                    & present(c_edge, a2)
-                    & present(d_edge, a2)
+            def tile_fn(bt, wid, tvalid):
+                a2, tp = ragged_slots_at(
+                    roff_tri, jnp.zeros((m,), jnp.int32), wid
                 )
-                tgt3 = jnp.concatenate([b_2, c_edge, d_edge])
-                ok3 = jnp.concatenate([ok, ok, ok])
-                return _subtract_edge_groups(
-                    tgt3.astype(jnp.int32), ok3, b, alive,
-                    aggregation=aggregation, m=m, hash_bits=hash_bits,
-                    decrease_key=decrease_key, use_kernel=use_kernel,
+                u1 = eu[a2]
+                v1_2 = ev[a2]
+                d1 = deg[u1]
+                rs = off[v1_2]
+                re = off[v1_2 + 1]
+                # split N(v1) (degree-sorted) at deg(u2) >= deg(u1)
+                q = _lower_bound_ragged(degs_ds, rs, re, d1)
+                re1 = jnp.clip(re - 1, 0, nbr_max)
+                head_tri = jnp.where(
+                    q < re,
+                    cumdeg[jnp.clip(q, 0, nbr_max)],
+                    cumdeg[re1] + degs_ds[re1],
+                )
+                in_head = tp < head_tri
+                # head: ragged inner sizes — binary search the in-row
+                # neighbor-degree prefix (cumdeg[rs] == 0)
+                p_head = _lower_bound_ragged(cumdeg, rs, q, tp + 1) - 1
+                # tail: deg(u1)-sized blocks — pure arithmetic
+                r_tail = tp - head_tri
+                d1s = jnp.maximum(d1, 1)
+                j_tail = r_tail // d1s
+                p1 = jnp.clip(
+                    jnp.where(in_head, p_head, q + j_tail), 0, nbr_max
+                )
+                i = jnp.where(
+                    in_head, tp - cumdeg[p1], r_tail - j_tail * d1s
+                )
+                u2 = nbr_ds[p1]
+                b_2 = uid_ds[p1]
+                kp = tvalid & (u2 != u1) & present(b_2, a2)
+                si = d1 <= deg[u2]
+                small = jnp.where(si, u1, u2)
+                oth = jnp.where(si, u2, u1)
+                pos2 = off[small] + jnp.clip(i, 0, jnp.maximum(deg[small] - 1, 0))
+                return _locate_and_subtract(
+                    bt, a2, v1_2, b_2, oth, si, kp, pos2, tvalid
                 )
 
-            if subtract == "fused":
-                # stream the triple space in tiles; no alignment needed
-                # (every butterfly contributes independently)
-                roff2 = jnp.concatenate([
-                    jnp.zeros((1,), jnp.int32),
-                    jnp.cumsum(lens2.astype(jnp.int32)),
-                ])
-                total = roff2[-1]
-                starts2 = off[small]
+            b_new, mn2, h2 = _stream_tiles(
+                b, alive, roff_tri, tile_fn, tile_cap=tile_cap,
+                aligned=False, decrease_key=decrease_key,
+                want_hist=want_hist,
+            )
+            return b_new, jnp.array(False), mn2, h2
 
-                def tcond(c):
-                    return c[1] < total
-
-                def tbody(c):
-                    bt, ts, _mn = c
-                    wid = ts + jnp.arange(tile_cap, dtype=jnp.int32)
-                    tvalid = wid < total
-                    seg2, pos2 = ragged_slots_at(roff2, starts2, wid)
-                    out = _triples(bt, seg2, pos2, tvalid)
-                    return out[0], ts + jnp.int32(tile_cap), out[1]
-
-                b_new, _, mn2 = jax.lax.while_loop(
-                    tcond, tbody, (b, jnp.int32(0), jnp.int32(_I32_MAX))
-                )
-                if decrease_key == "bucket":
-                    mn2 = jax.lax.cond(
-                        total > 0,
-                        lambda _: mn2,
-                        lambda _: _masked_min(b_new, alive),
-                        None,
-                    )
-                ovf = tot1 > cap1
-                return jnp.where(ovf, b, b_new), ovf, mn2
-            seg2, pos2, valid2, tot2 = expand_ragged(off[small], lens2, cap2)
-            b_new, mn2 = _triples(b, seg2, pos2, valid2)
-            ovf = (tot1 > cap1) | (tot2 > cap2)
-            return jnp.where(ovf, b, b_new), ovf, mn2
-
-        def _last_round(args):
-            return args[0], jnp.array(False), jnp.int32(_I32_MAX)
-
-        b, ovf_i, mn_next = jax.lax.cond(
-            jnp.any(alive), _expand_and_subtract, _last_round,
-            (b, alive, alive_prev, peel),
+        # materialize: the PR 2/4 fixed-capacity expansion levels
+        # level 1: peeled a=(u1,v1) -> u2 in N(v1)
+        lens1 = jnp.where(peel, deg[ev], 0)
+        seg1, pos1, valid1, tot1 = expand_ragged(off[ev], lens1, cap1)
+        pos1c = jnp.clip(pos1, 0, nbr_max)
+        a1 = jnp.clip(seg1, 0, m - 1)
+        u2 = nbr[pos1c]
+        b_edge = uid[pos1c]
+        u1 = eu[a1]
+        v1 = ev[a1]
+        keep1 = valid1 & (u2 != u1) & present(b_edge, a1)
+        # level 2 plan: scan the smaller of N(u1), N(u2)
+        s_is_u1 = deg[u1] <= deg[u2]
+        small = jnp.where(s_is_u1, u1, u2)
+        other = jnp.where(s_is_u1, u2, u1)
+        lens2 = jnp.where(keep1, deg[small], 0)
+        seg2, pos2, valid2, tot2 = expand_ragged(off[small], lens2, cap2)
+        s2 = jnp.clip(seg2, 0, cap1 - 1)
+        b_new, mn2, h2 = _locate_and_subtract(
+            b, a1[s2], v1[s2], b_edge[s2], other[s2], s_is_u1[s2],
+            keep1[s2], pos2, valid2,
         )
-        overflow = overflow | ovf_i
-        return (b, alive, wing, kappa, rounds, sizes, overflow, mn_next,
-                rem1, rem2)
+        ovf = (tot1 > cap1) | (tot2 > cap2)
+        return jnp.where(ovf, b, b_new), ovf, mn2, h2
 
-    return jax.lax.while_loop(cond, body, state)
+    shrink_caps = []
+    if subtract == "materialize":
+        shrink_caps += [(cap1, 0), (cap2, 1)]
+    return _device_round_loop(
+        state, expand, work1, work2, decrease_key=decrease_key,
+        peel_mode=peel_mode, adaptive=adaptive,
+        shrink_caps=tuple(shrink_caps),
+    )
+
+
+def _wing_work_totals(g: BipartiteGraph, off: np.ndarray, nbr: np.ndarray):
+    """Per-edge wing expansion totals over the graph CSR: for each
+    edge ``a = (u1, v1)``, ``l1[a] = deg(v1)`` (level-1 candidates)
+    and ``l2[a] = Σ_{u2 in N(v1)} min(deg(u1), deg(u2))`` — the
+    paper's candidate triple-space bound, with the ``u2 == u1`` slot
+    included (its lanes mask out per round). The fused recovery
+    streams exactly this static space, so the device planner, the
+    benchmark gates/memory probes, and the tests all read it from this
+    one helper — the totals must never diverge from the engine's
+    recovery invariant. Returns ``(eu, ev, l1, l2)`` (endpoints in
+    global ids, totals int64)."""
+    deg = np.diff(off)
+    eu = g.edges[:, 0].astype(np.int64)
+    ev = (g.edges[:, 1] + g.n_u).astype(np.int64)
+    l1 = deg[ev]
+    l2 = np.zeros(g.m, dtype=np.int64)
+    if int(l1.sum()):
+        a_rep = np.repeat(np.arange(g.m), l1)
+        u2 = nbr[_ranges(off[ev], l1)]
+        np.add.at(l2, a_rep, np.minimum(deg[eu[a_rep]], deg[u2]))
+    return eu, ev, l1, l2
 
 
 def _peel_wings_device_run(
@@ -1181,65 +1461,55 @@ def _peel_wings_device_run(
     decrease_key: str = "bucket",
     capacity_schedule: str = "fixed",
     tile_budget: Optional[int] = None,
+    peel_mode: str = "exact",
 ) -> Optional[PeelResult]:
     """Capacity-plan and run the device wing loop; one ``device_get``
     per segment (one total under the fixed schedule). Returns None when
     the device engine does not apply (no edges, counts or expansion
     totals beyond int32) or a bounded buffer overflowed — callers fall
-    back to the host loop, reusing ``csr``."""
+    back to the host loop, reusing ``csr``. ``subtract="fused"`` has
+    no frontier buffers (the two-level fused recovery inverts flat
+    triple ids directly), so ``max_frontier`` only bounds the
+    materializing path's ``cap1``/``cap2``."""
     off, nbr, uid = csr
     m = g.m
     if m == 0 or int(counts.max(initial=0)) >= _I32_MAX:
         return None
     if 2 * m >= _I32_MAX:
         return None
-    deg = np.diff(off)
-    eu = g.edges[:, 0].astype(np.int64)
-    ev = (g.edges[:, 1] + g.n_u).astype(np.int64)
-    l1 = deg[ev]
+    eu, ev, l1, l2 = _wing_work_totals(g, off, nbr)
     lvl1 = int(l1.sum())
-    # exact per-edge triple-space totals: Σ_{u2 in N(v1), u2 != u1}
-    # min(deg(u1), deg(u2)) — the paper's work bound, reused for
-    # capacity planning and the adaptive remaining-work tracking
-    l2 = np.zeros(m, dtype=np.int64)
-    if lvl1:
-        a_rep = np.repeat(np.arange(m), l1)
-        u2_rep = nbr[_ranges(off[ev], l1)]
-        w = np.minimum(deg[eu[a_rep]], deg[u2_rep])
-        w[u2_rep == eu[a_rep]] = 0
-        np.add.at(l2, a_rep, w)
     lvl2 = int(l2.sum())
     if lvl1 >= _I32_MAX or lvl2 >= _I32_MAX:
         return None
+    if subtract == "fused":
+        # the fused recovery reads in-row neighbor-degree prefixes;
+        # every row total must stay int32-addressable (the materialize
+        # path never touches these arrays, so it skips the build and
+        # the guard)
+        nbr_ds, uid_ds, degs_ds, cumdeg = degree_sorted_csr(off, nbr, uid)
+        if cumdeg.size and int(
+            (cumdeg + degs_ds).max(initial=0)
+        ) >= _I32_MAX:
+            return None
+    else:
+        nbr_ds = uid_ds = degs_ds = cumdeg = np.zeros(0, np.int64)
     budget = _I32_MAX if max_frontier is None else int(max_frontier)
     tb = _DEFAULT_TILE_TARGET if tile_budget is None else int(tile_budget)
-    cap1 = _pow2_pad(min(lvl1, budget))
-    cap2 = (
-        _pow2_pad(min(lvl2, budget)) if subtract == "materialize" else 128
-    )
+    if subtract == "materialize":
+        cap1 = _pow2_pad(min(lvl1, budget))
+        cap2 = _pow2_pad(min(lvl2, budget))
+    else:
+        cap1 = cap2 = 128  # unused: the fused path has no buffers
     tile_cap = _pow2_pad(min(tb, max(lvl2, 1)))
     b0 = jnp.asarray(counts)
     use_kernel = (
         not _kops.interpret_default()
         and b0.dtype == jnp.int32
     )
-    alive0 = jnp.ones((m,), jnp.bool_)
-    mn0 = (
-        _masked_min(b0, alive0)
-        if decrease_key == "bucket"
-        else jnp.int32(_I32_MAX)
-    )
-    state = (
-        b0,
-        alive0,
-        jnp.zeros((m,), b0.dtype),
-        jnp.int32(0),
-        jnp.int32(0),
-        jnp.zeros((m,), jnp.int32),
-        jnp.array(False),
-        mn0,
-        jnp.int32(min(lvl1, _I32_MAX - 1)),
-        jnp.int32(min(lvl2, _I32_MAX - 1)),
+    state = _init_state(
+        b0, m, decrease_key=decrease_key, peel_mode=peel_mode,
+        lvl1=lvl1, lvl2=lvl2,
     )
     args = (
         jnp.asarray(off, jnp.int32),
@@ -1247,17 +1517,23 @@ def _peel_wings_device_run(
         jnp.asarray(uid if uid.size else np.zeros(1), jnp.int32),
         jnp.asarray(eu, jnp.int32),
         jnp.asarray(ev, jnp.int32),
+        jnp.asarray(nbr_ds if nbr_ds.size else np.zeros(1), jnp.int32),
+        jnp.asarray(uid_ds if uid_ds.size else np.zeros(1), jnp.int32),
+        jnp.asarray(degs_ds if degs_ds.size else np.zeros(1), jnp.int32),
+        jnp.asarray(cumdeg if cumdeg.size else np.zeros(1), jnp.int32),
         jnp.asarray(l1.astype(np.int32)),
         jnp.asarray(l2.astype(np.int32)),
     )
     adaptive = capacity_schedule == "adaptive"
-    while True:
-        out = _peel_wings_device(
+    caps = {"cap1": cap1, "cap2": cap2}
+
+    def run(st):
+        return _peel_wings_device(
             *args,
-            state,
+            st,
             aggregation=aggregation,
-            cap1=cap1,
-            cap2=cap2,
+            cap1=caps["cap1"],
+            cap2=caps["cap2"],
             tile_cap=tile_cap,
             m=m,
             hash_bits=hash_bits,
@@ -1265,22 +1541,23 @@ def _peel_wings_device_run(
             decrease_key=decrease_key,
             use_kernel=use_kernel,
             adaptive=adaptive,
+            peel_mode=peel_mode,
         )
-        host = jax.device_get(out)
-        (_, alive_h, wing_h, _, rounds_h, sizes_h, overflow_h, _,
-         rem1_h, rem2_h) = host
-        if bool(overflow_h):
-            return None
-        if not adaptive or not alive_h.any():
-            break
-        cap1 = min(cap1, _pow2_pad(int(rem1_h)))
+
+    def update_caps(host):
         if subtract == "materialize":
-            cap2 = min(cap2, _pow2_pad(int(rem2_h)))
-        state = tuple(jnp.asarray(x) for x in host)
-    rounds = int(rounds_h)
+            caps["cap1"] = min(caps["cap1"], _pow2_pad(int(host.rem1)))
+            caps["cap2"] = min(caps["cap2"], _pow2_pad(int(host.rem2)))
+
+    host = _drive_segments(run, state, adaptive, update_caps)
+    if host is None:
+        return None
+    rounds = int(host.rounds)
     return PeelResult(
-        wing_h, None, rounds, sizes_h[:rounds].astype(np.int64)
+        host.out, None, rounds, host.sizes[:rounds].astype(np.int64),
+        sub_rounds=int(host.subr),
     )
+
 
 def peel_wings(
     g: BipartiteGraph,
@@ -1294,6 +1571,7 @@ def peel_wings(
     decrease_key: str = "bucket",
     capacity_schedule: str = "fixed",
     tile_budget: Optional[int] = None,
+    peel_mode: str = "exact",
 ) -> PeelResult:
     """Wing decomposition (PEEL-E, Alg. 6).
 
@@ -1313,13 +1591,17 @@ def peel_wings(
     engine's grouped edge subtract strategy (the host engine's raw
     triple scatter is bitwise-equivalent); ``subtract``/
     ``decrease_key``/``capacity_schedule``/``tile_budget``/
-    ``max_frontier`` as in :func:`peel_tips` (the fused axis tiles the
-    triple space; levels 1-2 stay materialized). Counts at or beyond
-    INT32_MAX, expansion totals beyond int32, or a bounded-buffer
-    overflow transparently fall back to the host loop.
+    ``max_frontier``/``peel_mode`` as in :func:`peel_tips`. The fused
+    axis recovers the per-butterfly triple space straight from flat
+    ids via the degree-sorted CSR (``wedges.degree_sorted_csr``) — no
+    materialized level-1/level-2 buffers, so ``max_frontier`` (and
+    capacity overflow) only applies to ``subtract="materialize"``.
+    Counts at or beyond INT32_MAX, expansion totals beyond int32, or a
+    bounded-buffer overflow transparently fall back to the host loop.
     """
     _check_engine(engine)
-    _check_knobs(aggregation, subtract, decrease_key, capacity_schedule)
+    _check_knobs(aggregation, subtract, decrease_key, capacity_schedule,
+                 peel_mode)
     if counts is None:
         r = count_butterflies(
             g, mode="edge", count_dtype=default_count_dtype(),
@@ -1333,6 +1615,7 @@ def peel_wings(
             g, counts, aggregation, max_frontier, hash_bits,
             (off, nbr, uid), subtract=subtract, decrease_key=decrease_key,
             capacity_schedule=capacity_schedule, tile_budget=tile_budget,
+            peel_mode=peel_mode,
         )
         if res is not None:
             return res
@@ -1359,8 +1642,7 @@ def peel_wings(
     wing = np.zeros(m, dtype=counts.dtype)
     b_dev = jnp.asarray(counts)
     kappa = 0
-    rounds = 0
-    sizes = []
+    acct = _RoundAccounting(peel_mode)
     while alive.any():
         if kernel_min:
             # one blocking sync per round: the kernel min and the count
@@ -1377,12 +1659,12 @@ def peel_wings(
                 np.where(alive, cnt_host, np.iinfo(cnt_host.dtype).max).min()
             )
         kappa = max(kappa, mn)
+        acct.open_round(mn)
         a_ids = np.flatnonzero(alive & (cnt_host <= kappa))
         wing[a_ids] = kappa
         in_a = np.zeros(m, dtype=bool)
         in_a[a_ids] = True
-        rounds += 1
-        sizes.append(a_ids.size)
+        acct.peeled(a_ids.size)
 
         # presence of edge x w.r.t. peeled edge a (ids break ties):
         #   alive_before[x] and (x not in A or x > a)
@@ -1446,4 +1728,5 @@ def peel_wings(
                     jnp.asarray(trip), jnp.asarray(validp), b_dev
                 )
         alive[a_ids] = False
-    return PeelResult(wing, None, rounds, np.asarray(sizes))
+    return PeelResult(wing, None, acct.rounds, np.asarray(acct.sizes),
+                      sub_rounds=acct.sub_rounds)

@@ -48,6 +48,7 @@ __all__ = [
     "expand_ragged",
     "ragged_slots_at",
     "aligned_tile_end",
+    "degree_sorted_csr",
     "greedy_vertex_blocks",
     "plan_wedge_chunks",
 ]
@@ -405,6 +406,40 @@ def expand_ragged(
     valid = k < total
     seg, pos = ragged_slots_at(roff, starts, k)
     return seg, pos, valid, total
+
+
+def degree_sorted_csr(
+    off: np.ndarray, nbr: np.ndarray, uid: np.ndarray
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Re-sort every CSR row by neighbor degree and attach the in-row
+    neighbor-degree prefix — the O(m)-space index that lets the fused
+    wing subtract recover its per-butterfly triple space from flat ids
+    in O(log) per lane (no materialized level-1/level-2 buffers).
+
+    For a peeled edge ``a = (u1, v1)`` the paper's PEEL-E scans, per
+    candidate ``u2 in N(v1)``, the smaller of ``N(u1)``/``N(u2)`` —
+    so edge ``a``'s triple space has ragged inner sizes
+    ``min(deg(u1), deg(u2))``. With ``N(v1)`` sorted by ``deg(u2)``,
+    those sizes become a monotone head (``deg(u2) < deg(u1)``, prefix
+    readable from ``cumdeg``) followed by a constant tail
+    (``deg(u1)`` each, pure arithmetic): a flat offset inverts with one
+    binary search over ``degs``, one over ``cumdeg``, and a division.
+    Row order is irrelevant to correctness — every subtraction is a
+    linear scatter over the same multiset of candidates.
+
+    Returns ``(nbr_ds, uid_ds, degs_ds, cumdeg)``: the permuted
+    neighbor/edge-id arrays, ``degs_ds[p] = deg(nbr_ds[p])``, and the
+    *in-row exclusive* prefix sum of ``degs_ds`` (int64 — callers
+    guard the int32 range before shipping to device).
+    """
+    deg = np.diff(off)
+    src = np.repeat(np.arange(deg.shape[0]), deg)
+    order = np.lexsort((nbr, deg[nbr], src))
+    nbr_ds, uid_ds = nbr[order], uid[order]
+    degs_ds = deg[nbr_ds].astype(np.int64)
+    excl = np.concatenate([[0], np.cumsum(degs_ds)])  # global, (2m + 1,)
+    cumdeg = excl[:-1] - np.repeat(excl[off[:-1]], deg)
+    return nbr_ds, uid_ds, degs_ds, cumdeg
 
 
 def greedy_vertex_blocks(

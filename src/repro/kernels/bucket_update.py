@@ -43,12 +43,45 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import numpy as np
 
-__all__ = ["bucket_update_pallas", "MAX_UPDATE_CAP", "NUM_BUCKETS", "TN"]
+__all__ = [
+    "bucket_update_pallas",
+    "bit_length",
+    "bucket_upper_bound",
+    "lowest_nonempty_bucket",
+    "MAX_UPDATE_CAP",
+    "NUM_BUCKETS",
+    "TN",
+]
 
 TN = 512  # count-array tile (matches the one-hot panel width)
 NUM_BUCKETS = 32  # geometric ranges for int32 counts: bit_length in [0, 31]
 MAX_UPDATE_CAP = 4096  # keeps every f32 limb contraction exact (< 2^24)
 _INF = np.int32(np.iinfo(np.int32).max)
+
+
+def bit_length(v: jax.Array) -> jax.Array:
+    """In-graph ``bit_length(max(v, 0))`` — the bucket index of a count
+    in the occupancy histogram's geometric ranges (bucket ``k`` holds
+    values in ``[2^(k-1), 2^k)``; bucket 0 holds exactly {0})."""
+    return jnp.int32(32) - jax.lax.clz(jnp.maximum(v.astype(jnp.int32), 0))
+
+
+def bucket_upper_bound(k: jax.Array) -> jax.Array:
+    """Exclusive upper bound ``2^k`` of geometric bucket ``k``, clamped
+    to INT32_MAX for the top bucket (the peeling engines guard counts
+    below INT32_MAX, so the clamp still covers every value)."""
+    k = k.astype(jnp.int32)
+    return jnp.where(k >= 31, _INF, jnp.int32(1) << jnp.minimum(k, 30))
+
+
+def lowest_nonempty_bucket(hist: jax.Array) -> jax.Array:
+    """Index of the lowest non-empty geometric bucket in an occupancy
+    histogram (NUM_BUCKETS when all empty) — the Julienne/Lakhotia
+    next-range selection, consumed by the range-mode peeling round
+    loops. Equals ``bit_length(masked min)`` whenever any entry is
+    alive, because the min inhabits the lowest non-empty range."""
+    idx = jnp.arange(hist.shape[0], dtype=jnp.int32)
+    return jnp.min(jnp.where(hist > 0, idx, jnp.int32(NUM_BUCKETS)))
 
 
 def _update_kernel(counts_ref, alive_ref, idx_ref, dec_ref,

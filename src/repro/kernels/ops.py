@@ -35,6 +35,7 @@ __all__ = [
     "wedge_histogram",
     "butterfly_combine",
     "bucket_min",
+    "bucket_state",
     "bucket_update",
     "fused_count_tiles",
 ]
@@ -82,6 +83,17 @@ def bucket_min(
     if use_pallas:
         return bucket_min_pallas(counts, alive, interpret=_resolve(interpret))
     return _ref.bucket_min_ref(counts, alive)
+
+
+def bucket_state(counts, alive):
+    """Masked extract-min plus geometric-bucket occupancy with no
+    decrease-key batch: ``(min, bucket_hist)``. Always the jnp
+    reference — inside the peeling round loops the same pair comes out
+    of the ``bucket_update`` kernel pass for free; this standalone form
+    only seeds the carried state before round 0 and re-derives it on
+    zero-frontier rounds, both off the per-tile hot path.
+    """
+    return _ref.bucket_state_ref(counts, alive)
 
 
 def bucket_update(

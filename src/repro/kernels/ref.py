@@ -15,6 +15,7 @@ __all__ = [
     "wedge_histogram_ref",
     "butterfly_combine_ref",
     "bucket_min_ref",
+    "bucket_state_ref",
     "bucket_update_ref",
     "fused_count_tiles_ref",
 ]
@@ -59,6 +60,39 @@ def bucket_min_ref(counts: jax.Array, alive: jax.Array) -> jax.Array:
     return jnp.min(
         jnp.where(alive.astype(jnp.int32) > 0, counts.astype(jnp.int32), inf)
     )
+
+
+def bucket_state_ref(counts: jax.Array, alive: jax.Array):
+    """Masked extract-min plus geometric-bucket occupancy, no update —
+    ``bucket_update_ref`` with an empty decrease-key batch.
+
+    Returns ``(min, bucket_hist)`` in the ``bucket_min`` clamp contract
+    / the ``bucket_update`` histogram contract (``bucket(v) =
+    bit_length(max(v, 0))`` over alive entries, ``NUM_BUCKETS`` ranges).
+    The range-mode peeling loops use this to seed the carried
+    (min, occupancy) state before round 0 and to re-derive it on
+    zero-frontier rounds; inside the round loop the same pair comes out
+    of the ``bucket_update`` decrease-key pass for free.
+    """
+    from .bucket_update import NUM_BUCKETS
+
+    inf = jnp.int32(np.iinfo(np.int32).max)
+    c32 = counts
+    if counts.dtype.itemsize > 4:  # clamp, don't wrap (bucket_min contract)
+        c32 = jnp.minimum(counts, jnp.asarray(inf, counts.dtype))
+    c32 = c32.astype(jnp.int32)
+    live = alive.astype(jnp.int32) > 0
+    mn = jnp.min(jnp.where(live, c32, inf))
+    v = jnp.maximum(c32, 0)
+    bl = jnp.zeros(v.shape, jnp.int32)
+    for j in range(31):
+        bl = bl + (v >= jnp.int32(1 << j)).astype(jnp.int32)
+    hist = (
+        jnp.zeros((NUM_BUCKETS,), jnp.int32)
+        .at[bl]
+        .add(live.astype(jnp.int32))
+    )
+    return mn, hist
 
 
 def bucket_update_ref(

@@ -200,3 +200,69 @@ def test_histogram_kernel_used_in_count_path():
     got = wedge_histogram_pallas(keys, w.valid.astype(jnp.int32), nb)
     want = ref.wedge_histogram_ref(keys, w.valid.astype(jnp.int32), nb)
     assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+# -- occupancy histogram as a consumed artifact (PR 5 range peeling) ----
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 3000),
+    hi_bits=st.integers(1, 31),
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 1 << 16),
+)
+def test_bucket_state_hist_oracle(n, hi_bits, density, seed):
+    """Property test for the geometric-bucket occupancy now driving
+    peel_mode="range": ``bucket_state_ref``'s histogram matches a
+    numpy bincount-of-bit-length oracle over alive entries, its lowest
+    non-empty bucket equals the masked min's bit length (the range-mode
+    selection invariant), and the selected bucket's upper bound covers
+    the min."""
+    from repro.kernels.bucket_update import (
+        bit_length, bucket_upper_bound, lowest_nonempty_bucket,
+    )
+
+    rng = np.random.default_rng(seed)
+    c = rng.integers(0, 1 << hi_bits, n).astype(np.int32)
+    alive = (rng.random(n) < density).astype(np.int32)
+    mn, hist = ref.bucket_state_ref(jnp.asarray(c), jnp.asarray(alive))
+    mn, hist = int(mn), np.asarray(hist)
+    # oracle: bincount of bit_length over alive entries
+    bl = np.array([int(v).bit_length() for v in np.maximum(c, 0)])
+    want = np.bincount(bl, weights=alive, minlength=NUM_BUCKETS)
+    assert np.array_equal(hist, want.astype(np.int64)[:NUM_BUCKETS])
+    assert int(hist.sum()) == int(alive.sum())
+    k = int(lowest_nonempty_bucket(jnp.asarray(hist)))
+    if alive.any():
+        masked_min = int(c[alive > 0].min())
+        assert mn == masked_min
+        assert k == masked_min.bit_length()
+        assert k == int(bit_length(jnp.int32(mn)))
+        # the selected range [2^(k-1), 2^k) contains the min
+        up = int(bucket_upper_bound(jnp.int32(k)))
+        assert masked_min < up
+        assert k == 0 or (1 << (k - 1)) <= max(masked_min, 1)
+    else:
+        assert mn == np.iinfo(np.int32).max
+        assert k == NUM_BUCKETS
+
+
+def test_bucket_update_hist_matches_bucket_state():
+    """The histogram carried out of a decrease-key pass equals the
+    standalone bucket_state of the updated array — the invariant the
+    range-mode round loop relies on when it consumes the carried
+    occupancy instead of recomputing it."""
+    rng = np.random.default_rng(3)
+    n, k = 500, 128
+    c = rng.integers(0, 1 << 20, n).astype(np.int32)
+    alive = (rng.random(n) < 0.7).astype(np.int32)
+    idx = rng.integers(0, n + 1, k).astype(np.int32)
+    dec = np.where(idx == n, 0, rng.integers(0, 1 << 10, k)).astype(np.int32)
+    new, mn, hist = ref.bucket_update_ref(
+        jnp.asarray(c), jnp.asarray(alive), jnp.asarray(idx),
+        jnp.asarray(dec),
+    )
+    mn2, hist2 = ref.bucket_state_ref(new, jnp.asarray(alive))
+    assert int(mn) == int(mn2)
+    assert np.array_equal(np.asarray(hist), np.asarray(hist2))

@@ -356,17 +356,9 @@ def test_fused_peel_subtract_temp_memory_is_o_tile():
         nbr_d = jnp.asarray(w_u2, jnp.int32)
         work1 = jnp.zeros(n_side, jnp.int32)
         work2 = jnp.asarray(np.diff(woff).astype(np.int32))
-        st = (
-            jnp.zeros(n_side, jnp.int32),
-            jnp.ones((n_side,), jnp.bool_),
-            jnp.zeros((n_side,), jnp.int32),
-            jnp.int32(0),
-            jnp.int32(0),
-            jnp.zeros((n_side,), jnp.int32),
-            jnp.array(False),
-            jnp.int32(0),
-            jnp.int32(0),
-            jnp.int32(0),
+        st = pm._init_state(
+            jnp.zeros(n_side, jnp.int32), n_side, decrease_key="bucket",
+            peel_mode="exact", lvl1=0, lvl2=0,
         )
         common = dict(
             aggregation="hash", cap1=128, n_side=n_side, stored=True,
@@ -521,3 +513,140 @@ def test_bucket_structure():
     assert k == 1 and members == {3}
     k, members = b.pop_min_nonempty()
     assert k == 5 and members == {0, 1}
+
+
+# -- bucket-range multi-bucket peeling (peel_mode="range", PR 5) --------
+
+
+@pytest.mark.parametrize("subtract", ["fused", "materialize"])
+@pytest.mark.parametrize("decrease_key", ["bucket", "scatter"])
+def test_range_mode_matrix_bitwise(subtract, decrease_key):
+    """peel_mode="range" produces bitwise-identical numbers to exact
+    peeling across the full engine x subtract x decrease_key matrix on
+    all three decompositions; rho (bucket rounds) never exceeds exact
+    mode's, sub_rounds equals exact mode's rho (the re-settle replays
+    the same trajectory), and bucket selection agrees between the
+    device engine (consumed occupancy histogram) and the host engine
+    (bit length of the min)."""
+    g = rand_graph(12, 9, 40, 3)
+    runs = (
+        ("tips", lambda **kw: peel_tips(g, side=0, **kw)),
+        ("stored", lambda **kw: peel_tips_stored(g, side=0, **kw)),
+        ("wings", lambda **kw: peel_wings(g, **kw)),
+    )
+    for name, fn in runs:
+        exact = fn()
+        host_range = None
+        for engine in ("host", "device"):
+            r = fn(engine=engine, subtract=subtract,
+                   decrease_key=decrease_key, peel_mode="range")
+            assert np.array_equal(r.numbers, exact.numbers), (name, engine)
+            assert r.rounds <= exact.rounds, (name, engine)
+            assert r.sub_rounds == exact.rounds, (name, engine)
+            assert len(r.round_sizes) == r.rounds
+            assert r.round_sizes.sum() == exact.round_sizes.sum()
+            if host_range is None:
+                host_range = r
+            else:
+                assert r.rounds == host_range.rounds, (name, engine)
+                assert np.array_equal(r.round_sizes,
+                                      host_range.round_sizes), (name, engine)
+
+
+def test_range_mode_reduces_rounds_on_bench_graph():
+    """The acceptance regression: on a peeling benchmark graph, range
+    mode's bucket-round count is strictly below exact mode's rho while
+    the numbers stay bitwise-identical (geometric buckets span many
+    distinct peel values on power-law counts)."""
+    from repro.data.graphs import powerlaw_bipartite
+
+    g = powerlaw_bipartite(600, 500, 4_000, seed=7)  # bench peel_small
+    counts = _tip_counts(g, 0)
+    exact = peel_tips(g, counts=counts, side=0)
+    rng_ = peel_tips(g, counts=counts, side=0, peel_mode="range")
+    assert np.array_equal(rng_.numbers, exact.numbers)
+    assert rng_.sub_rounds == exact.rounds
+    assert rng_.rounds < exact.rounds, (rng_.rounds, exact.rounds)
+    dev = peel_tips(g, counts=counts, side=0, engine="device",
+                    peel_mode="range")
+    assert np.array_equal(dev.numbers, exact.numbers)
+    assert dev.rounds == rng_.rounds
+
+
+def test_range_mode_single_sync_and_validation(monkeypatch):
+    """Range mode keeps the device engine's one-device_get guarantee
+    (the bucket selection consumes the carried histogram — no extra
+    host syncs), and bad peel_mode values are rejected."""
+    from repro.core import count_butterflies
+
+    g = rand_graph(12, 9, 40, 3)
+    counts = count_butterflies(g, mode="vertex").per_u
+    calls = []
+    orig = jax.device_get
+    monkeypatch.setattr(
+        jax, "device_get", lambda x: (calls.append(1), orig(x))[1]
+    )
+    d = peel_tips(g, counts=counts, side=0, engine="device",
+                  peel_mode="range")
+    assert len(calls) == 1
+    assert d.sub_rounds > d.rounds >= 2
+    with pytest.raises(ValueError, match="peel_mode"):
+        peel_tips(g, peel_mode="banana")
+
+
+def test_wings_fused_recovery_temp_memory_drops_buffers():
+    """The PEEL-E tentpole regression: with the two-level fused
+    recovery the compiled wing program's temp footprint must NOT scale
+    with the O(sum deg^2)-class level-1/triple totals, while the
+    materializing path's still does. Same edge count, ~10x denser
+    triple space."""
+    import jax.numpy as jnp
+    import repro.core.peel as pm
+    from repro.core.wedges import degree_sorted_csr
+
+    graphs = {
+        "sparse": rand_graph(2500, 2000, 6000, 11),
+        "dense": rand_graph(70, 55, 6000, 11),
+    }
+    stats = {}
+    for name, g in graphs.items():
+        off, nbr, uid = pm._csr(g)
+        m = g.m
+        eu, ev, l1, l2 = pm._wing_work_totals(g, off, nbr)
+        lvl1, lvl2 = int(l1.sum()), int(l2.sum())
+        nbr_ds, uid_ds, degs_ds, cumdeg = degree_sorted_csr(off, nbr, uid)
+        args = tuple(
+            jnp.asarray(a, jnp.int32)
+            for a in (off, nbr, uid, eu, ev, nbr_ds, uid_ds, degs_ds,
+                      cumdeg, l1, l2)
+        )
+        st = pm._init_state(jnp.zeros(m, jnp.int32), m,
+                            decrease_key="bucket", peel_mode="exact",
+                            lvl1=0, lvl2=0)
+        common = dict(
+            aggregation="sort", m=m, tile_cap=1024, hash_bits=None,
+            decrease_key="bucket", use_kernel=False, adaptive=False,
+        )
+        fused = pm._peel_wings_device.lower(
+            *args, st, cap1=128, cap2=128, subtract="fused", **common,
+        ).compile().memory_analysis()
+        mat = pm._peel_wings_device.lower(
+            *args, st, cap1=pm._pow2_pad(lvl1), cap2=pm._pow2_pad(lvl2),
+            subtract="materialize", **common,
+        ).compile().memory_analysis()
+        stats[name] = dict(
+            lvl2=lvl2,
+            fused_temp=int(fused.temp_size_in_bytes),
+            mat_temp=int(mat.temp_size_in_bytes),
+        )
+    ratio_work = stats["dense"]["lvl2"] / max(stats["sparse"]["lvl2"], 1)
+    assert ratio_work >= 8, stats  # the experiment is meaningful
+    ratio_fused = stats["dense"]["fused_temp"] / max(
+        stats["sparse"]["fused_temp"], 1
+    )
+    ratio_mat = stats["dense"]["mat_temp"] / max(
+        stats["sparse"]["mat_temp"], 1
+    )
+    assert ratio_fused < 2.0, stats  # O(tile): flat in the triple space
+    assert ratio_mat > ratio_work / 2, stats  # O(frontier): tracks it
+    assert stats["dense"]["fused_temp"] < stats["dense"]["mat_temp"], stats
