@@ -204,6 +204,8 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--graphs", nargs="*", default=["pl_small", "pl_medium"])
     ap.add_argument("--aggs", nargs="*", default=list(AGGS))
+    ap.add_argument("--faults", action="store_true",
+                    help="append the resilience-overhead rows to --json")
     ap.add_argument("--orders", nargs="*", default=list(ORDERS))
     ap.add_argument("--modes", nargs="*", default=["global", "vertex", "edge"])
     ap.add_argument("--cache-opt", action="store_true")
@@ -215,9 +217,73 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.json:
         write_json(args.json, graphs=tuple(args.graphs))
+        if args.faults:
+            append_resilience_rows(args.json, graphs=tuple(args.graphs))
         return
     run(args.graphs, args.aggs, args.orders, args.modes, args.cache_opt,
         engine=args.engine)
+
+
+def resilience_rows(graphs=("pl_small",), repeats: int = 3) -> dict:
+    """Ladder-overhead audit rows: the full ``count_butterflies`` entry
+    point with the default resilience policy (validation + report) vs
+    ``resilience=False``, min-of-``repeats`` warm wall time each, plus
+    one injected transient-OOM smoke run proving the shrink-retry
+    carries the workload (report summary + retry count recorded).
+    Overhead on the clean path is the acceptance criterion (<= 5% on
+    the smoke graphs)."""
+    import time as _time
+
+    from repro.testing import faults
+
+    rows = {}
+    for gname in graphs:
+        g = BENCH_GRAPHS[gname]()
+
+        def best(fn):
+            fn()  # warm the jit caches: we time the ladder, not XLA
+            ts = []
+            for _ in range(max(1, repeats)):
+                t0 = _time.perf_counter()
+                fn()
+                ts.append(_time.perf_counter() - t0)
+            return min(ts)
+
+        t_on = best(lambda: count_butterflies(
+            g, engine="fused", mode="vertex"))
+        t_off = best(lambda: count_butterflies(
+            g, engine="fused", mode="vertex", resilience=False))
+        with faults.inject("oom", site="count.fused", times=1):
+            r = count_butterflies(g, engine="fused", mode="vertex")
+        rows[gname] = {
+            "workload": "count/fused/vertex",
+            "ladder_enabled_s": t_on,
+            "ladder_disabled_s": t_off,
+            "overhead_pct": (
+                100.0 * (t_on - t_off) / t_off if t_off > 0 else None
+            ),
+            "fault_smoke": r.report.summary(),
+            "fault_smoke_retries": r.report.retries,
+        }
+    return rows
+
+
+def append_resilience_rows(path: str, graphs=("pl_small",),
+                           repeats: int = 3) -> None:
+    """Read-modify-write the additive ``resilience`` key (schema
+    unchanged — the rows are an overlay, not a new baseline version)."""
+    with open(path) as f:
+        payload = json.load(f)
+    payload["resilience"] = resilience_rows(graphs=graphs, repeats=repeats)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    for gname, row in payload["resilience"].items():
+        emit(
+            f"count/{gname}/resilience_overhead",
+            row["ladder_enabled_s"] * 1e6,
+            f"disabled={row['ladder_disabled_s'] * 1e6:.1f}us,"
+            f"overhead={row['overhead_pct']:.2f}%",
+        )
 
 
 if __name__ == "__main__":

@@ -498,6 +498,67 @@ def write_json(path, graphs=("peel_small",), repeats: int = 1) -> dict:
     return payload
 
 
+def resilience_rows(graphs=("peel_small",), repeats: int = 3) -> dict:
+    """Ladder-overhead audit rows for the peeling ladder: ``peel_tips``
+    with the default resilience policy (validation + report) vs
+    ``resilience=False``, min-of-``repeats`` warm wall time each, plus
+    one injected transient-OOM smoke run proving the device rung's
+    shrink-retry carries the decomposition. Counts are precomputed so
+    the rows time the decomposition loop, not the counting pass."""
+    from repro.testing import faults
+
+    rows = {}
+    for gname in graphs:
+        g = PEEL_GRAPHS[gname]()
+        side, counts = _tip_inputs(g)
+
+        def best(fn):
+            fn()  # warm the jit caches: we time the ladder, not XLA
+            ts = []
+            for _ in range(max(1, repeats)):
+                t0 = time.perf_counter()
+                fn()
+                ts.append(time.perf_counter() - t0)
+            return min(ts)
+
+        t_on = best(lambda: peel_tips(
+            g, counts=counts, side=side, engine="device"))
+        t_off = best(lambda: peel_tips(
+            g, counts=counts, side=side, engine="device",
+            resilience=False))
+        with faults.inject("oom", site="peel_tips.device", times=1):
+            r = peel_tips(g, counts=counts, side=side, engine="device")
+        rows[gname] = {
+            "workload": "peel_tips/device",
+            "ladder_enabled_s": t_on,
+            "ladder_disabled_s": t_off,
+            "overhead_pct": (
+                100.0 * (t_on - t_off) / t_off if t_off > 0 else None
+            ),
+            "fault_smoke": r.report.summary(),
+            "fault_smoke_retries": r.report.retries,
+        }
+    return rows
+
+
+def append_resilience_rows(path: str, graphs=("peel_small",),
+                           repeats: int = 3) -> None:
+    """Read-modify-write the additive ``resilience`` key (schema stays
+    ``bench_peeling/v3`` — the rows are an overlay, not a new version)."""
+    with open(path) as f:
+        payload = json.load(f)
+    payload["resilience"] = resilience_rows(graphs=graphs, repeats=repeats)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    for gname, row in payload["resilience"].items():
+        emit(
+            f"peel_tips/{gname}/resilience_overhead",
+            row["ladder_enabled_s"] * 1e6,
+            f"disabled={row['ladder_disabled_s'] * 1e6:.1f}us,"
+            f"overhead={row['overhead_pct']:.2f}%",
+        )
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--graphs", nargs="*", default=list(PEEL_GRAPHS))
@@ -505,6 +566,8 @@ def main(argv=None):
         "--json", default=None, metavar="PATH",
         help="also write the BENCH_peeling.json engine trajectory",
     )
+    ap.add_argument("--faults", action="store_true",
+                    help="append the resilience-overhead rows to --json")
     args = ap.parse_args(argv)
     # one sweep: the JSON payload is the source of truth, CSV rows are
     # derived from it (no second run of the decompositions)
@@ -533,6 +596,8 @@ def main(argv=None):
             f"materialized={row['materialized_temp_bytes']},"
             f"ratio={row['temp_ratio']:.1f}",
         )
+    if args.faults and args.json:
+        append_resilience_rows(args.json, graphs=tuple(args.graphs))
 
 
 if __name__ == "__main__":

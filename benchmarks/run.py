@@ -54,6 +54,10 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="smallest graph only, 1 rep, JSON baselines "
                          "only (CI smoke job)")
+    ap.add_argument("--faults", action="store_true",
+                    help="append the resilience-overhead rows (ladder "
+                         "disabled vs enabled + injected-fault smoke) to "
+                         "BENCH_counting.json / BENCH_peeling.json")
     ap.add_argument("--json-out", default="BENCH_counting.json",
                     help="path for the counting perf baseline "
                          "(empty string disables)")
@@ -91,6 +95,17 @@ def main() -> None:
                 args.json_out_peeling, graphs=("peel_small",), repeats=1
             )
             print(f"# wrote {args.json_out_peeling}", file=sys.stderr)
+        if args.faults:
+            if "counting" in sections and args.json_out:
+                from . import bench_counting
+                bench_counting.append_resilience_rows(
+                    args.json_out, graphs=("pl_small",), repeats=3
+                )
+            if "peeling" in sections and args.json_out_peeling:
+                from . import bench_peeling
+                bench_peeling.append_resilience_rows(
+                    args.json_out_peeling, graphs=("peel_small",), repeats=3
+                )
         return
     if "counting" in sections:
         from . import bench_counting
@@ -115,6 +130,10 @@ def main() -> None:
             graphs = ("pl_small",) if args.quick else (
                 "pl_small", "pl_medium")
             bench_counting.write_json(args.json_out, graphs=graphs)
+            if args.faults:
+                bench_counting.append_resilience_rows(
+                    args.json_out, graphs=("pl_small",)
+                )
             print(f"# wrote {args.json_out}", file=sys.stderr)
     if "fused" in sections:
         from . import bench_fused
@@ -136,6 +155,8 @@ def main() -> None:
         peel_args = ["--graphs", "peel_small"] if args.quick else []
         if args.json_out_peeling:
             peel_args += ["--json", args.json_out_peeling]
+            if args.faults:
+                peel_args += ["--faults"]
         bench_peeling.main(peel_args)
         if args.json_out_peeling:
             print(f"# wrote {args.json_out_peeling}", file=sys.stderr)

@@ -2,6 +2,18 @@
 from .graph import BipartiteGraph, RankedGraph, preprocess
 from .ranking import RANKINGS, make_order, wedges_processed
 from .count import CountResult, count_butterflies, count_from_ranked
+from .resilience import (
+    AccumulatorOverflowRisk,
+    CapacityOverflow,
+    DeviceLost,
+    ExecutionReport,
+    GraphValidationError,
+    ResilienceError,
+    ResiliencePolicy,
+    ResourceExhausted,
+    ResultInvariantViolation,
+    RungUnavailable,
+)
 
 __all__ = [
     "BipartiteGraph",
@@ -13,4 +25,14 @@ __all__ = [
     "CountResult",
     "count_butterflies",
     "count_from_ranked",
+    "ResilienceError",
+    "GraphValidationError",
+    "CapacityOverflow",
+    "AccumulatorOverflowRisk",
+    "DeviceLost",
+    "ResourceExhausted",
+    "RungUnavailable",
+    "ResultInvariantViolation",
+    "ExecutionReport",
+    "ResiliencePolicy",
 ]

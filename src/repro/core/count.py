@@ -87,6 +87,8 @@ import numpy as np
 from ..kernels import ops as _kops
 from ..kernels.wedge_fused import MAX_TILE_CAP as _FUSED_MAX_TILE
 from ..kernels.wedge_fused import TC as _FUSED_TC
+from ..testing import faults as _faults
+from . import resilience as _res
 from .aggregate import Groups, aggregate_dense, aggregate_hash, aggregate_sort
 from .graph import BipartiteGraph, RankedGraph, preprocess
 from .ranking import make_order
@@ -94,6 +96,7 @@ from .wedges import (
     DeviceGraph,
     Wedges,
     auto_chunk_budget,
+    shrink_budget,
     device_graph,
     gather_wedges,
     greedy_vertex_blocks,
@@ -115,6 +118,16 @@ __all__ = [
 
 ENGINES = ("xla", "pallas", "fused", "fused_pallas")
 MODES = ("global", "vertex", "edge", "all")
+
+# Degradation ladder per requested engine (resilience.ResiliencePolicy
+# descends left to right; every rung is bitwise-identical where it
+# applies, so descent changes strategy, never results).
+COUNT_LADDERS = {
+    "fused_pallas": ("fused_pallas", "fused", "xla"),
+    "fused": ("fused", "xla"),
+    "pallas": ("pallas", "xla"),
+    "xla": ("xla",),
+}
 
 
 def default_count_dtype():
@@ -139,6 +152,7 @@ class CountResult(NamedTuple):
     per_edge: Optional[np.ndarray]  # (m,) aligned with g.edges rows
     aggregation: str
     order: str
+    report: Optional["_res.ExecutionReport"] = None  # resilience audit
 
 
 def _choose2(d: jax.Array, dtype) -> jax.Array:
@@ -606,10 +620,15 @@ def _count_fused_pallas(
     tile_cap = max(
         _FUSED_TC, ((chunk_cap + _FUSED_TC - 1) // _FUSED_TC) * _FUSED_TC
     )
-    if tile_cap > _FUSED_MAX_TILE:
-        raise ValueError(
+    max_tile = _faults.capacity_override(
+        "count.fused_pallas", _FUSED_MAX_TILE
+    )
+    if tile_cap > max_tile:
+        # typed (still a ValueError subclass): the resilience ladder in
+        # count_butterflies catches this rung and descends to 'fused'
+        raise _res.CapacityOverflow(
             f"engine='fused_pallas' tile_cap {tile_cap} exceeds the "
-            f"kernel's exactness bound {_FUSED_MAX_TILE} (a single "
+            f"kernel's exactness bound {max_tile} (a single "
             "vertex owns more wedges than the kernel tile can hold); "
             "use engine='fused'"
         )
@@ -676,6 +695,10 @@ def count_from_ranked(
         raise ValueError(f"engine must be {'|'.join(ENGINES)}, got {engine}")
     if mode not in MODES:
         raise ValueError(f"mode must be {'|'.join(MODES)}, got {mode}")
+    _faults.maybe_oom(f"count.{engine}")
+    # hash_overflow fault: shrink the bounded-probe table so the
+    # in-graph sort fallback (the ladder's in-program rung) must fire
+    hash_bits = _faults.hash_bits_override(f"count.{engine}", hash_bits)
     dtype = count_dtype or jnp.int32
     direction = "high" if cache_opt else "low"
     dg = device_graph(rg)
@@ -763,6 +786,48 @@ def count_from_ranked(
     return out
 
 
+def _count_validator(g: BipartiteGraph, mode: str):
+    """Result-invariant check for the counting ladder: Σ C(d, 2) over
+    endpoint-pair groups with Σ d = W is maximized by one group holding
+    all W wedges (convexity), so every count — total, per-vertex,
+    per-edge — is bounded by ``ub = C(min(w_u, w_v), 2)`` and
+    non-negative. A violating rung result (poisoned tile, corrupted
+    scatter) demotes to the next rung instead of being returned. When
+    ``ub`` does not fit the result dtype the engines' documented
+    wraparound regime is in effect and the check stands down."""
+    w_u, w_v = g.wedge_totals()
+    w = min(w_u, w_v)
+    ub = w * (w - 1) // 2
+
+    def _bad(name, arr):
+        arr = np.asarray(arr)
+        if arr.size == 0:
+            return None
+        if ub > int(np.iinfo(arr.dtype).max):
+            return None
+        lo, hi = int(arr.min()), int(arr.max())
+        if lo < 0:
+            return f"negative {name} count {lo}"
+        if hi > ub:
+            return f"{name} count {hi} exceeds the C(W, 2) bound {ub}"
+        return None
+
+    def check(host_out):
+        if mode == "all":
+            total, bv, be = host_out
+            for name, arr in (("total", total), ("per-vertex", bv),
+                              ("per-edge", be)):
+                problem = _bad(name, arr)
+                if problem is not None:
+                    return problem
+            return None
+        name = {"global": "total", "vertex": "per-vertex",
+                "edge": "per-edge"}[mode]
+        return _bad(name, host_out)
+
+    return check
+
+
 def count_butterflies(
     g: BipartiteGraph,
     *,
@@ -774,19 +839,63 @@ def count_butterflies(
     batch_rows: int = 8,
     engine: str = "xla",
     max_chunk=None,
+    resilience=None,
 ) -> CountResult:
-    """Public entry point: rank -> retrieve -> aggregate -> count."""
+    """Public entry point: rank -> retrieve -> aggregate -> count.
+
+    Execution runs under the resilience degradation ladder
+    (``COUNT_LADDERS``): the requested engine is tried first and a
+    capacity overflow (e.g. the fused_pallas kernel's tile bound), a
+    RESOURCE_EXHAUSTED (retried with a halved ``max_chunk`` budget
+    first), or a result-invariant violation descends to the next
+    bitwise-identical rung — ``fused_pallas -> fused -> xla``.
+    ``resilience`` accepts None/True (default policy), False (disable
+    validation/retries/report; rung descent — the engines' documented
+    semantics — still applies), or a
+    :class:`~repro.core.resilience.ResiliencePolicy`. The returned
+    :class:`CountResult` carries the
+    :class:`~repro.core.resilience.ExecutionReport` in ``.report``.
+    Preprocessing is shared across rungs, so a fallback never repays
+    the O(m log m) ranking. The worst-case accumulator preflight
+    (:meth:`BipartiteGraph.accumulator_preflight`) raises
+    :class:`~repro.core.resilience.AccumulatorOverflowRisk` up front
+    when even two-limb int32 accumulation could silently wrap.
+    """
+    policy = _res.resolve_policy(resilience)
     ordering = make_order(g, order)
     rg = preprocess(g, ordering, order_name=order)
-    out = count_from_ranked(
-        rg,
-        aggregation=aggregation,
-        mode=mode,
-        cache_opt=cache_opt,
-        count_dtype=count_dtype,
-        batch_rows=batch_rows,
-        engine=engine,
-        max_chunk=max_chunk,
+    if policy.validate_results:
+        g.accumulator_preflight()
+    ladder = COUNT_LADDERS.get(engine, (engine,))
+    if aggregation in ("batch", "batch_wa"):
+        ladder = (engine,)  # batch fuses its own accumulation: one rung
+
+    def _make_rung(eng):
+        def run(shrinks):
+            mc = max_chunk
+            if shrinks:
+                base = _resolve_chunk_budget(mc)
+                if base is None:
+                    base = auto_chunk_budget()
+                mc = shrink_budget(base, shrinks)
+            out = count_from_ranked(
+                rg,
+                aggregation=aggregation,
+                mode=mode,
+                cache_opt=cache_opt,
+                count_dtype=count_dtype,
+                batch_rows=batch_rows,
+                engine=eng,
+                max_chunk=mc,
+            )
+            return jax.device_get(out)
+
+        return _res.Rung(eng, run)
+
+    out, report = policy.execute(
+        "count",
+        [_make_rung(e) for e in ladder],
+        _count_validator(g, mode),
     )
 
     def _scatter_vertex(bv: np.ndarray):
@@ -797,16 +906,23 @@ def count_butterflies(
         return per_u, per_v
 
     if mode == "all":
-        total, bv, be = jax.device_get(out)
+        total, bv, be = out
         per_u, per_v = _scatter_vertex(np.asarray(bv))
-        return CountResult(
+        res = CountResult(
             mode, np.asarray(total), per_u, per_v, np.asarray(be),
             aggregation, order,
         )
-    out = np.asarray(jax.device_get(out))
-    if mode == "global":
-        return CountResult(mode, out, None, None, None, aggregation, order)
-    if mode == "vertex":
-        per_u, per_v = _scatter_vertex(out)
-        return CountResult(mode, None, per_u, per_v, None, aggregation, order)
-    return CountResult(mode, None, None, None, out, aggregation, order)
+    elif mode == "global":
+        res = CountResult(
+            mode, np.asarray(out), None, None, None, aggregation, order
+        )
+    elif mode == "vertex":
+        per_u, per_v = _scatter_vertex(np.asarray(out))
+        res = CountResult(
+            mode, None, per_u, per_v, None, aggregation, order
+        )
+    else:
+        res = CountResult(
+            mode, None, None, None, np.asarray(out), aggregation, order
+        )
+    return policy.attach(res, report)

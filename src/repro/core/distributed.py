@@ -34,6 +34,10 @@ exactly and the engines agree bitwise.
 """
 from __future__ import annotations
 
+import os
+import subprocess
+import sys
+import time
 from typing import Optional, Sequence
 
 import jax
@@ -42,10 +46,12 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from ..testing import faults as _faults
 from .aggregate import aggregate_sort
 from .count import _accumulate, _fused_tile_step, _zero_counts  # shared hot path
 from .graph import BipartiteGraph, RankedGraph, preprocess
 from .ranking import make_order
+from .resilience import DeviceLost
 from .wedges import (
     auto_chunk_budget,
     device_graph,
@@ -61,9 +67,96 @@ __all__ = [
     "plan_fused_partition",
     "distributed_count",
     "distributed_count_fn",
+    "launch_device_worker",
 ]
 
 DIST_ENGINES = ("fused", "slice")
+
+# Prepended to every worker payload: lets the chaos matrix kill or hang
+# a specific launch attempt from the parent via the environment, before
+# the worker imports jax (so a "lost device" looks exactly like a dead
+# or wedged XLA client process).
+_WORKER_FAULT_PREAMBLE = """\
+import os as _os
+_mode = _os.environ.pop("REPRO_FAULT_DEVICE_LOSS", None)
+if _mode == "hang":
+    import time as _time
+    _time.sleep(3600)
+elif _mode:
+    _os._exit(13)
+"""
+
+
+def launch_device_worker(
+    code: str,
+    *,
+    devices: int = 1,
+    device_index: int = 0,
+    timeout_s: float = 540.0,
+    retries: int = 1,
+    backoff_s: float = 0.5,
+    env: Optional[dict] = None,
+) -> str:
+    """Run a Python worker payload against a forced ``devices``-wide
+    host platform, with bounded retry + exponential backoff and a
+    per-attempt timeout — the per-device dispatch path of the
+    resilience layer.
+
+    The child gets ``XLA_FLAGS=--xla_force_host_platform_device_count``
+    and the repro ``src`` dir on ``PYTHONPATH``; extra ``env`` entries
+    overlay that. Each attempt asks the fault harness
+    (:func:`repro.testing.faults.worker_env`) whether an armed
+    ``device_loss`` fault should kill or hang this launch — a
+    ``times=1`` fault consumes itself on the first attempt, so the
+    retry runs clean and results stay bitwise-identical. A nonzero
+    exit or a timeout burns one attempt; after ``retries`` extra
+    attempts the failure surfaces as :class:`DeviceLost` carrying the
+    failed ``device_index``, the attempt count, and the last stderr
+    tail — never a silent empty result. Returns the worker's stdout.
+    """
+    src_root = os.path.dirname(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    )
+    base_env = dict(os.environ)
+    base_env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={int(devices)}"
+    )
+    base_env["PYTHONPATH"] = src_root
+    if env:
+        base_env.update(env)
+    base_env.pop("REPRO_FAULT_DEVICE_LOSS", None)
+    payload = _WORKER_FAULT_PREAMBLE + code
+    attempts = int(retries) + 1
+    last_detail = ""
+    for attempt in range(attempts):
+        attempt_env = _faults.worker_env(
+            dict(base_env), device=device_index
+        )
+        try:
+            out = subprocess.run(
+                [sys.executable, "-c", payload],
+                env=attempt_env,
+                capture_output=True,
+                text=True,
+                timeout=timeout_s,
+            )
+        except subprocess.TimeoutExpired:
+            last_detail = f"timed out after {timeout_s}s"
+        else:
+            if out.returncode == 0:
+                return out.stdout
+            last_detail = (
+                f"exit code {out.returncode}; stderr tail: "
+                f"{out.stderr[-2000:]}"
+            )
+        if attempt + 1 < attempts and backoff_s > 0:
+            time.sleep(backoff_s * (2 ** attempt))
+    raise DeviceLost(
+        f"device worker {device_index} failed after {attempts} "
+        f"attempt(s): {last_detail}",
+        device=device_index,
+        attempts=attempts,
+    )
 
 
 def _vertex_loads(rg: RankedGraph, direction: str):

@@ -18,11 +18,15 @@ from typing import Optional
 
 import numpy as np
 
+from .resilience import AccumulatorOverflowRisk, GraphValidationError
+
 __all__ = [
     "BipartiteGraph",
     "RankedGraph",
     "preprocess",
 ]
+
+_DUP_POLICIES = ("dedupe", "raise", "assume_unique")
 
 
 def _round_up(x: int, mult: int) -> int:
@@ -35,26 +39,102 @@ class BipartiteGraph:
 
     ``edges`` is an (m, 2) int array of (u, v) pairs with ``0 <= u < n_u``
     and ``0 <= v < n_v``. Self-loops are impossible by construction;
-    duplicate edges are removed on construction (paper §6.1).
+    duplicate edges are removed on construction (paper §6.1) unless
+    ``on_duplicate`` overrides that: ``"dedupe"`` (default, silent
+    removal), ``"raise"`` (typed :class:`GraphValidationError`), or
+    ``"assume_unique"`` (skip the O(m log m) uniqueness pass entirely —
+    the opt-out for callers that pre-dedupe; duplicates passed under it
+    corrupt counts, so it is strictly a contract with the caller).
+
+    Malformed inputs — wrong shape, non-integral or out-of-range
+    endpoints, empty sides — raise :class:`GraphValidationError`
+    (a ``ValueError`` subclass) before any kernel sees the data.
     """
 
     n_u: int
     n_v: int
     edges: np.ndarray  # (m, 2) int64
+    on_duplicate: str = "dedupe"
 
     def __post_init__(self):
-        e = np.asarray(self.edges, dtype=np.int64)
+        if self.on_duplicate not in _DUP_POLICIES:
+            raise GraphValidationError(
+                f"on_duplicate must be {'|'.join(_DUP_POLICIES)}, "
+                f"got {self.on_duplicate!r}"
+            )
+        if int(self.n_u) <= 0 or int(self.n_v) <= 0:
+            raise GraphValidationError(
+                f"empty-side graph: n_u={self.n_u}, n_v={self.n_v} "
+                "(both sides must be non-empty)"
+            )
+        e = np.asarray(self.edges)
         if e.ndim != 2 or e.shape[1] != 2:
-            raise ValueError(f"edges must be (m, 2), got {e.shape}")
+            raise GraphValidationError(f"edges must be (m, 2), got {e.shape}")
+        if e.dtype.kind == "f":
+            if e.size and not np.isfinite(e).all():
+                raise GraphValidationError("non-finite edge endpoints")
+            if e.size and not (e == np.floor(e)).all():
+                raise GraphValidationError("non-integral edge endpoints")
+        elif e.dtype.kind not in "iu":
+            raise GraphValidationError(
+                f"edge endpoints must be integers, got dtype {e.dtype}"
+            )
+        e = e.astype(np.int64)
         if e.shape[0]:
             if e[:, 0].min() < 0 or e[:, 0].max() >= self.n_u:
-                raise ValueError("u endpoint out of range")
+                raise GraphValidationError("u endpoint out of range")
             if e[:, 1].min() < 0 or e[:, 1].max() >= self.n_v:
-                raise ValueError("v endpoint out of range")
-        # de-duplicate
+                raise GraphValidationError("v endpoint out of range")
+        if self.on_duplicate == "assume_unique":
+            self.edges = e
+            return
         key = e[:, 0] * max(self.n_v, 1) + e[:, 1]
         _, idx = np.unique(key, return_index=True)
+        if self.on_duplicate == "raise" and idx.shape[0] != e.shape[0]:
+            raise GraphValidationError(
+                f"{e.shape[0] - idx.shape[0]} duplicate edges "
+                "(on_duplicate='raise'; use 'dedupe' to drop them)"
+            )
         self.edges = e[np.sort(idx)]
+
+    @classmethod
+    def from_csr(cls, indptr, indices, n_v: int,
+                 on_duplicate: str = "dedupe") -> "BipartiteGraph":
+        """Build from a U-side CSR adjacency, validating the structure:
+        ``indptr`` must be 1-D, start at 0, be non-decreasing (ragged /
+        non-monotone offsets raise :class:`GraphValidationError`), and
+        end at ``len(indices)``; ``indices`` are V ids in ``[0, n_v)``
+        (range-checked by ``__post_init__``)."""
+        indptr = np.asarray(indptr)
+        indices = np.asarray(indices)
+        if indptr.ndim != 1 or indptr.shape[0] < 1:
+            raise GraphValidationError(
+                f"indptr must be 1-D and non-empty, got shape {indptr.shape}"
+            )
+        if indptr.dtype.kind not in "iu":
+            raise GraphValidationError(
+                f"indptr must be integers, got dtype {indptr.dtype}"
+            )
+        if indices.ndim != 1:
+            raise GraphValidationError(
+                f"indices must be 1-D, got shape {indices.shape}"
+            )
+        indptr = indptr.astype(np.int64)
+        if int(indptr[0]) != 0:
+            raise GraphValidationError(
+                f"indptr must start at 0, got {int(indptr[0])}"
+            )
+        if indptr.shape[0] > 1 and (np.diff(indptr) < 0).any():
+            raise GraphValidationError("non-monotone CSR indptr")
+        if int(indptr[-1]) != indices.shape[0]:
+            raise GraphValidationError(
+                f"ragged CSR: indptr[-1]={int(indptr[-1])} but "
+                f"len(indices)={indices.shape[0]}"
+            )
+        n_u = indptr.shape[0] - 1
+        us = np.repeat(np.arange(n_u, dtype=np.int64), np.diff(indptr))
+        edges = np.stack([us, indices.astype(np.int64)], axis=1)
+        return cls(n_u, int(n_v), edges, on_duplicate=on_duplicate)
 
     @property
     def m(self) -> int:
@@ -78,6 +158,27 @@ class BipartiteGraph:
         w_u = int((dv.astype(np.int64) * (dv - 1) // 2).sum())
         w_v = int((du.astype(np.int64) * (du - 1) // 2).sum())
         return w_u, w_v
+
+    def accumulator_preflight(self, budget_bits: int = 63) -> int:
+        """Worst-case butterfly bound vs. the accumulator budget.
+
+        Σ C(d, 2) over endpoint-pair groups with Σ d = W is maximized
+        (convexity) by one group holding all W wedges, so
+        ``C(min(w_u, w_v), 2)`` bounds the exact total. Computed in
+        arbitrary-precision host ints; raises
+        :class:`AccumulatorOverflowRisk` when the bound needs more
+        than ``budget_bits`` bits (default: the engines' two-limb
+        int32 accumulators, exact below 2^63). Returns the bound."""
+        w_u, w_v = self.wedge_totals()
+        w = min(w_u, w_v)
+        bound = w * (w - 1) // 2
+        if bound >= (1 << int(budget_bits)):
+            raise AccumulatorOverflowRisk(
+                f"worst-case butterfly bound C({w}, 2) = {bound} exceeds "
+                f"the {budget_bits}-bit accumulator budget; exact counts "
+                "cannot be guaranteed on any engine rung"
+            )
+        return bound
 
 
 @dataclasses.dataclass
@@ -149,7 +250,21 @@ def preprocess(
     n, m = g.n, g.m
     order = np.asarray(order, dtype=np.int64)
     if order.shape != (n,):
-        raise ValueError(f"order must be a permutation of {n} vertices")
+        raise GraphValidationError(
+            f"order must be a permutation of {n} vertices, "
+            f"got shape {order.shape}"
+        )
+    if n and (order.min() < 0 or order.max() >= n):
+        raise GraphValidationError(
+            f"order must be a permutation of {n} vertices: "
+            "entries out of range"
+        )
+    if n and (np.bincount(order, minlength=n) != 1).any():
+        # a duplicated entry would silently corrupt rank[order] below
+        raise GraphValidationError(
+            f"order must be a permutation of {n} vertices: "
+            "duplicate entries"
+        )
     rank = np.empty(n, dtype=np.int64)
     rank[order] = np.arange(n)
 

@@ -168,6 +168,8 @@ from ..kernels.bucket_update import (
     bucket_upper_bound,
     lowest_nonempty_bucket,
 )
+from ..testing import faults as _faults
+from . import resilience as _res
 from .graph import BipartiteGraph
 from .count import _fused_tile_apply, count_butterflies, default_count_dtype
 from .wedges import (
@@ -219,6 +221,7 @@ class PeelResult(NamedTuple):
     round_sizes: np.ndarray  # peeled per round
     sub_rounds: Optional[int] = None  # range mode: re-settle iterations
     # (== exact mode's ρ); equals ``rounds`` under peel_mode="exact"
+    report: Optional["_res.ExecutionReport"] = None  # resilience audit
 
 
 def _ranges(starts: np.ndarray, lens: np.ndarray) -> np.ndarray:
@@ -826,24 +829,38 @@ def _peel_tips_device_run(
     tile_budget: Optional[int] = None,
     w2: Optional[np.ndarray] = None,
     peel_mode: str = "exact",
+    budget_shrinks: int = 0,
+    note: Optional[list] = None,
 ) -> Optional[PeelResult]:
     """Capacity-plan, run the device loop, fetch once per segment.
     Returns None when the device engine does not apply (empty side,
     counts beyond int32, totals beyond int32 indexing) or the frontier
     overflowed its ``max_frontier``-bounded buffers — callers fall back
-    to host. ``csr`` is the caller-built ``(woff, w_u2)`` wedge CSR
+    to host (the resilience ladder translates the None into the typed
+    taxonomy via ``resilience.require_rung``, appending the reason to
+    ``note``). ``csr`` is the caller-built ``(woff, w_u2)`` wedge CSR
     (stored) or ``(off, nbr)`` graph CSR, shared with the host loop so
-    a fallback never rebuilds the dominant preprocessing."""
+    a fallback never rebuilds the dominant preprocessing.
+    ``budget_shrinks`` halves the frontier/tile budgets that many times
+    (the ladder's RESOURCE_EXHAUSTED re-entry)."""
+    note = [] if note is None else note
     n_side = g.n_u if side == 0 else g.n_v
     base = 0 if side == 0 else g.n_u
     if n_side == 0 or int(counts.max(initial=0)) >= _I32_MAX:
+        note.append("device engine unavailable: empty side or counts "
+                    "beyond int32")
         return None
     budget = _I32_MAX if max_frontier is None else int(max_frontier)
     tb = _DEFAULT_TILE_TARGET if tile_budget is None else int(tile_budget)
+    if budget_shrinks:
+        budget = max(128, budget >> budget_shrinks)
+        tb = max(1, tb >> budget_shrinks)
     if stored:
         woff, w_u2 = csr
         w_total = int(woff[-1])
         if w_total >= _I32_MAX:
+            note.append("device engine unavailable: stored wedge total "
+                        "beyond int32 indexing")
             return None
         rows = np.diff(woff)
         work1 = np.zeros(n_side, np.int32)
@@ -862,6 +879,8 @@ def _peel_tips_device_run(
             w2 = _level2_totals(off, nbr, base, n_side)
         lvl2 = int(w2.sum())
         if lvl2 >= _I32_MAX or 2 * g.m >= _I32_MAX:
+            note.append("device engine unavailable: expansion totals "
+                        "beyond int32 indexing")
             return None
         work1 = deg[base : base + n_side].astype(np.int32)
         work2 = w2.astype(np.int32)
@@ -917,6 +936,10 @@ def _peel_tips_device_run(
 
     host = _drive_segments(run, state, adaptive, update_caps)
     if host is None:
+        note.append(
+            f"bounded frontier buffer overflow (max_frontier budget "
+            f"{budget})"
+        )
         return None
     rounds = int(host.rounds)
     return PeelResult(
@@ -987,70 +1010,41 @@ class _RoundAccounting:
     def peeled(self, k: int) -> None:
         self.sizes[-1] += int(k)
 
-def peel_tips(
-    g: BipartiteGraph,
-    counts: Optional[np.ndarray] = None,
-    side: Optional[int] = None,
-    aggregation: str = "sort",
-    count_kwargs: Optional[dict] = None,
-    engine: str = "host",
-    max_frontier: Optional[int] = None,
-    hash_bits: Optional[int] = None,
-    subtract: str = "fused",
-    decrease_key: str = "bucket",
-    capacity_schedule: str = "fixed",
-    tile_budget: Optional[int] = None,
-    peel_mode: str = "exact",
-) -> PeelResult:
-    """Tip decomposition (PEEL-V, Alg. 5).
 
-    Peels the bipartition producing fewer wedges-as-endpoints unless
-    ``side`` is forced. ``counts`` are per-vertex butterfly counts for
-    the peeled side (computed if omitted). ``engine="device"`` runs the
-    whole round loop on device (see module docstring); ``max_frontier``
-    bounds its materializing/level-1 buffers (overflow falls back to
-    host); ``hash_bits`` overrides the hash-aggregation table size
-    (testing hook for the in-graph overflow fallback).
+def _peel_validator(counts: np.ndarray):
+    """Result-invariant validator for the peeling ladders: every peel
+    number is the κ of some round's masked min, so the numbers must be
+    non-negative and bounded by the max *initial* count. Checked on the
+    host-side result only (numpy — never costs a device sync), so a
+    poisoned buffer or truncated subtract demotes to the next rung
+    instead of escaping as a silent wrong answer. Stands down when the
+    initial counts themselves are negative (caller passed garbage the
+    engines never promised to interpret)."""
+    counts = np.asarray(counts)
+    if counts.size == 0 or int(counts.min()) < 0:
+        return lambda res: None
+    cmax = int(counts.max())
 
-    ``subtract="fused"`` (default) streams each round's frontier wedge
-    space through iterating-endpoint-aligned tiles — O(tile) peak temp
-    instead of O(frontier wedges) — on both engines;
-    ``"materialize"`` restores the PR 2 whole-frontier expansion.
-    ``tile_budget`` sizes the tiles (default: a small 1024 target —
-    peeling pays the tile shape every round — floored by the largest
-    single-vertex expansion). ``decrease_key="bucket"`` (default)
-    routes device-engine updates through the Julienne-style batched
-    ``bucket_update`` pass (decrements + next round's extract-min in
-    one sweep); ``"scatter"`` keeps the PR 2 scatter + per-round
-    ``bucket_min``. ``capacity_schedule="adaptive"`` shrinks the
-    device engine's planned buffers geometrically as the graph empties
-    (O(log cap) extra host syncs); ``"fixed"`` keeps the one-sync
-    guarantee. ``peel_mode="range"`` switches to bucket-range rounds
-    (process the whole lowest non-empty geometric bucket per round,
-    Lakhotia-style — see module docstring): same numbers, ρ counted in
-    bucket rounds, re-settle iterations in ``sub_rounds``. All knob
-    combinations produce bitwise-identical numbers.
-    """
-    _check_engine(engine)
-    _check_knobs(aggregation, subtract, decrease_key, capacity_schedule,
-                 peel_mode)
-    side, counts = _side_and_counts(g, counts, side, count_kwargs)
-    off, nbr, _ = _csr(g)
+    def validate(res: "PeelResult") -> Optional[str]:
+        nums = np.asarray(res.numbers)
+        if nums.size == 0:
+            return None
+        lo, hi = int(nums.min()), int(nums.max())
+        if lo < 0:
+            return f"negative peel number {lo}"
+        if hi > cmax:
+            return f"peel number {hi} exceeds max initial count {cmax}"
+        return None
+
+    return validate
+
+
+def _peel_tips_host(g, counts, side, aggregation, hash_bits, subtract,
+                    tile_budget, peel_mode, off, nbr, w2) -> PeelResult:
+    """Host tip round loop (PEEL-V's bottom rung): whole-frontier 2-hop
+    wedge enumeration with the shared tile subtract."""
     n_side = g.n_u if side == 0 else g.n_v
     base = 0 if side == 0 else g.n_u  # global id offset of peeled side
-    # per-vertex 2-hop totals: shared between the device planner and the
-    # host tile plan so a device->host fallback never recomputes them
-    w2 = _level2_totals(off, nbr, base, n_side)
-    if engine == "device":
-        res = _peel_tips_device_run(
-            g, counts, side, aggregation, False, max_frontier, hash_bits,
-            (off, nbr), subtract=subtract, decrease_key=decrease_key,
-            capacity_schedule=capacity_schedule, tile_budget=tile_budget,
-            w2=w2, peel_mode=peel_mode,
-        )
-        if res is not None:
-            return res
-
     tile_cap = None
     if subtract == "fused":
         tb = _DEFAULT_TILE_TARGET if tile_budget is None else int(tile_budget)
@@ -1095,6 +1089,97 @@ def peel_tips(
                       sub_rounds=acct.sub_rounds)
 
 
+def peel_tips(
+    g: BipartiteGraph,
+    counts: Optional[np.ndarray] = None,
+    side: Optional[int] = None,
+    aggregation: str = "sort",
+    count_kwargs: Optional[dict] = None,
+    engine: str = "host",
+    max_frontier: Optional[int] = None,
+    hash_bits: Optional[int] = None,
+    subtract: str = "fused",
+    decrease_key: str = "bucket",
+    capacity_schedule: str = "fixed",
+    tile_budget: Optional[int] = None,
+    peel_mode: str = "exact",
+    resilience=None,
+) -> PeelResult:
+    """Tip decomposition (PEEL-V, Alg. 5).
+
+    Peels the bipartition producing fewer wedges-as-endpoints unless
+    ``side`` is forced. ``counts`` are per-vertex butterfly counts for
+    the peeled side (computed if omitted). ``engine="device"`` runs the
+    whole round loop on device (see module docstring); ``max_frontier``
+    bounds its materializing/level-1 buffers (overflow falls back to
+    host); ``hash_bits`` overrides the hash-aggregation table size
+    (testing hook for the in-graph overflow fallback).
+
+    ``subtract="fused"`` (default) streams each round's frontier wedge
+    space through iterating-endpoint-aligned tiles — O(tile) peak temp
+    instead of O(frontier wedges) — on both engines;
+    ``"materialize"`` restores the PR 2 whole-frontier expansion.
+    ``tile_budget`` sizes the tiles (default: a small 1024 target —
+    peeling pays the tile shape every round — floored by the largest
+    single-vertex expansion). ``decrease_key="bucket"`` (default)
+    routes device-engine updates through the Julienne-style batched
+    ``bucket_update`` pass (decrements + next round's extract-min in
+    one sweep); ``"scatter"`` keeps the PR 2 scatter + per-round
+    ``bucket_min``. ``capacity_schedule="adaptive"`` shrinks the
+    device engine's planned buffers geometrically as the graph empties
+    (O(log cap) extra host syncs); ``"fixed"`` keeps the one-sync
+    guarantee. ``peel_mode="range"`` switches to bucket-range rounds
+    (process the whole lowest non-empty geometric bucket per round,
+    Lakhotia-style — see module docstring): same numbers, ρ counted in
+    bucket rounds, re-settle iterations in ``sub_rounds``. All knob
+    combinations produce bitwise-identical numbers.
+
+    ``resilience`` selects the degradation policy (``None``/``True`` =
+    default ladder, ``False`` = no validation/retries/report, or a
+    :class:`~repro.core.resilience.ResiliencePolicy`); when the report
+    is attached, ``result.report`` records the ``device -> host``
+    descent path, shrink-retries, and outcomes.
+    """
+    _check_engine(engine)
+    _check_knobs(aggregation, subtract, decrease_key, capacity_schedule,
+                 peel_mode)
+    policy = _res.resolve_policy(resilience)
+    hash_bits = _faults.hash_bits_override("peel_tips", hash_bits)
+    side, counts = _side_and_counts(g, counts, side, count_kwargs)
+    off, nbr, _ = _csr(g)
+    n_side = g.n_u if side == 0 else g.n_v
+    base = 0 if side == 0 else g.n_u  # global id offset of peeled side
+    # per-vertex 2-hop totals: shared between the device planner and the
+    # host tile plan so a device->host fallback never recomputes them
+    w2 = _level2_totals(off, nbr, base, n_side)
+
+    def run_device(shrinks: int):
+        _faults.maybe_oom("peel_tips.device")
+        mf = _faults.capacity_override("peel_tips.device", max_frontier)
+        c = _faults.maybe_poison("peel_tips.device", counts)
+        notes: list = []
+        res = _peel_tips_device_run(
+            g, c, side, aggregation, False, mf, hash_bits,
+            (off, nbr), subtract=subtract, decrease_key=decrease_key,
+            capacity_schedule=capacity_schedule, tile_budget=tile_budget,
+            w2=w2, peel_mode=peel_mode, budget_shrinks=shrinks, note=notes,
+        )
+        return _res.require_rung(res, notes)
+
+    def run_host(shrinks: int):
+        _faults.maybe_oom("peel_tips.host")
+        return _peel_tips_host(
+            g, counts, side, aggregation, hash_bits, subtract,
+            tile_budget, peel_mode, off, nbr, w2,
+        )
+
+    rungs = [_res.Rung("host", run_host, shrinkable=False)]
+    if engine == "device":
+        rungs.insert(0, _res.Rung("device", run_device))
+    out, report = policy.execute("peel_tips", rungs, _peel_validator(counts))
+    return policy.attach(out, report)
+
+
 def peel_tips_stored(
     g: BipartiteGraph,
     counts: Optional[np.ndarray] = None,
@@ -1109,6 +1194,7 @@ def peel_tips_stored(
     capacity_schedule: str = "fixed",
     tile_budget: Optional[int] = None,
     peel_mode: str = "exact",
+    resilience=None,
 ) -> PeelResult:
     """WPEEL-V (paper Alg. 7): store all side-oriented wedges upfront,
     then per round subtract via pure index lookups — O(b)-style work,
@@ -1122,24 +1208,52 @@ def peel_tips_stored(
     device engine recovers each tile straight from the stored-wedge
     CSR — no per-round frontier buffer exists at all, so
     ``max_frontier`` (and capacity overflow) only applies to
-    ``subtract="materialize"``.
+    ``subtract="materialize"``. ``resilience`` as in :func:`peel_tips`.
     """
     _check_engine(engine)
     _check_knobs(aggregation, subtract, decrease_key, capacity_schedule,
                  peel_mode)
+    policy = _res.resolve_policy(resilience)
+    hash_bits = _faults.hash_bits_override("peel_tips_stored", hash_bits)
     side, counts = _side_and_counts(g, counts, side, count_kwargs)
     n_side = g.n_u if side == 0 else g.n_v
     woff, w_u2 = _stored_wedge_csr(g, side)
-    if engine == "device":
+
+    def run_device(shrinks: int):
+        _faults.maybe_oom("peel_tips_stored.device")
+        mf = _faults.capacity_override("peel_tips_stored.device",
+                                       max_frontier)
+        c = _faults.maybe_poison("peel_tips_stored.device", counts)
+        notes: list = []
         res = _peel_tips_device_run(
-            g, counts, side, aggregation, True, max_frontier, hash_bits,
+            g, c, side, aggregation, True, mf, hash_bits,
             (woff, w_u2), subtract=subtract, decrease_key=decrease_key,
             capacity_schedule=capacity_schedule, tile_budget=tile_budget,
-            peel_mode=peel_mode,
+            peel_mode=peel_mode, budget_shrinks=shrinks, note=notes,
         )
-        if res is not None:
-            return res
+        return _res.require_rung(res, notes)
 
+    def run_host(shrinks: int):
+        _faults.maybe_oom("peel_tips_stored.host")
+        return _peel_tips_stored_host(
+            counts, side, n_side, aggregation, hash_bits, subtract,
+            tile_budget, peel_mode, woff, w_u2,
+        )
+
+    rungs = [_res.Rung("host", run_host, shrinkable=False)]
+    if engine == "device":
+        rungs.insert(0, _res.Rung("device", run_device))
+    out, report = policy.execute(
+        "peel_tips_stored", rungs, _peel_validator(counts)
+    )
+    return policy.attach(out, report)
+
+
+def _peel_tips_stored_host(counts, side, n_side, aggregation, hash_bits,
+                           subtract, tile_budget, peel_mode, woff,
+                           w_u2) -> PeelResult:
+    """Host WPEEL-V round loop (the ladder's bottom rung): per-round
+    subtract via stored-wedge index lookups."""
     tile_cap = None
     if subtract == "fused":
         tb = _DEFAULT_TILE_TARGET if tile_budget is None else int(tile_budget)
@@ -1462,25 +1576,36 @@ def _peel_wings_device_run(
     capacity_schedule: str = "fixed",
     tile_budget: Optional[int] = None,
     peel_mode: str = "exact",
+    budget_shrinks: int = 0,
+    note: Optional[list] = None,
 ) -> Optional[PeelResult]:
     """Capacity-plan and run the device wing loop; one ``device_get``
     per segment (one total under the fixed schedule). Returns None when
     the device engine does not apply (no edges, counts or expansion
     totals beyond int32) or a bounded buffer overflowed — callers fall
-    back to the host loop, reusing ``csr``. ``subtract="fused"`` has
-    no frontier buffers (the two-level fused recovery inverts flat
-    triple ids directly), so ``max_frontier`` only bounds the
-    materializing path's ``cap1``/``cap2``."""
+    back to the host loop, reusing ``csr`` (the resilience ladder
+    translates the None into the typed taxonomy, appending the reason
+    to ``note``; ``budget_shrinks`` is its RESOURCE_EXHAUSTED re-entry
+    knob). ``subtract="fused"`` has no frontier buffers (the two-level
+    fused recovery inverts flat triple ids directly), so
+    ``max_frontier`` only bounds the materializing path's
+    ``cap1``/``cap2``."""
+    note = [] if note is None else note
     off, nbr, uid = csr
     m = g.m
     if m == 0 or int(counts.max(initial=0)) >= _I32_MAX:
+        note.append("device engine unavailable: no edges or counts "
+                    "beyond int32")
         return None
     if 2 * m >= _I32_MAX:
+        note.append("device engine unavailable: edge slots beyond int32")
         return None
     eu, ev, l1, l2 = _wing_work_totals(g, off, nbr)
     lvl1 = int(l1.sum())
     lvl2 = int(l2.sum())
     if lvl1 >= _I32_MAX or lvl2 >= _I32_MAX:
+        note.append("device engine unavailable: expansion totals beyond "
+                    "int32 indexing")
         return None
     if subtract == "fused":
         # the fused recovery reads in-row neighbor-degree prefixes;
@@ -1491,11 +1616,16 @@ def _peel_wings_device_run(
         if cumdeg.size and int(
             (cumdeg + degs_ds).max(initial=0)
         ) >= _I32_MAX:
+            note.append("device engine unavailable: degree-sorted "
+                        "prefixes beyond int32 indexing")
             return None
     else:
         nbr_ds = uid_ds = degs_ds = cumdeg = np.zeros(0, np.int64)
     budget = _I32_MAX if max_frontier is None else int(max_frontier)
     tb = _DEFAULT_TILE_TARGET if tile_budget is None else int(tile_budget)
+    if budget_shrinks:
+        budget = max(128, budget >> budget_shrinks)
+        tb = max(1, tb >> budget_shrinks)
     if subtract == "materialize":
         cap1 = _pow2_pad(min(lvl1, budget))
         cap2 = _pow2_pad(min(lvl2, budget))
@@ -1551,6 +1681,10 @@ def _peel_wings_device_run(
 
     host = _drive_segments(run, state, adaptive, update_caps)
     if host is None:
+        note.append(
+            f"bounded frontier buffer overflow (max_frontier budget "
+            f"{budget})"
+        )
         return None
     rounds = int(host.rounds)
     return PeelResult(
@@ -1572,6 +1706,7 @@ def peel_wings(
     capacity_schedule: str = "fixed",
     tile_budget: Optional[int] = None,
     peel_mode: str = "exact",
+    resilience=None,
 ) -> PeelResult:
     """Wing decomposition (PEEL-E, Alg. 6).
 
@@ -1598,10 +1733,13 @@ def peel_wings(
     capacity overflow) only applies to ``subtract="materialize"``.
     Counts at or beyond INT32_MAX, expansion totals beyond int32, or a
     bounded-buffer overflow transparently fall back to the host loop.
+    ``resilience`` as in :func:`peel_tips`.
     """
     _check_engine(engine)
     _check_knobs(aggregation, subtract, decrease_key, capacity_schedule,
                  peel_mode)
+    policy = _res.resolve_policy(resilience)
+    hash_bits = _faults.hash_bits_override("peel_wings", hash_bits)
     if counts is None:
         r = count_butterflies(
             g, mode="edge", count_dtype=default_count_dtype(),
@@ -1610,15 +1748,35 @@ def peel_wings(
         counts = r.per_edge
     counts = np.asarray(counts).copy()
     off, nbr, uid = _csr(g)
-    if engine == "device":
+
+    def run_device(shrinks: int):
+        _faults.maybe_oom("peel_wings.device")
+        mf = _faults.capacity_override("peel_wings.device", max_frontier)
+        c = _faults.maybe_poison("peel_wings.device", counts)
+        notes: list = []
         res = _peel_wings_device_run(
-            g, counts, aggregation, max_frontier, hash_bits,
+            g, c, aggregation, mf, hash_bits,
             (off, nbr, uid), subtract=subtract, decrease_key=decrease_key,
             capacity_schedule=capacity_schedule, tile_budget=tile_budget,
-            peel_mode=peel_mode,
+            peel_mode=peel_mode, budget_shrinks=shrinks, note=notes,
         )
-        if res is not None:
-            return res
+        return _res.require_rung(res, notes)
+
+    def run_host(shrinks: int):
+        _faults.maybe_oom("peel_wings.host")
+        return _peel_wings_host(g, counts, off, nbr, uid, peel_mode)
+
+    rungs = [_res.Rung("host", run_host, shrinkable=False)]
+    if engine == "device":
+        rungs.insert(0, _res.Rung("device", run_device))
+    out, report = policy.execute("peel_wings", rungs, _peel_validator(counts))
+    return policy.attach(out, report)
+
+
+def _peel_wings_host(g, counts, off, nbr, uid, peel_mode) -> PeelResult:
+    """Host wing round loop (PEEL-E's bottom rung): per-butterfly
+    triple location via min-degree-side intersections and binary-search
+    edge membership."""
     n, m = g.n, g.m
     # lexsorted composite keys for edge-membership binary search
     src = np.repeat(np.arange(n), np.diff(off))

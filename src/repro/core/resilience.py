@@ -1,0 +1,336 @@
+"""Resilient execution layer: the unified degradation ladder.
+
+ParButterfly's bounded-space machinery (bounded-probe hash tables,
+fixed-capacity frontier buffers, Σ min(deg u, deg u')-bounded wedge
+tiles) makes overflow a first-class runtime event. PRs 1-5 handled it
+with three separately-invented mechanisms — the in-graph hash-overflow
+sort fallback, the ``max_frontier`` overflow latch -> host-engine
+fallback, and the adaptive capacity re-entry segments. This module
+replaces the *call-site* halves of those mechanisms with one policy
+object:
+
+  - A **degradation ladder** of :class:`Rung` objects, tried in order:
+    ``fused_pallas -> fused -> xla`` for counting, ``device -> host``
+    for peeling. A rung that raises :class:`CapacityOverflow` or
+    :class:`RungUnavailable` cedes to the next rung; every rung on the
+    ladder is bitwise-identical where it applies, so descent never
+    changes results — only the execution strategy.
+  - **Capacity-shrink retry with backoff**: an XLA
+    ``RESOURCE_EXHAUSTED`` (or an injected :class:`ResourceExhausted`)
+    re-enters the same rung with a halved tile/chunk budget, a bounded
+    number of times, sleeping ``backoff_base_s * 2**attempt`` between
+    tries, before descending.
+  - **Result-invariant validation**: a caller-supplied validator runs
+    over each rung's host-side result (e.g. butterfly totals must not
+    exceed C(W, 2); peel numbers must not exceed the max initial
+    count). A violating result — a poisoned tile, a silent truncation
+    — demotes to the next rung instead of being returned; at the
+    bottom of the ladder it raises :class:`ResultInvariantViolation`.
+    Never a silent wrong answer.
+  - An :class:`ExecutionReport` attached to count/peel results
+    recording which rungs fired, their outcomes, retry counts, and
+    final budget shrinks.
+
+The structured error taxonomy lives here too. Every class multiple-
+inherits the closest builtin so existing ``except ValueError`` /
+``pytest.raises(ValueError)`` call sites keep working, while new code
+can catch the whole family via :class:`ResilienceError`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, List, Optional, Sequence
+
+__all__ = [
+    "ResilienceError",
+    "GraphValidationError",
+    "CapacityOverflow",
+    "AccumulatorOverflowRisk",
+    "DeviceLost",
+    "ResourceExhausted",
+    "RungUnavailable",
+    "ResultInvariantViolation",
+    "is_resource_exhausted",
+    "RungAttempt",
+    "ExecutionReport",
+    "Rung",
+    "ResiliencePolicy",
+    "resolve_policy",
+    "require_rung",
+]
+
+
+# ---------------------------------------------------------------------------
+# Error taxonomy
+# ---------------------------------------------------------------------------
+
+
+class ResilienceError(Exception):
+    """Root of the structured failure taxonomy."""
+
+
+class GraphValidationError(ResilienceError, ValueError):
+    """Malformed graph input: ragged/non-monotone CSR, out-of-range or
+    duplicate edges, empty sides, non-permutation orders. Raised before
+    any kernel ever sees the data; never degradable."""
+
+
+class CapacityOverflow(ResilienceError, ValueError):
+    """A bounded buffer (frontier cap, kernel tile) cannot hold the
+    workload. Degradable: the ladder descends to a rung without that
+    bound (e.g. ``fused_pallas -> fused``, ``device -> host``)."""
+
+
+class AccumulatorOverflowRisk(ResilienceError, OverflowError):
+    """The worst-case butterfly bound C(min(w_u, w_v), 2) exceeds the
+    accumulator budget (two-limb int32 = 2^63 by default): exact counts
+    cannot be guaranteed on any rung, so this raises up front instead
+    of risking a silent wraparound."""
+
+
+class DeviceLost(ResilienceError, RuntimeError):
+    """A per-device worker died or timed out after bounded retries.
+    Carries the failed device index and attempt count."""
+
+    def __init__(self, message: str, *, device: Optional[int] = None,
+                 attempts: int = 0):
+        super().__init__(message)
+        self.device = device
+        self.attempts = attempts
+
+
+class ResourceExhausted(ResilienceError, MemoryError):
+    """Device memory exhaustion (mirrors XLA's RESOURCE_EXHAUSTED
+    status). The ladder retries the same rung with a halved budget
+    before descending. The fault harness raises this directly."""
+
+
+class RungUnavailable(ResilienceError, RuntimeError):
+    """A rung is statically inapplicable to this workload (counts
+    beyond int32, empty side, expansion totals beyond int32 indexing).
+    Internal control flow: the ladder records it and descends."""
+
+
+class ResultInvariantViolation(ResilienceError, RuntimeError):
+    """Every rung either failed or produced a result violating the
+    workload's invariants — surfaced instead of a silent wrong answer."""
+
+
+def is_resource_exhausted(e: BaseException) -> bool:
+    """True for our typed :class:`ResourceExhausted` and for real XLA
+    allocator failures (matched on the canonical status string, so a
+    live ``XlaRuntimeError: RESOURCE_EXHAUSTED: ...`` triggers the
+    shrink-retry path without importing jaxlib error types)."""
+    return isinstance(e, ResourceExhausted) or "RESOURCE_EXHAUSTED" in str(e)
+
+
+def require_rung(result: Any, notes: Sequence[str]) -> Any:
+    """Translate the device engines' ``None`` return (the seed's
+    overflow-latch / inapplicability contract, kept so callers and
+    tests can still observe it) into the typed taxonomy: overflow notes
+    become :class:`CapacityOverflow`, anything else
+    :class:`RungUnavailable`."""
+    if result is not None:
+        return result
+    msg = "; ".join(notes) or "rung unavailable"
+    if any("overflow" in s for s in notes):
+        raise CapacityOverflow(msg)
+    raise RungUnavailable(msg)
+
+
+# ---------------------------------------------------------------------------
+# Execution report
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RungAttempt:
+    """Outcome of one ladder rung (including its shrink-retries)."""
+
+    rung: str
+    outcome: str  # ok | unavailable | capacity-overflow |
+    #               resource-exhausted | invalid-result
+    detail: str = ""
+    retries: int = 0  # RESOURCE_EXHAUSTED retries burned on this rung
+    budget_shrinks: int = 0  # budget halvings applied by those retries
+
+
+@dataclasses.dataclass
+class ExecutionReport:
+    """Attached to :class:`~repro.core.count.CountResult` /
+    :class:`~repro.core.peel.PeelResult` as ``.report`` when the
+    resilience policy is enabled: the audit trail of the ladder."""
+
+    workload: str  # e.g. "count", "peel_tips"
+    requested: str  # the rung the caller asked for
+    attempts: List[RungAttempt] = dataclasses.field(default_factory=list)
+    final_rung: Optional[str] = None  # rung that produced the result
+
+    @property
+    def degraded(self) -> bool:
+        return self.final_rung is not None and self.final_rung != self.requested
+
+    @property
+    def retries(self) -> int:
+        return sum(a.retries for a in self.attempts)
+
+    @property
+    def final_budget_shrinks(self) -> int:
+        for a in self.attempts:
+            if a.rung == self.final_rung:
+                return a.budget_shrinks
+        return 0
+
+    def summary(self) -> str:
+        path = " -> ".join(
+            f"{a.rung}[{a.outcome}"
+            + (f",retries={a.retries}" if a.retries else "")
+            + "]"
+            for a in self.attempts
+        )
+        return f"{self.workload}: requested={self.requested} {path}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Rung:
+    """One ladder rung. ``run(budget_shrinks)`` executes the rung with
+    its budget halved ``budget_shrinks`` times (the shrink-retry knob);
+    ``shrinkable=False`` rungs (host loops with no static buffers) get
+    no shrink-retry."""
+
+    name: str
+    run: Callable[[int], Any]
+    shrinkable: bool = True
+
+
+# ---------------------------------------------------------------------------
+# Policy
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ResiliencePolicy:
+    """The one policy object driving every engine's fallback behavior.
+
+    ``max_retries`` bounds per-rung RESOURCE_EXHAUSTED shrink-retries;
+    ``backoff_base_s`` seeds the exponential backoff between them.
+    ``validate_results=False`` skips result-invariant validation and
+    ``attach_report=False`` drops the report (together these are the
+    "ladder disabled" benchmark configuration — the rung *descent*
+    itself always runs, because it is the engines' documented
+    semantics, not an optional extra)."""
+
+    max_retries: int = 2
+    backoff_base_s: float = 0.02
+    validate_results: bool = True
+    attach_report: bool = True
+    sleep: Callable[[float], None] = time.sleep
+
+    def execute(
+        self,
+        workload: str,
+        rungs: Sequence[Rung],
+        validate: Optional[Callable[[Any], Optional[str]]] = None,
+    ):
+        """Run ``rungs`` in order until one returns a valid result.
+
+        Returns ``(result, report)``. Degradable failures
+        (:class:`CapacityOverflow`, :class:`RungUnavailable`, exhausted
+        RESOURCE_EXHAUSTED retries, invariant violations) descend;
+        input/world errors (:class:`GraphValidationError`,
+        :class:`AccumulatorOverflowRisk`, :class:`DeviceLost`) and
+        unknown exceptions propagate — no rung fixes a malformed graph
+        and masking a genuine bug as a fallback would hide corruption.
+        """
+        if not rungs:
+            raise ValueError("resilience ladder needs at least one rung")
+        report = ExecutionReport(workload=workload, requested=rungs[0].name)
+        last_err: Optional[BaseException] = None
+        last_invalid: Optional[str] = None
+        for rung in rungs:
+            shrinks = 0
+            retries = 0
+            while True:
+                try:
+                    out = rung.run(shrinks)
+                except RungUnavailable as e:
+                    report.attempts.append(RungAttempt(
+                        rung.name, "unavailable", str(e), retries, shrinks))
+                    last_err = e
+                    break
+                except CapacityOverflow as e:
+                    report.attempts.append(RungAttempt(
+                        rung.name, "capacity-overflow", str(e), retries,
+                        shrinks))
+                    last_err = e
+                    break
+                except (GraphValidationError, AccumulatorOverflowRisk,
+                        DeviceLost):
+                    raise
+                except Exception as e:
+                    if not is_resource_exhausted(e):
+                        raise
+                    if rung.shrinkable and retries < self.max_retries:
+                        retries += 1
+                        shrinks += 1
+                        if self.backoff_base_s > 0:
+                            self.sleep(
+                                self.backoff_base_s * (2 ** (retries - 1))
+                            )
+                        continue
+                    report.attempts.append(RungAttempt(
+                        rung.name, "resource-exhausted", str(e), retries,
+                        shrinks))
+                    last_err = e
+                    break
+                if validate is not None and self.validate_results:
+                    problem = validate(out)
+                    if problem is not None:
+                        report.attempts.append(RungAttempt(
+                            rung.name, "invalid-result", problem, retries,
+                            shrinks))
+                        last_invalid = f"{rung.name}: {problem}"
+                        last_err = None
+                        break
+                report.attempts.append(RungAttempt(
+                    rung.name, "ok", "", retries, shrinks))
+                report.final_rung = rung.name
+                return out, report
+        if last_invalid is not None and last_err is None:
+            raise ResultInvariantViolation(
+                f"{workload}: every rung failed or violated result "
+                f"invariants; last violation: {last_invalid} "
+                f"({report.summary()})"
+            )
+        assert last_err is not None
+        raise last_err
+
+    def attach(self, result, report: ExecutionReport):
+        """``result._replace(report=...)`` honoring ``attach_report``."""
+        if not self.attach_report:
+            return result
+        return result._replace(report=report)
+
+
+_DEFAULT_POLICY = ResiliencePolicy()
+_DISABLED_POLICY = ResiliencePolicy(
+    max_retries=0, backoff_base_s=0.0, validate_results=False,
+    attach_report=False,
+)
+
+
+def resolve_policy(arg) -> ResiliencePolicy:
+    """Resolve an engine entry point's ``resilience=`` knob:
+    ``None``/``True`` -> the default policy, ``False`` -> the disabled
+    policy (no validation, no retries, no report — rung descent only),
+    a :class:`ResiliencePolicy` -> itself."""
+    if arg is None or arg is True:
+        return _DEFAULT_POLICY
+    if arg is False:
+        return _DISABLED_POLICY
+    if isinstance(arg, ResiliencePolicy):
+        return arg
+    raise ValueError(
+        f"resilience must be None, bool, or ResiliencePolicy, got {arg!r}"
+    )

@@ -38,6 +38,7 @@ __all__ = [
     "Wedges",
     "DEFAULT_CHUNK_BUDGET",
     "auto_chunk_budget",
+    "shrink_budget",
     "device_graph",
     "slot_wedge_counts",
     "host_wedge_counts",
@@ -96,6 +97,15 @@ def auto_chunk_budget(
     free = max(int(limit) - int(stats.get("bytes_in_use", 0)), 0)
     raw = int(min(hi, max(lo, (free * fraction) // _BYTES_PER_WEDGE)))
     return 1 << (raw.bit_length() - 1)  # quantize: stable jit shapes
+
+
+def shrink_budget(budget: int, shrinks: int, floor: int = 128) -> int:
+    """Halve ``budget`` ``shrinks`` times, floored — the resilience
+    ladder's RESOURCE_EXHAUSTED re-entry schedule (each retry re-plans
+    tiles/chunks with this tightened budget; the pow2 floor matches
+    the planners' alignment floors, so a fully-shrunk budget is still
+    a valid plan input)."""
+    return max(int(floor), int(budget) >> max(0, int(shrinks)))
 
 
 @jax.tree_util.register_pytree_node_class

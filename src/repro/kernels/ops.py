@@ -23,6 +23,7 @@ from typing import Optional
 
 import jax
 
+from ..testing import faults as _faults
 from . import ref as _ref
 from .bucket_min import bucket_min_pallas
 from .bucket_update import MAX_UPDATE_CAP, bucket_update_pallas
@@ -60,6 +61,7 @@ def wedge_histogram(
     use_pallas: bool = False,
     interpret: Optional[bool] = None,
 ):
+    _faults.maybe_oom("ops.wedge_histogram")
     if use_pallas:
         return wedge_histogram_pallas(
             keys, valid, num_buckets, interpret=_resolve(interpret)
@@ -70,6 +72,7 @@ def wedge_histogram(
 def butterfly_combine(
     d, rep, valid, use_pallas: bool = False, interpret: Optional[bool] = None
 ):
+    _faults.maybe_oom("ops.butterfly_combine")
     if use_pallas:
         return butterfly_combine_pallas(
             d, rep, valid, interpret=_resolve(interpret)
@@ -80,6 +83,7 @@ def butterfly_combine(
 def bucket_min(
     counts, alive, use_pallas: bool = False, interpret: Optional[bool] = None
 ):
+    _faults.maybe_oom("ops.bucket_min")
     if use_pallas:
         return bucket_min_pallas(counts, alive, interpret=_resolve(interpret))
     return _ref.bucket_min_ref(counts, alive)
@@ -112,6 +116,7 @@ def bucket_update(
     contract (or off the compiled backend — the device peeling loops
     decide at trace time) use the jnp reference.
     """
+    _faults.maybe_oom("ops.bucket_update")
     if use_pallas and idx.shape[0] <= MAX_UPDATE_CAP:
         return bucket_update_pallas(
             counts, alive, idx, dec, interpret=_resolve(interpret)
@@ -140,14 +145,21 @@ def fused_count_tiles(
     Returns (total int32 limbs (2,), per_vertex limbs (n_pad, 2),
     per_edge limbs (m, 2)) — all exact 64-bit counts as (lo, hi) pairs.
     """
+    _faults.maybe_oom("ops.fused_count_tiles")
     kw = dict(
         tile_cap=tile_cap, n_pad=n_pad, m=m, direction=direction, mode=mode
     )
     if use_pallas:
-        return fused_count_tiles_pallas(
+        out = fused_count_tiles_pallas(
             tile_bounds, offsets, neighbors, edge_src, undirected_id, w_off,
             interpret=_resolve(interpret), **kw,
         )
-    return _ref.fused_count_tiles_ref(
-        tile_bounds, offsets, neighbors, edge_src, undirected_id, w_off, **kw
-    )
+    else:
+        out = _ref.fused_count_tiles_ref(
+            tile_bounds, offsets, neighbors, edge_src, undirected_id, w_off,
+            **kw,
+        )
+    # value-level poison hook: this wrapper runs outside any cached jit
+    # (the counting dispatcher calls it at host level), so planting the
+    # sentinel here can never leak into a compilation cache
+    return _faults.maybe_poison("ops.fused_count_tiles", out)

@@ -1,0 +1,219 @@
+"""Deterministic fault injection for the resilience chaos matrix.
+
+Faults are armed explicitly and process-locally with the
+:func:`inject` context manager — nothing fires unless a test (or the
+``--faults`` benchmark row) arms it, and the disabled-path cost at
+every hook is one truthiness check of an empty list.
+
+Injection points are threaded through the dispatch layers:
+
+  - ``kernels/ops.py``: ``maybe_oom`` on every op wrapper (simulate
+    RESOURCE_EXHAUSTED at kernel dispatch) and ``maybe_poison`` on the
+    ``fused_count_tiles`` output (sentinel-poisoned tile limbs).
+  - ``core/count.py`` / ``core/peel.py``: per-engine ``maybe_oom``
+    sites, ``hash_bits_override`` (force the bounded-probe table into
+    overflow so the in-graph sort fallback must fire),
+    ``capacity_override`` (force the frontier/tile capacity latch so
+    the ladder must descend), and ``maybe_poison`` on the device
+    engines' count buffers.
+  - ``core/distributed.py``: ``worker_env`` marks a subprocess device
+    worker for death (exit or hang) on its next launch attempt.
+
+**Hook-placement rule (jit caches!):** value-level hooks
+(``maybe_poison``, overrides) are only installed where data is
+concrete — at host-level dispatch, never inside code that gets traced
+into a cached jit, because a fault planted at trace time would persist
+in (or be masked by) the compilation cache. ``maybe_oom`` may sit on
+traced paths: a raise aborts the trace and aborted traces are never
+cached. ``hash_bits``/capacity overrides change jit-static arguments,
+so they retrace by construction.
+
+Counting the sites: ``times=N`` makes a fault fire on its first N
+matching hook hits then go quiet — ``times=1`` on a device site models
+a transient fault (the retry or the next rung runs clean, so the
+chaos matrix can assert bitwise parity); ``times=None`` models a hard
+fault (the matrix asserts a typed ``resilience`` error).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+__all__ = [
+    "POISON",
+    "KINDS",
+    "Fault",
+    "inject",
+    "active",
+    "active_kinds",
+    "should_fire",
+    "maybe_oom",
+    "maybe_poison",
+    "hash_bits_override",
+    "capacity_override",
+    "worker_env",
+]
+
+# Sentinel planted by the poison fault: large positive so it provably
+# violates the result invariants on any test-sized graph (a negative
+# sentinel could peel at kappa=0 and stay silently in-range), while
+# still fitting int32.
+POISON = np.int32(1 << 30)
+
+KINDS = (
+    "oom",  # raise ResourceExhausted at the site
+    "poison",  # plant POISON in the site's value
+    "hash_overflow",  # shrink the bounded-probe hash table
+    "capacity_overflow",  # shrink the frontier/tile capacity budget
+    "device_loss",  # kill/hang the subprocess device worker
+)
+
+
+@dataclasses.dataclass
+class Fault:
+    """One armed fault. ``site=None`` matches every site of the kind;
+    otherwise substring match on the hook's site label. ``times=None``
+    fires on every hit, else on the first ``times`` hits only."""
+
+    kind: str
+    site: Optional[str] = None
+    times: Optional[int] = None
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    fired: int = 0
+    hits: List[str] = dataclasses.field(default_factory=list)
+
+
+_active: List[Fault] = []
+
+
+def active() -> bool:
+    return bool(_active)
+
+
+def active_kinds() -> tuple:
+    return tuple(sorted({f.kind for f in _active}))
+
+
+@contextlib.contextmanager
+def inject(kind: str, site: Optional[str] = None,
+           times: Optional[int] = None, **params):
+    """Arm one fault for the duration of the ``with`` block."""
+    if kind not in KINDS:
+        raise ValueError(f"fault kind must be one of {KINDS}, got {kind}")
+    f = Fault(kind=kind, site=site, times=times, params=params)
+    _active.append(f)
+    try:
+        yield f
+    finally:
+        _active.remove(f)
+
+
+def should_fire(kind: str, site: str) -> Optional[Fault]:
+    """Match-and-consume: returns the armed fault (bumping its fired
+    counter) or None. Site matching is substring containment so one
+    fault can cover a family of sites (e.g. ``site="peel_tips"``
+    matches both ``peel_tips.device`` and ``peel_tips.host``)."""
+    for f in _active:
+        if f.kind != kind:
+            continue
+        if f.site is not None and f.site not in site:
+            continue
+        if f.times is not None and f.fired >= f.times:
+            continue
+        f.fired += 1
+        f.hits.append(site)
+        return f
+    return None
+
+
+def maybe_oom(site: str) -> None:
+    """Raise a typed RESOURCE_EXHAUSTED if an ``oom`` fault matches."""
+    if not _active:
+        return
+    if should_fire("oom", site):
+        from ..core.resilience import ResourceExhausted
+
+        raise ResourceExhausted(
+            f"RESOURCE_EXHAUSTED: injected OOM at {site}"
+        )
+
+
+def _poison_leaf(x):
+    if isinstance(x, np.ndarray):
+        if x.size == 0:
+            return x
+        y = x.copy()
+        y.flat[0] = POISON
+        return y
+    # jax array (concrete — see the hook-placement rule above)
+    if x.size == 0:
+        return x
+    if x.ndim == 0:
+        return x.dtype.type(POISON) * (x * 0 + 1)
+    return x.at[(0,) * x.ndim].set(POISON)
+
+
+def maybe_poison(site: str, value):
+    """Plant POISON in the first element of every array leaf of
+    ``value`` (tuple/list trees supported) when a ``poison`` fault
+    matches; otherwise return ``value`` untouched."""
+    if not _active:
+        return value
+    if should_fire("poison", site) is None:
+        return value
+    if isinstance(value, (tuple, list)):
+        return type(value)(_poison_leaf(v) for v in value)
+    return _poison_leaf(value)
+
+
+def hash_bits_override(site: str, default: Optional[int]) -> Optional[int]:
+    """``hash_overflow`` fault: return a tiny table size (default 2
+    bits = 4 slots) so the bounded-probe table must overflow and the
+    in-graph sort fallback must carry the round."""
+    if not _active:
+        return default
+    f = should_fire("hash_overflow", site)
+    if f is None:
+        return default
+    return int(f.params.get("bits", 2))
+
+
+def capacity_override(site: str, default) -> Any:
+    """``capacity_overflow`` fault: return a tiny capacity budget
+    (default 1 -> the 128-slot pow2 floor) so the fixed-capacity
+    buffers' overflow latch must fire and the ladder must descend."""
+    if not _active:
+        return default
+    f = should_fire("capacity_overflow", site)
+    if f is None:
+        return default
+    return int(f.params.get("budget", 1))
+
+
+def worker_env(env: dict, *, device: int = 0,
+               site: str = "distributed.worker") -> dict:
+    """``device_loss`` fault: mark a subprocess device worker for death
+    on this launch attempt via the env var its preamble checks —
+    ``mode="exit"`` (default) dies immediately with a nonzero code,
+    ``mode="hang"`` sleeps past the per-attempt timeout. A ``device``
+    param restricts the fault to one device index."""
+    if not _active:
+        return env
+    for f in _active:
+        if f.kind != "device_loss":
+            continue
+        if f.site is not None and f.site not in site:
+            continue
+        if "device" in f.params and int(f.params["device"]) != device:
+            continue
+        if f.times is not None and f.fired >= f.times:
+            continue
+        f.fired += 1
+        f.hits.append(site)
+        env = dict(env)
+        env["REPRO_FAULT_DEVICE_LOSS"] = str(f.params.get("mode", "exit"))
+        return env
+    return env

@@ -4,8 +4,6 @@ These run in a subprocess so the 8-device XLA flag doesn't leak into
 the rest of the suite (smoke tests must see 1 device)."""
 import json
 import os
-import subprocess
-import sys
 
 import jax
 import pytest
@@ -22,18 +20,12 @@ requires_axis_type = pytest.mark.skipif(
 
 
 def run_sub(code: str, devices: int = 8) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    out = subprocess.run(
-        [sys.executable, "-c", code],
-        env=env,
-        capture_output=True,
-        text=True,
-        timeout=540,
-    )
-    assert out.returncode == 0, out.stderr[-4000:]
-    return out.stdout
+    """Dispatch a payload through the resilience layer's per-device
+    worker launcher: bounded retry + per-attempt timeout, DeviceLost on
+    exhaustion (carrying the stderr tail the old assert used to show)."""
+    from repro.core.distributed import launch_device_worker
+
+    return launch_device_worker(code, devices=devices, retries=1)
 
 
 @pytest.mark.slow

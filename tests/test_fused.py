@@ -301,11 +301,8 @@ def test_distributed_fused_subprocess_multidev():
     shared fused tile loop: 4 forced host devices, fused vs slice
     engines bitwise-equal and oracle-exact (plain Mesh — runs on
     container jax without AxisType)."""
-    import os
-    import subprocess
-    import sys
+    from repro.core.distributed import launch_device_worker
 
-    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     code = """
 import numpy as np, jax
 import jax.numpy as jnp
@@ -331,12 +328,5 @@ assert np.array_equal(ga[rg.rank_of_u], pu)
 assert np.array_equal(ga[rg.rank_of_v], pv)
 print("DIST_FUSED_OK")
 """
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
-    env["PYTHONPATH"] = os.path.join(root, "src")
-    out = subprocess.run(
-        [sys.executable, "-c", code], env=env, capture_output=True,
-        text=True, timeout=540,
-    )
-    assert out.returncode == 0, out.stderr[-4000:]
-    assert "DIST_FUSED_OK" in out.stdout
+    out = launch_device_worker(code, devices=4, retries=1)
+    assert "DIST_FUSED_OK" in out
