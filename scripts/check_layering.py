@@ -1,0 +1,180 @@
+#!/usr/bin/env python
+"""Static import-layering check for the plan/execute split.
+
+The pipeline architecture (docs/ARCHITECTURE.md) is only real if the
+import graph enforces it, so CI runs this AST-level checker over
+``src/repro``. Three rules:
+
+R1  Kernel dispatch boundary: outside ``repro.kernels``, the only
+    importable kernel module is ``repro.kernels.ops`` (or the package
+    itself for its re-exports). Concrete kernel modules
+    (``wedge_fused``, ``bucket_update``, ...) are reachable solely
+    through the ``ops`` dispatch layer, which owns the
+    use_pallas/interpret contract and the fault hooks.
+
+R2  ``repro.core`` never imports ``repro.launch``: the algorithm layer
+    must stay runnable without the launch substrate (mesh helpers are
+    consumed the other way around, by tests and benchmarks).
+
+R3  The frontends ``repro.core.count`` and ``repro.core.peel`` bind
+    only PUBLIC names from ``repro.core.pipeline`` — no ``_private``
+    imports, no ``pipeline._private`` attribute access. The tile-loop
+    executor's internals belong to the pipeline; frontends go through
+    its documented plan/execute surface.
+
+Stdlib-only (ast + pathlib); exits nonzero listing every violation.
+Usage: ``python scripts/check_layering.py [SRC_ROOT]`` where SRC_ROOT
+contains the ``repro`` package (default: ``src`` next to this script's
+parent).
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+from typing import List, Tuple
+
+KERNEL_PKG = "repro.kernels"
+ALLOWED_KERNEL_MODULES = {KERNEL_PKG, KERNEL_PKG + ".ops"}
+LAUNCH_PKG = "repro.launch"
+PIPELINE_MOD = "repro.core.pipeline"
+FRONTENDS = {"repro.core.count", "repro.core.peel"}
+
+
+def _module_name(py: Path, src_root: Path) -> str:
+    rel = py.relative_to(src_root).with_suffix("")
+    parts = list(rel.parts)
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def _resolve_from(node: ast.ImportFrom, mod: str, is_pkg: bool) -> str:
+    """Absolute dotted module target of a (possibly relative) import."""
+    if node.level == 0:
+        return node.module or ""
+    parts = mod.split(".")
+    # level=1 strips nothing for a package __init__, the basename for a
+    # plain module; each further level strips one more package
+    drop = node.level - 1 if is_pkg else node.level
+    base = parts[: len(parts) - drop] if drop else parts
+    if node.module:
+        base = base + node.module.split(".")
+    return ".".join(base)
+
+
+def _iter_imports(tree: ast.AST, mod: str, is_pkg: bool):
+    """Yield (lineno, target_module, imported_names) pairs."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                yield node.lineno, a.name, []
+        elif isinstance(node, ast.ImportFrom):
+            target = _resolve_from(node, mod, is_pkg)
+            yield node.lineno, target, [a.name for a in node.names]
+
+
+def _pipeline_aliases(tree: ast.AST, mod: str, is_pkg: bool) -> List[str]:
+    """Local names bound to the pipeline *module* object."""
+    aliases = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == PIPELINE_MOD:
+                    aliases.append(a.asname or a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom):
+            target = _resolve_from(node, mod, is_pkg)
+            for a in node.names:
+                if f"{target}.{a.name}" == PIPELINE_MOD or (
+                    target == PIPELINE_MOD and a.name == "*"
+                ):
+                    aliases.append(a.asname or a.name)
+    return aliases
+
+
+def _kernel_submodules(src_root: Path) -> set:
+    pkg = src_root / "repro" / "kernels"
+    if not pkg.is_dir():
+        return set()
+    return {p.stem for p in pkg.glob("*.py") if p.stem != "__init__"}
+
+
+def collect_violations(src_root: Path) -> List[str]:
+    src_root = Path(src_root)
+    kernel_subs = _kernel_submodules(src_root)
+    out: List[Tuple[str, int, str]] = []
+    for py in sorted((src_root / "repro").rglob("*.py")):
+        mod = _module_name(py, src_root)
+        is_pkg = py.name == "__init__.py"
+        tree = ast.parse(py.read_text(), filename=str(py))
+        in_kernels = mod == KERNEL_PKG or mod.startswith(KERNEL_PKG + ".")
+        in_core = mod == "repro.core" or mod.startswith("repro.core.")
+
+        for lineno, target, names in _iter_imports(tree, mod, is_pkg):
+            # R1: only ops crosses the kernel package boundary
+            if not in_kernels and (
+                target == KERNEL_PKG or target.startswith(KERNEL_PKG + ".")
+            ):
+                if target not in ALLOWED_KERNEL_MODULES:
+                    out.append((mod, lineno, (
+                        f"imports {target}: concrete kernels are reachable "
+                        f"only through {KERNEL_PKG}.ops (R1)")))
+                elif target == KERNEL_PKG:
+                    for n in names:
+                        if n in kernel_subs and n != "ops":
+                            out.append((mod, lineno, (
+                                f"imports {KERNEL_PKG}.{n}: concrete kernels "
+                                f"are reachable only through "
+                                f"{KERNEL_PKG}.ops (R1)")))
+            # R2: core never imports launch
+            if in_core and (
+                target == LAUNCH_PKG
+                or target.startswith(LAUNCH_PKG + ".")
+                or (target == "repro" and "launch" in names)
+            ):
+                out.append((mod, lineno,
+                            f"imports {LAUNCH_PKG}: repro.core must not "
+                            "depend on the launch layer (R2)"))
+            # R3a: frontends import only public pipeline names
+            if mod in FRONTENDS and target == PIPELINE_MOD:
+                for n in names:
+                    if n.startswith("_"):
+                        out.append((mod, lineno, (
+                            f"imports private pipeline name {n!r}: frontends "
+                            "use only the public plan/execute surface (R3)")))
+
+        # R3b: no pipeline._private attribute access in the frontends
+        if mod in FRONTENDS:
+            aliases = set(_pipeline_aliases(tree, mod, is_pkg))
+            for node in ast.walk(tree):
+                if (isinstance(node, ast.Attribute)
+                        and isinstance(node.value, ast.Name)
+                        and node.value.id in aliases
+                        and node.attr.startswith("_")):
+                    out.append((mod, node.lineno, (
+                        f"references {node.value.id}.{node.attr}: frontends "
+                        "use only the public plan/execute surface (R3)")))
+    return [f"{m}:{ln}: {msg}" for m, ln, msg in sorted(out)]
+
+
+def main(argv: List[str]) -> int:
+    default = Path(__file__).resolve().parent.parent / "src"
+    src_root = Path(argv[1]) if len(argv) > 1 else default
+    if not (src_root / "repro").is_dir():
+        print(f"check_layering: no repro package under {src_root}",
+              file=sys.stderr)
+        return 2
+    violations = collect_violations(src_root)
+    for v in violations:
+        print(f"LAYERING {v}")
+    if violations:
+        print(f"check_layering: {len(violations)} violation(s)",
+              file=sys.stderr)
+        return 1
+    print("check_layering: import graph clean (R1 kernel-dispatch, "
+          "R2 core!->launch, R3 pipeline privacy)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))

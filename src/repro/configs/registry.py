@@ -26,7 +26,14 @@ def get_config(arch_id: str) -> ArchConfig:
     mod = _MODULES.get(arch_id) or _MODULES.get(arch_id.replace("_", "-"))
     if mod is None:
         raise KeyError(f"unknown arch {arch_id!r}; options: {sorted(_MODULES)}")
-    module = importlib.import_module(f"repro.configs.{mod}")
+    try:
+        module = importlib.import_module(f"repro.configs.{mod}")
+    except ModuleNotFoundError as e:
+        raise KeyError(
+            f"arch {arch_id!r} is quarantined LM-seed scaffolding: its "
+            f"config module now lives in contrib/configs/{mod}.py and is "
+            "not importable from the installed package (see contrib/README.md)"
+        ) from e
     return module.CONFIG
 
 

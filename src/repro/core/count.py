@@ -8,6 +8,16 @@ Given the group multiplicity ``d`` of each endpoint pair (x1, x2):
 Counts are accumulated over *rank-space* vertex ids and undirected edge
 ids, then mapped back to original (U, V) ids by the public API.
 
+This module is the counting *frontend* of the plan -> execute -> report
+pipeline (``core/pipeline.py``): it validates knobs, builds a
+:class:`~repro.core.pipeline.WedgePlan` for the tiled engines, hands it
+to the shared executors, and interprets the rank-space results back
+into a :class:`CountResult`. The tile loop, the aggregation machinery
+(including the in-graph hash-overflow sort fallback), the Lemma 4.2
+accumulators, and the Pallas tile-kernel dispatch all live in the
+pipeline — peeling streams its frontier subtraction through the same
+code.
+
 Performance engine
 ------------------
 ``engine="xla"`` (default) keeps every step in pure jnp. ``engine=
@@ -18,7 +28,7 @@ kernels in ``repro.kernels``:
     matmul; see ``aggregate._histogram``),
   - the d -> (d - 1, C(d, 2)) transform -> ``butterfly_combine_pallas``
     (64-bit C(d, 2) as two int32 limbs, recombined into the count
-    dtype by ``_combine_limbs`` — exact for the whole int32
+    dtype by ``pipeline.combine_limbs`` — exact for the whole int32
     multiplicity range, no fallback path).
 
 Interpret mode is chosen automatically per backend by
@@ -39,10 +49,10 @@ per-tile aggregation exact and the per-tile counts additive). Each
 tile is generated (the ``wedges_at`` binary-search recovery),
 aggregated, combined, accumulated, and DISCARDED inside one program:
 
-  - ``"fused"`` — pure-XLA flavor: a jitted ``fori_loop`` whose body is
-    ``_fused_tile_step`` (tile-local sort/hash/histogram aggregation,
-    same in-graph hash-overflow sort fallback). CPU/GPU get the O(tile)
-    memory win with no interpret-mode overhead.
+  - ``"fused"`` — pure-XLA flavor: the jitted
+    ``pipeline.run_count_tiles`` fori_loop (tile-local sort/hash/
+    histogram aggregation, same in-graph hash-overflow sort fallback).
+    CPU/GPU get the O(tile) memory win with no interpret-mode overhead.
   - ``"fused_pallas"`` — the ``kernels.wedge_fused`` Pallas kernel:
     per grid tile, in-VMEM reconstruction + all-pairs match
     aggregation + in-register combine + one-hot partial scatters.
@@ -50,6 +60,12 @@ aggregated, combined, accumulated, and DISCARDED inside one program:
 Both are bitwise-identical to ``engine="xla"`` wherever counts fit the
 dtype; peak temp memory is O(tile) instead of O(W) (asserted by the
 memory-analysis regression test in tests/test_fused.py).
+
+``aggregation="auto"`` (fused engine) resolves the sort-vs-hash
+strategy *per tile* at plan time from the tile's wedge density
+(``pipeline.plan_count``); both strategies are exact, so the choice is
+bitwise-invisible. Rungs without a tile plan (the ladder's xla/pallas
+descent) resolve ``"auto"`` to ``"sort"``.
 
 ``mode="all"`` computes global + per-vertex + per-edge counts from ONE
 wedge materialization + ONE aggregation (previously three full engine
@@ -66,11 +82,6 @@ auto). Streaming uses a ``fori_loop`` of fixed-size vertex-aligned
 chunks, each re-aggregated locally — peak wedge-buffer size is
 O(chunk_cap) instead of O(W).
 
-The hash strategy's bounded-probe overflow no longer round-trips to the
-host: the fallback decision is folded into the jitted program with
-``lax.cond`` (sort re-aggregation of the *already materialized* wedges
-runs only when the table actually overflows).
-
 Overflow note: butterfly counts on large graphs exceed int32; enable
 x64 (``jax.config.update("jax_enable_x64", True)``) and pass
 ``count_dtype=jnp.int64`` — the benchmarks do this.
@@ -85,26 +96,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops as _kops
-from ..kernels.wedge_fused import MAX_TILE_CAP as _FUSED_MAX_TILE
-from ..kernels.wedge_fused import TC as _FUSED_TC
 from ..testing import faults as _faults
+from . import pipeline as _pipeline
 from . import resilience as _res
-from .aggregate import Groups, aggregate_dense, aggregate_hash, aggregate_sort
 from .graph import BipartiteGraph, RankedGraph, preprocess
 from .ranking import make_order
 from .wedges import (
     DeviceGraph,
-    Wedges,
     auto_chunk_budget,
-    shrink_budget,
     device_graph,
     gather_wedges,
     greedy_vertex_blocks,
     host_wedge_counts,
-    plan_wedge_chunks,
+    shrink_budget,
     slot_wedge_counts,
-    wedge_offsets,
-    wedges_at,
 )
 
 __all__ = [
@@ -117,7 +122,7 @@ __all__ = [
 ]
 
 ENGINES = ("xla", "pallas", "fused", "fused_pallas")
-MODES = ("global", "vertex", "edge", "all")
+MODES = _pipeline.MODES
 
 # Degradation ladder per requested engine (resilience.ResiliencePolicy
 # descends left to right; every rung is bitwise-identical where it
@@ -128,6 +133,22 @@ COUNT_LADDERS = {
     "pallas": ("pallas", "xla"),
     "xla": ("xla",),
 }
+
+# Pre-pipeline private names, re-bound for compatibility: tests,
+# benchmarks, and notebooks grew against ``count._fused_tile_apply``
+# and friends before the executor moved into the pipeline. These are
+# the pipeline's *public* names (the layering check forbids reaching
+# into its privates) — new code should import from ``pipeline``.
+_choose2 = _pipeline.choose2
+_combine_limbs = _pipeline.combine_limbs
+_group_choose2 = _pipeline.group_choose2
+_wedge_dm1 = _pipeline.wedge_dm1
+_accumulate = _pipeline.accumulate_counts
+_fused_tile_apply = _pipeline.tile_apply
+_aggregate_and_accumulate = _pipeline.aggregate_and_accumulate
+_zero_counts = _pipeline.zero_counts
+_fused_tile_step = _pipeline.count_tile_step
+_count_stream_device = _pipeline.run_count_tiles
 
 
 def default_count_dtype():
@@ -155,184 +176,6 @@ class CountResult(NamedTuple):
     report: Optional["_res.ExecutionReport"] = None  # resilience audit
 
 
-def _choose2(d: jax.Array, dtype) -> jax.Array:
-    dd = d.astype(dtype)
-    return dd * (dd - 1) // 2
-
-
-def _combine_limbs(lo: jax.Array, hi: jax.Array, dtype) -> jax.Array:
-    """Recombine the combine kernel's 64-bit C(d, 2) limbs into
-    ``dtype``. With a 64-bit count dtype this is exact for the full
-    int32 multiplicity range; sub-64-bit dtypes keep the low word's
-    bit pattern (values that need more than 32 bits need a 64-bit
-    ``count_dtype``, same as every other engine)."""
-    if jnp.dtype(dtype).itemsize >= 8:
-        return lo.astype(jnp.uint32).astype(dtype) + (hi.astype(dtype) << 32)
-    return lo.astype(dtype)
-
-
-def _group_choose2(groups: Groups, dtype, engine: str) -> jax.Array:
-    """Per-group C(d, 2) endpoint contributions, in ``dtype``."""
-    if engine == "pallas":
-        # The widened kernel emits C(d, 2) as two int32 limbs — exact
-        # for the whole int32 multiplicity range, so no in-graph
-        # exact-path fallback is needed any more (PR 1 follow-up).
-        _, lo, hi, _ = _kops.butterfly_combine(
-            groups.d,
-            jnp.ones_like(groups.d),
-            groups.valid.astype(jnp.int32),
-            use_pallas=True,
-        )
-        return _combine_limbs(lo, hi, dtype)
-    return jnp.where(groups.valid, _choose2(groups.d, dtype), 0)
-
-
-def _wedge_dm1(w: Wedges, groups: Groups, dtype, engine: str) -> jax.Array:
-    """Per-wedge d - 1 center/edge contributions, in ``dtype``."""
-    d = groups.d_per_wedge
-    if engine == "pallas":
-        dm1, _, _, _ = _kops.butterfly_combine(
-            d, jnp.zeros_like(d), w.valid.astype(jnp.int32), use_pallas=True
-        )
-        return dm1.astype(dtype)
-    return jnp.where(w.valid & (d > 0), (d - 1).astype(dtype), 0)
-
-
-def _accumulate(
-    dg: DeviceGraph,
-    w: Wedges,
-    groups: Groups,
-    mode: str,
-    dtype,
-    engine: str = "xla",
-):
-    """Turn group multiplicities into butterfly counts (Lemma 4.2).
-
-    ``mode="all"`` returns the (total, per-vertex, per-edge) triple from
-    the same shared (dm1, C(d, 2)) intermediates — the single-pass path.
-    """
-    if mode not in MODES:
-        raise ValueError(f"mode must be {'|'.join(MODES)}, got {mode}")
-    dm1 = (
-        _wedge_dm1(w, groups, dtype, engine)
-        if mode in ("vertex", "edge", "all")
-        else None
-    )
-    g_add = (
-        _group_choose2(groups, dtype, engine)
-        if mode in ("global", "vertex", "all")
-        else None
-    )
-
-    def _global():
-        # Every group of d wedges = C(d,2) butterflies, each counted once
-        # thanks to the rank filter.
-        return jnp.sum(g_add).astype(dtype)
-
-    def _vertex():
-        bv = jnp.zeros((dg.n_pad,), dtype)
-        bv = bv.at[groups.x1].add(g_add)
-        bv = bv.at[groups.x2].add(g_add)
-        # centers: w.y holds an out-of-range sentinel for invalid wedges;
-        # JAX scatter drops OOB updates.
-        bv = bv.at[w.y].add(dm1)
-        return bv
-
-    def _edge():
-        be = jnp.zeros((dg.m,), dtype)
-        be = be.at[dg.undirected_id[w.center_slot]].add(dm1)
-        be = be.at[dg.undirected_id[w.second_slot]].add(dm1)
-        return be
-
-    if mode == "global":
-        return _global()
-    if mode == "vertex":
-        return _vertex()
-    if mode == "edge":
-        return _edge()
-    # mode == "all": one fused scatter-add over a combined
-    # [vertex | edge] buffer — the five single-mode scatters collapse to
-    # one device pass, which is where the single-pass speedup on top of
-    # the shared gather+aggregation comes from. Integer adds commute, so
-    # the split views are bitwise-identical to the single-mode results.
-    nm = dg.n_pad + dg.m
-    oob = jnp.int32(nm)  # JAX scatter drops out-of-bounds updates
-    idx = jnp.concatenate([
-        jnp.where(w.valid, w.y, oob),
-        jnp.where(w.valid, dg.n_pad + dg.undirected_id[w.center_slot], oob),
-        jnp.where(w.valid, dg.n_pad + dg.undirected_id[w.second_slot], oob),
-        groups.x1,
-        groups.x2,
-    ])
-    upd = jnp.concatenate([dm1, dm1, dm1, g_add, g_add])
-    buf = jnp.zeros((nm,), dtype).at[idx].add(upd)
-    return jnp.sum(g_add).astype(dtype), buf[: dg.n_pad], buf[dg.n_pad :]
-
-
-def _fused_tile_apply(
-    w: Wedges,
-    aggregation: str,
-    consume,
-    engine: str = "xla",
-    hash_bits: Optional[int] = None,
-    dense_n: Optional[int] = None,
-):
-    """Aggregate ONE generated wedge tile and hand it to ``consume``.
-
-    ``consume(wedges, groups)`` turns the tile's endpoint-pair groups
-    into whatever the caller accumulates — butterfly counts here, the
-    C(d, 2) frontier *subtraction* in ``peel``'s fused tile loop (the
-    machinery is shared so both sides keep the identical aggregation
-    semantics). For ``aggregation="hash"`` the overflow fallback is
-    in-graph: a ``lax.cond`` re-aggregates the *same* materialized tile
-    with the sort strategy only when the bounded-probe table failed,
-    instead of a host-side ``bool(ok)`` sync + pipeline re-run.
-    ``dense_n`` sizes the ``histogram`` strategy's key space (counting
-    passes ``dg.n_pad``; peeling does not use histogram).
-
-    Returns ``(consume(...), ok)``.
-    """
-    if aggregation == "sort":
-        groups, ws = aggregate_sort(w)
-        return consume(ws, groups), jnp.array(True)
-    if aggregation == "histogram":
-        groups = aggregate_dense(w, dense_n, engine=engine)
-        return consume(w, groups), jnp.array(True)
-    if aggregation == "hash":
-        groups = aggregate_hash(w, table_bits=hash_bits, engine=engine)
-
-        def _hash_path(_):
-            return consume(w, groups)
-
-        def _sort_path(_):
-            g2, ws = aggregate_sort(w)
-            return consume(ws, g2)
-
-        out = jax.lax.cond(groups.ok, _hash_path, _sort_path, None)
-        return out, groups.ok
-    raise ValueError(f"bad aggregation {aggregation}")
-
-
-def _aggregate_and_accumulate(
-    dg: DeviceGraph,
-    w: Wedges,
-    aggregation: str,
-    mode: str,
-    dtype,
-    engine: str,
-    hash_bits: Optional[int] = None,
-):
-    """Aggregate one (chunk of the) wedge stream and accumulate counts."""
-    return _fused_tile_apply(
-        w,
-        aggregation,
-        lambda wv, gv: _accumulate(dg, wv, gv, mode, dtype, engine),
-        engine,
-        hash_bits,
-        dense_n=dg.n_pad,
-    )
-
-
 @functools.partial(
     jax.jit,
     static_argnames=(
@@ -351,107 +194,13 @@ def _count_device(
     engine: str = "xla",
     hash_bits: Optional[int] = None,
 ):
+    """Materializing xla/pallas path: gather the whole wedge array
+    (W <= budget) and aggregate it in one shot."""
     cnt = slot_wedge_counts(dg, direction)
     w = gather_wedges(dg, cnt, w_cap, direction)
-    return _aggregate_and_accumulate(
+    return _pipeline.aggregate_and_accumulate(
         dg, w, aggregation, mode, dtype, engine, hash_bits
     )
-
-
-def _zero_counts(dg: DeviceGraph, mode: str, dtype):
-    by_mode = {
-        "global": lambda: jnp.zeros((), dtype),
-        "vertex": lambda: jnp.zeros((dg.n_pad,), dtype),
-        "edge": lambda: jnp.zeros((dg.m,), dtype),
-    }
-    if mode == "all":
-        return tuple(by_mode[m]() for m in ("global", "vertex", "edge"))
-    return by_mode[mode]()
-
-
-def _fused_tile_step(
-    dg: DeviceGraph,
-    cnt: Optional[jax.Array],
-    w_off: jax.Array,
-    ws: jax.Array,
-    we: jax.Array,
-    *,
-    chunk_cap: int,
-    aggregation: str,
-    mode: str,
-    direction: str,
-    dtype,
-    engine: str = "xla",
-    hash_bits: Optional[int] = None,
-):
-    """Generate -> aggregate -> accumulate ONE vertex-aligned wedge
-    tile ``[ws, we)`` and discard it — the fused counting step shared
-    by the streaming engine here and the distributed per-device loop
-    (``distributed._count``). The aggregation core (including the
-    in-graph hash-overflow sort fallback) is ``_fused_tile_apply``,
-    which the peeling engines' fused frontier subtract also streams
-    through (``peel``). The tile-alignment invariant of
-    ``plan_wedge_chunks`` guarantees no endpoint-pair group spans the
-    tile, so the per-tile counts add exactly."""
-    wid = ws + jnp.arange(chunk_cap, dtype=jnp.int32)
-    valid = wid < we
-    w = wedges_at(dg, cnt, w_off, wid, valid, direction)
-    return _aggregate_and_accumulate(
-        dg, w, aggregation, mode, dtype, engine, hash_bits
-    )
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "chunk_cap", "aggregation", "mode", "direction", "dtype", "engine",
-        "hash_bits",
-    ),
-)
-def _count_stream_device(
-    dg: DeviceGraph,
-    bounds: jax.Array,  # (n_blocks + 1,) vertex boundaries
-    *,
-    chunk_cap: int,
-    aggregation: str,
-    mode: str,
-    direction: str,
-    dtype,
-    engine: str = "xla",
-    hash_bits: Optional[int] = None,
-):
-    """Fused/chunked wedge streaming: fori_loop over vertex-aligned
-    tiles of the flat wedge space, each re-materialized via
-    ``wedges_at`` into a fixed (chunk_cap,) buffer, aggregated locally,
-    accumulated, and discarded — all inside one jitted program. Peak
-    wedge memory is O(chunk_cap) instead of O(W); per-tile counts add
-    exactly because groups never span an iterating-vertex boundary
-    (see ``plan_wedge_chunks``). This is both the ``max_chunk``
-    streaming path and the ``engine="fused"`` hot loop (which always
-    routes through it, regardless of the wedge total)."""
-    cnt = slot_wedge_counts(dg, direction)
-    w_off = wedge_offsets(cnt)
-    n_blocks = bounds.shape[0] - 1
-    acc0 = _zero_counts(dg, mode, dtype)
-
-    def body(i, carry):
-        acc, ok = carry
-        v0 = bounds[i]
-        v1 = bounds[i + 1]
-        ws = w_off[dg.offsets[v0]]
-        we = w_off[dg.offsets[v1]]
-        out, ok_i = _fused_tile_step(
-            dg, cnt, w_off, ws, we,
-            chunk_cap=chunk_cap, aggregation=aggregation, mode=mode,
-            direction=direction, dtype=dtype, engine=engine,
-            hash_bits=hash_bits,
-        )
-        acc = jax.tree_util.tree_map(
-            lambda a, o: (a + o).astype(a.dtype), acc, out
-        )
-        return acc, ok & ok_i
-
-    return jax.lax.fori_loop(0, n_blocks, body, (acc0, jnp.array(True)))
 
 
 def _batch_bounds(
@@ -562,10 +311,10 @@ def _count_batch_device(
             acc = acc.at[dg.undirected_id[e]].add(dm1)
             acc = acc.at[dg.undirected_id[pos]].add(dm1)
             return acc
-        # mode == "all": same fused-scatter shape as _accumulate — one
-        # combined [vertex | edge] buffer per block, integer adds
-        # commute so the split views are bitwise-identical to the
-        # three single-mode batch runs.
+        # mode == "all": same fused-scatter shape as
+        # pipeline.accumulate_counts — one combined [vertex | edge]
+        # buffer per block, integer adds commute so the split views are
+        # bitwise-identical to the three single-mode batch runs.
         tot, buf = acc
         g_add = jnp.where(rep, _choose2(d, dtype), 0)
         nm = n_pad + dg.m
@@ -601,66 +350,48 @@ def _resolve_chunk_budget(max_chunk) -> Optional[int]:
     return int(max_chunk)
 
 
-def _count_fused_pallas(
+def _plan_from_knobs(
     rg: RankedGraph,
-    dg: DeviceGraph,
-    bounds: np.ndarray,
-    chunk_cap: int,
+    *,
+    aggregation: str,
     mode: str,
     direction: str,
     dtype,
-    wv_slots: np.ndarray,
-):
-    """Dispatch the wedge_fused Pallas kernel: host-planned vertex-
-    aligned tile bounds in flat wedge-id space, one kernel launch.
-    Every kernel output — the global total and the per-vertex/per-edge
-    arrays — accumulates as two int32 limbs with carry, exact for
-    counts < 2^63; the limbs recombine into ``dtype`` here (a 32-bit
-    ``count_dtype`` keeps the low word, like every other engine)."""
-    tile_cap = max(
-        _FUSED_TC, ((chunk_cap + _FUSED_TC - 1) // _FUSED_TC) * _FUSED_TC
-    )
-    max_tile = _faults.capacity_override(
-        "count.fused_pallas", _FUSED_MAX_TILE
-    )
-    if tile_cap > max_tile:
-        # typed (still a ValueError subclass): the resilience ladder in
-        # count_butterflies catches this rung and descends to 'fused'
-        raise _res.CapacityOverflow(
-            f"engine='fused_pallas' tile_cap {tile_cap} exceeds the "
-            f"kernel's exactness bound {max_tile} (a single "
-            "vertex owns more wedges than the kernel tile can hold); "
-            "use engine='fused'"
-        )
-    w_off = np.concatenate([[0], np.cumsum(wv_slots)]).astype(np.int32)
-    off = rg.offsets.astype(np.int64)
-    tb = np.stack(
-        [w_off[off[bounds[:-1]]], w_off[off[bounds[1:]]]], axis=1
-    ).astype(np.int32)
-    tot, vert, edge = _kops.fused_count_tiles(
-        jnp.asarray(tb),
-        dg.offsets,
-        dg.neighbors,
-        dg.edge_src,
-        dg.undirected_id,
-        jnp.asarray(w_off),
-        tile_cap=tile_cap,
-        n_pad=dg.n_pad,
-        m=dg.m,
-        direction=direction,
+    engine: str,
+    max_chunk,
+    hash_bits: Optional[int],
+    wv_slots: Optional[np.ndarray] = None,
+) -> Optional["_pipeline.WedgePlan"]:
+    """Resolve this module's knob surface into a pipeline counting plan
+    — the one place the budget/clamp rules live. Returns None for knob
+    combinations that never tile (the materializing xla/pallas path
+    under budget, and the self-contained batch aggregations)."""
+    if aggregation in ("batch", "batch_wa"):
+        return None  # batch fuses its own accumulation: no tile plan
+    budget = _resolve_chunk_budget(max_chunk)
+    if wv_slots is None:
+        wv_slots = host_wedge_counts(rg, direction)
+    if engine in ("fused", "fused_pallas"):
+        if budget is None:
+            budget = auto_chunk_budget()
+        if engine == "fused_pallas":
+            # the kernel's in-VMEM aggregation is exact only up to its
+            # MAX_TILE_CAP tile — clamp the auto/default budget to it
+            budget = min(budget, _kops.MAX_TILE_CAP)
+    else:
+        if budget is None or int(wv_slots.sum()) <= budget:
+            return None
+    return _pipeline.plan_count(
+        rg,
         mode=mode,
-        use_pallas=True,
+        direction=direction,
+        aggregation=aggregation,
+        budget=budget,
+        dtype=jnp.dtype(dtype).name,
+        hash_bits=hash_bits,
+        engine=engine,
+        wv_slots=wv_slots,
     )
-    total = _combine_limbs(tot[0], tot[1], dtype)
-    vert = _combine_limbs(vert[..., 0], vert[..., 1], dtype)
-    edge = _combine_limbs(edge[..., 0], edge[..., 1], dtype)
-    if mode == "global":
-        return total
-    if mode == "vertex":
-        return vert
-    if mode == "edge":
-        return edge
-    return total, vert, edge
 
 
 def count_from_ranked(
@@ -683,13 +414,14 @@ def count_from_ranked(
     ``engine="pallas"`` routes the histogram and combine steps through
     the Pallas kernels (interpret mode off-TPU). ``engine="fused"`` /
     ``engine="fused_pallas"`` never materialize the global wedge
-    array: the flat wedge space streams through vertex-aligned tiles
-    that are generated, aggregated, accumulated, and discarded inside
-    one program — peak temp memory O(tile), not O(W). ``max_chunk``
-    bounds the tile/stream budget: an int, ``"auto"`` (derived from
-    device memory stats), or None (materialize for xla/pallas; auto
-    for the fused engines). ``hash_bits`` overrides the hash-table
-    size (testing hook for the in-graph overflow fallback).
+    array: a :func:`~repro.core.pipeline.plan_count` plan cuts the
+    flat wedge space into vertex-aligned tiles that are generated,
+    aggregated, accumulated, and discarded inside one program — peak
+    temp memory O(tile), not O(W). ``max_chunk`` bounds the
+    tile/stream budget: an int, ``"auto"`` (derived from device memory
+    stats), or None (materialize for xla/pallas; auto for the fused
+    engines). ``hash_bits`` overrides the hash-table size (testing
+    hook for the in-graph overflow fallback).
     """
     if engine not in ENGINES:
         raise ValueError(f"engine must be {'|'.join(ENGINES)}, got {engine}")
@@ -701,6 +433,11 @@ def count_from_ranked(
     hash_bits = _faults.hash_bits_override(f"count.{engine}", hash_bits)
     dtype = count_dtype or jnp.int32
     direction = "high" if cache_opt else "low"
+    if aggregation == "auto" and engine not in ("fused", "fused_pallas"):
+        # per-tile strategy choice needs a tile plan; the materializing
+        # rungs (including the resilience ladder's xla descent) resolve
+        # to sort — bitwise-identical, both strategies are exact
+        aggregation = "sort"
     dg = device_graph(rg)
     wv_slots = host_wedge_counts(rg, direction)
     if aggregation in ("batch", "batch_wa"):
@@ -728,50 +465,20 @@ def count_from_ranked(
             dtype=dtype,
         )
         return out
-    budget = _resolve_chunk_budget(max_chunk)
-    if engine in ("fused", "fused_pallas"):
-        if budget is None:
-            budget = auto_chunk_budget()
-        if engine == "fused_pallas":
-            # the kernel's in-VMEM aggregation is exact only up to its
-            # MAX_TILE_CAP tile — clamp the auto/default budget to it
-            budget = min(budget, _FUSED_MAX_TILE)
-        bounds, chunk_cap = plan_wedge_chunks(
-            rg, direction, budget, wv_slots=wv_slots
-        )
-        if engine == "fused_pallas":
-            return _count_fused_pallas(
-                rg, dg, bounds, chunk_cap, mode, direction, dtype, wv_slots
-            )
-        out, _ok = _count_stream_device(
-            dg,
-            jnp.asarray(bounds, jnp.int32),
-            chunk_cap=chunk_cap,
-            aggregation=aggregation,
-            mode=mode,
-            direction=direction,
-            dtype=dtype,
-            engine="xla",
-            hash_bits=hash_bits,
-        )
-        return out
+    plan = _plan_from_knobs(
+        rg,
+        aggregation=aggregation,
+        mode=mode,
+        direction=direction,
+        dtype=dtype,
+        engine=engine,
+        max_chunk=max_chunk,
+        hash_bits=hash_bits,
+        wv_slots=wv_slots,
+    )
+    if plan is not None:
+        return _pipeline.execute_count_plan(dg, plan, rg.offsets, wv_slots)
     w_total = int(wv_slots.sum())
-    if budget is not None and w_total > budget:
-        bounds, chunk_cap = plan_wedge_chunks(
-            rg, direction, budget, wv_slots=wv_slots
-        )
-        out, _ok = _count_stream_device(
-            dg,
-            jnp.asarray(bounds, jnp.int32),
-            chunk_cap=chunk_cap,
-            aggregation=aggregation,
-            mode=mode,
-            direction=direction,
-            dtype=dtype,
-            engine=engine,
-            hash_bits=hash_bits,
-        )
-        return out
     w_cap = max(128, ((w_total + 127) // 128) * 128)
     out, _ok = _count_device(
         dg,
@@ -841,20 +548,22 @@ def count_butterflies(
     max_chunk=None,
     resilience=None,
 ) -> CountResult:
-    """Public entry point: rank -> retrieve -> aggregate -> count.
+    """Public entry point: rank -> plan -> execute -> report.
 
     Execution runs under the resilience degradation ladder
-    (``COUNT_LADDERS``): the requested engine is tried first and a
-    capacity overflow (e.g. the fused_pallas kernel's tile bound), a
-    RESOURCE_EXHAUSTED (retried with a halved ``max_chunk`` budget
-    first), or a result-invariant violation descends to the next
-    bitwise-identical rung — ``fused_pallas -> fused -> xla``.
-    ``resilience`` accepts None/True (default policy), False (disable
-    validation/retries/report; rung descent — the engines' documented
-    semantics — still applies), or a
-    :class:`~repro.core.resilience.ResiliencePolicy`. The returned
-    :class:`CountResult` carries the
-    :class:`~repro.core.resilience.ExecutionReport` in ``.report``.
+    (``COUNT_LADDERS``) via :func:`~repro.core.pipeline.execute_ladder`:
+    the requested engine is tried first and a capacity overflow (e.g.
+    the fused_pallas kernel's tile bound), a RESOURCE_EXHAUSTED
+    (retried with a halved ``max_chunk`` budget first), or a
+    result-invariant violation descends to the next bitwise-identical
+    rung — ``fused_pallas -> fused -> xla``. ``resilience`` accepts
+    None/True (default policy), False (disable validation/retries/
+    report; rung descent — the engines' documented semantics — still
+    applies), or a :class:`~repro.core.resilience.ResiliencePolicy`.
+    The returned :class:`CountResult` carries the
+    :class:`~repro.core.resilience.ExecutionReport` in ``.report``,
+    whose ``.plan`` records the requested engine's tile plan summary
+    (tile count, per-tile strategy mix, capacity segments).
     Preprocessing is shared across rungs, so a fallback never repays
     the O(m log m) ranking. The worst-case accumulator preflight
     (:meth:`BipartiteGraph.accumulator_preflight`) raises
@@ -892,10 +601,29 @@ def count_butterflies(
 
         return _res.Rung(eng, run)
 
-    out, report = policy.execute(
+    # report-only planning pass for the requested engine: what the first
+    # rung will execute, recorded on the report before any rung runs
+    # (pure host numpy — a failed/degraded rung still reports its plan)
+    try:
+        plan = _plan_from_knobs(
+            rg,
+            aggregation=aggregation,
+            mode=mode,
+            direction="high" if cache_opt else "low",
+            dtype=(count_dtype or jnp.int32),
+            engine=engine,
+            max_chunk=max_chunk,
+            hash_bits=None,
+        )
+    except _res.ResilienceError:
+        plan = None
+
+    out, report = _pipeline.execute_ladder(
         "count",
+        policy,
         [_make_rung(e) for e in ladder],
         _count_validator(g, mode),
+        plan=plan,
     )
 
     def _scatter_vertex(bv: np.ndarray):

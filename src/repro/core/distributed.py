@@ -11,7 +11,7 @@ Mapping of the paper onto an SPMD mesh:
     count combine.
   - Each device consumes its wedge slice through the SAME fused tile
     loop as the single-device ``engine="fused"`` path
-    (``count._fused_tile_step``): vertex-aligned sub-tiles of the
+    (``pipeline.count_tile_step``): vertex-aligned sub-tiles of the
     device slice are generated (binary search over the replicated
     prefix array), aggregated locally (sort strategy), accumulated, and
     discarded — per-device peak wedge memory is O(tile), never
@@ -47,8 +47,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from ..testing import faults as _faults
+from . import pipeline as _pipeline  # shared hot path + partition seam
 from .aggregate import aggregate_sort
-from .count import _accumulate, _fused_tile_step, _zero_counts  # shared hot path
 from .graph import BipartiteGraph, RankedGraph, preprocess
 from .ranking import make_order
 from .resilience import DeviceLost
@@ -208,11 +208,13 @@ def plan_fused_partition(
 ):
     """Per-device vertex-aligned tile plan for the fused engine.
 
-    Each device's wedge-balanced vertex range (``plan_partition``
-    boundaries) is subdivided into tiles of at most ``max_chunk``
-    wedges (``"auto"`` -> ``wedges.auto_chunk_budget``), cut only at
-    vertex boundaries — the same invariant as the single-device
-    ``plan_wedge_chunks``, so per-tile aggregation stays exact.
+    The whole flat wedge space is tiled once by the pipeline planner
+    (``pipeline.plan_count`` — at most ``max_chunk`` wedges per tile,
+    ``"auto"`` -> ``wedges.auto_chunk_budget``, cut only at vertex
+    boundaries), then the tile list is split across devices greedily by
+    wedge load (``pipeline.plan_partition``). Both cuts respect the
+    tile-alignment invariant, so per-tile aggregation stays exact and
+    the per-device partials add bitwise.
 
     Returns ``(tiles (n_dev, max_tiles, 2) int32, tile_cap)``: flat
     wedge-id [start, end) per tile, rows padded with empty (0, 0)
@@ -221,26 +223,12 @@ def plan_fused_partition(
     budget = (
         auto_chunk_budget() if max_chunk in (None, "auto") else int(max_chunk)
     )
-    wv, voff = _vertex_loads(rg, direction)
-    starts = _device_vertex_starts(voff, rg.n_pad, n_dev)
-    per_dev_tiles = []
-    chunk_floor = 1
-    for d in range(n_dev):
-        vs, ve = int(starts[d]), int(starts[d + 1])
-        if ve <= vs:
-            per_dev_tiles.append(np.zeros((0, 2), np.int64))
-            continue
-        sub, chunk = greedy_vertex_blocks(wv[vs:ve], ve - vs, target=budget)
-        chunk_floor = max(chunk_floor, chunk)
-        lo = voff[vs + sub[:-1]]
-        hi = voff[vs + sub[1:]]
-        per_dev_tiles.append(np.stack([lo, hi], axis=1))
-    max_tiles = max(1, max(t.shape[0] for t in per_dev_tiles))
-    tiles = np.zeros((n_dev, max_tiles, 2), np.int64)
-    for d, t in enumerate(per_dev_tiles):
-        tiles[d, : t.shape[0]] = t
-    tile_cap = max(128, ((chunk_floor + 127) // 128) * 128)
-    return tiles.astype(np.int32), tile_cap
+    plan = _pipeline.plan_count(
+        rg, mode="global", direction=direction, aggregation="sort",
+        budget=budget, engine="fused",
+    )
+    parts = _pipeline.plan_partition(plan, n_dev)
+    return _pipeline.partition_tile_array(parts)
 
 
 def distributed_count_fn(
@@ -293,10 +281,10 @@ def distributed_count_fn(
     def _local_counts(dg, bounds, cnt, w_off):
         if engine == "fused":
             n_tiles = bounds.shape[1]
-            acc0 = _zero_counts(dg, mode, dtype)
+            acc0 = _pipeline.zero_counts(dg, mode, dtype)
 
             def body(i, acc):
-                out, _ok = _fused_tile_step(
+                out, _ok = _pipeline.count_tile_step(
                     dg, cnt, w_off, bounds[0, i, 0], bounds[0, i, 1],
                     chunk_cap=w_cap, aggregation="sort", mode=mode,
                     direction=direction, dtype=dtype, engine="xla",
@@ -312,7 +300,7 @@ def distributed_count_fn(
         valid = wid < end
         w = wedges_at(dg, cnt, w_off, wid, valid, direction)
         groups, w = aggregate_sort(w)
-        return _accumulate(dg, w, groups, mode, dtype)
+        return _pipeline.accumulate_counts(dg, w, groups, mode, dtype)
 
     def _count(dg, bounds, cnt, w_off):
         out = _local_counts(dg, bounds, cnt, w_off)

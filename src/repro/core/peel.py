@@ -162,16 +162,30 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops as _kops
-from ..kernels.bucket_update import (
-    NUM_BUCKETS,
-    bit_length,
-    bucket_upper_bound,
-    lowest_nonempty_bucket,
-)
 from ..testing import faults as _faults
 from . import resilience as _res
+from .count import count_butterflies, default_count_dtype
 from .graph import BipartiteGraph
-from .count import _fused_tile_apply, count_butterflies, default_count_dtype
+
+# The round-loop substrate and the fused tile machinery live in the
+# pipeline's execute layer (shared with counting); the pre-pipeline
+# private names are re-bound so the engine wrappers below — and the
+# tests/benchmarks that grew against them — keep reading naturally.
+from .pipeline import (
+    I32_MAX as _I32_MAX,
+    LoopState as _LoopState,
+    execute_ladder as _execute_ladder,
+    plan_peel as _plan_peel,
+    apply_decrements as _apply_decrements,
+    device_round_loop as _device_round_loop,
+    drive_segments as _drive_segments,
+    empty_hist as _empty_hist,
+    init_loop_state as _init_state,
+    masked_state as _masked_state,
+    prefix_offsets as _prefix,
+    stream_tiles as _stream_tiles,
+    tile_apply as _fused_tile_apply,
+)
 from .wedges import (
     Wedges,
     _lower_bound_ragged,
@@ -199,7 +213,6 @@ PEEL_SUBTRACTS = ("fused", "materialize")
 PEEL_DECREASE_KEYS = ("bucket", "scatter")
 PEEL_SCHEDULES = ("fixed", "adaptive")
 PEEL_MODES = ("exact", "range")
-_I32_MAX = int(np.iinfo(np.int32).max)
 
 # Default fused-subtract tile target. Unlike counting — which streams
 # the whole wedge space through its tiles ONCE and wants them as large
@@ -309,50 +322,6 @@ def _level2_totals(off: np.ndarray, nbr: np.ndarray, base: int,
     return w2
 
 
-def _empty_hist(want_hist: bool) -> jax.Array:
-    """Carried-occupancy placeholder: a real (NUM_BUCKETS,) histogram
-    slot when range mode consumes it, a zero-length array otherwise —
-    keeping the unused histogram OUT of the while_loop carry is what
-    lets XLA dead-code-eliminate the reference path's bit-length
-    scatter under ``peel_mode="exact"`` (loop state is always live)."""
-    return jnp.zeros((NUM_BUCKETS if want_hist else 0,), jnp.int32)
-
-
-def _masked_state(b: jax.Array, alive: jax.Array, want_hist: bool):
-    """Masked extract-min (+ occupancy when consumed) in the
-    ``bucket_min``/``bucket_update`` contracts — seeds the carried
-    state before round 0 and re-derives it on zero-frontier rounds."""
-    if want_hist:
-        return _kops.bucket_state(b, alive)
-    return _kops.bucket_min(b, alive, use_pallas=False), _empty_hist(False)
-
-
-def _apply_decrements(b, alive, tgt, dec, decrease_key, use_kernel,
-                      want_hist=False):
-    """Apply one aggregated update batch to the count array.
-
-    ``"scatter"``: the PR 2 one-scatter subtract (min placeholder —
-    the round loop runs its own ``bucket_min``). ``"bucket"``: the
-    Julienne-style batched decrease-key (``kernels.ops.bucket_update``)
-    — decrements, the next round's masked min, and (when ``want_hist``,
-    i.e. range mode) the geometric-bucket occupancy, all in one pass.
-    Returns ``(new_counts, min, hist)`` (hist zero-length unless
-    ``want_hist`` — see ``_empty_hist``).
-    """
-    if decrease_key == "bucket":
-        nb, mn, hist = _kops.bucket_update(
-            b, alive, tgt, dec, use_pallas=use_kernel
-        )
-        if not want_hist:
-            # discarded before it reaches the loop carry -> XLA DCEs
-            # the reference path's histogram under exact mode (measured:
-            # bucket ~= scatter wall time on CPU); the kernel path
-            # computes it in-register for free either way
-            hist = _empty_hist(False)
-        return nb.astype(b.dtype), mn, hist
-    return b.at[tgt].add(-dec), jnp.int32(_I32_MAX), _empty_hist(want_hist)
-
-
 def _subtract_tile(
     u1: jax.Array,
     u2: jax.Array,
@@ -459,210 +428,11 @@ def _host_subtract_frontier(
 
 
 # ---------------------------------------------------------------------------
-# Shared device round-loop substrate (tips and wings parameterize it)
+# Device round loops: the shared substrate (LoopState / stream_tiles /
+# device_round_loop / drive_segments) lives in core/pipeline.py and is
+# imported above under its pre-pipeline names; the engines below only
+# parameterize it with their expansion callables.
 # ---------------------------------------------------------------------------
-
-
-class _LoopState(NamedTuple):
-    """Carry of the jitted device round loops (both decompositions)."""
-
-    b: jax.Array  # counts (peeled side / per edge)
-    alive: jax.Array  # bool mask
-    out: jax.Array  # tip / wing numbers
-    kappa: jax.Array  # () int32 peel threshold
-    rounds: jax.Array  # () int32 — bucket rounds under range mode
-    subr: jax.Array  # () int32 re-settle iterations (== rounds, exact)
-    sizes: jax.Array  # (n_out,) int32 peeled per round
-    overflow: jax.Array  # () bool capacity latch
-    mn: jax.Array  # () int32 carried masked min (decrease_key="bucket")
-    hist: jax.Array  # (NUM_BUCKETS,) carried occupancy, or (0,) unused
-    hi: jax.Array  # () int32 active bucket's exclusive upper bound
-    rem1: jax.Array  # () int32 remaining level-1 work (adaptive)
-    rem2: jax.Array  # () int32 remaining level-2 work (adaptive)
-
-
-def _prefix(lens: jax.Array) -> jax.Array:
-    """Exclusive-prefix flat id space over per-segment lengths."""
-    return jnp.concatenate([
-        jnp.zeros((1,), jnp.int32),
-        jnp.cumsum(lens.astype(jnp.int32)),
-    ])
-
-
-def _init_state(b0: jax.Array, n_out: int, *, decrease_key: str,
-                peel_mode: str, lvl1: int, lvl2: int) -> _LoopState:
-    """Round-0 carry for ``_device_round_loop`` (shared by the run
-    wrappers, the benchmarks' memory-analysis probes, and tests)."""
-    alive0 = jnp.ones((n_out,), jnp.bool_)
-    want_hist = peel_mode == "range" and decrease_key == "bucket"
-    if decrease_key == "bucket":
-        mn0, hist0 = _masked_state(b0, alive0, want_hist)
-    else:
-        mn0, hist0 = jnp.int32(_I32_MAX), _empty_hist(False)
-    return _LoopState(
-        b=b0,
-        alive=alive0,
-        out=jnp.zeros((n_out,), b0.dtype),
-        kappa=jnp.int32(0),
-        rounds=jnp.int32(0),
-        subr=jnp.int32(0),
-        sizes=jnp.zeros((n_out,), jnp.int32),
-        overflow=jnp.array(False),
-        mn=mn0,
-        hist=hist0,
-        hi=jnp.int32(0),
-        rem1=jnp.int32(min(lvl1, _I32_MAX - 1)),
-        rem2=jnp.int32(min(lvl2, _I32_MAX - 1)),
-    )
-
-
-def _stream_tiles(b, alive, roff, tile_fn, *, tile_cap: int, aligned: bool,
-                  decrease_key: str, want_hist: bool):
-    """Stream the flat per-round id space ``[0, roff[-1])`` through
-    fixed-shape tiles — the fused-subtract while_loop shared by every
-    decomposition. ``tile_fn(b, wid, tvalid) -> (b, mn, hist)``
-    recovers and subtracts one tile. ``aligned`` cuts tile boundaries
-    at segment boundaries (``aligned_tile_end`` — required when the
-    consumer's per-group C(d, 2) must not split); unaligned tiles
-    advance by the full ``tile_cap`` (linear subtracts split exactly).
-    Returns ``(b, mn, hist)`` with the zero-frontier carried state
-    re-derived via ``_masked_state``.
-    """
-    total = roff[-1]
-
-    def tcond(c):
-        return c[1] < total
-
-    def tbody(c):
-        bt, ts, _mn, _h = c
-        if aligned:
-            te = aligned_tile_end(roff, ts, tile_cap)
-        else:
-            te = jnp.minimum(ts + jnp.int32(tile_cap), total)
-        wid = ts + jnp.arange(tile_cap, dtype=jnp.int32)
-        out_b, mn, h = tile_fn(bt, wid, wid < te)
-        return out_b, te, mn, h
-
-    b, _, mn, hist = jax.lax.while_loop(
-        tcond, tbody,
-        (b, jnp.int32(0), jnp.int32(_I32_MAX), _empty_hist(want_hist)),
-    )
-    if decrease_key == "bucket":
-        # zero-tile rounds still need the post-peel carried state
-        mn, hist = jax.lax.cond(
-            total > 0,
-            lambda _: (mn, hist),
-            lambda _: _masked_state(b, alive, want_hist),
-            None,
-        )
-    return b, mn, hist
-
-
-def _device_round_loop(state: _LoopState, expand, work1, work2, *,
-                       decrease_key: str, peel_mode: str, adaptive: bool,
-                       shrink_caps: tuple):
-    """The jitted round-loop skeleton shared by the tips and wings
-    device engines: extract-min (carried or ``bucket_min``), κ update,
-    exact-vs-range round accounting, peel-set selection/assignment,
-    adaptive remaining-work tracking, and the overflow latch.
-
-    ``expand((b, alive, alive_prev, peel)) -> (b, ovf, mn, hist)``
-    turns one round's peel set into count decrements (the only part
-    the decompositions differ on). ``shrink_caps`` is a static tuple
-    of ``(planned_cap, rem_slot)`` pairs driving the adaptive
-    early-exit (slot 0 = rem1, 1 = rem2).
-
-    Range mode (``peel_mode="range"``): a new bucket round starts
-    whenever the masked min has left the active range ``[.., hi)``;
-    the next range is the lowest non-empty geometric bucket — read
-    from the carried ``bucket_update`` occupancy histogram under
-    ``decrease_key="bucket"``, from the min's bit length otherwise
-    (identical by construction). Iterations *within* a bucket round
-    are the in-graph re-settle: they replay the exact κ trajectory,
-    so the assigned numbers are bitwise-identical to exact mode —
-    only the round accounting (``rounds``, ``sizes``) is per bucket.
-    """
-    dtype = state.b.dtype
-    want_hist = peel_mode == "range" and decrease_key == "bucket"
-
-    def cond(st):
-        go = jnp.any(st.alive) & ~st.overflow
-        if adaptive:
-            shrink = jnp.array(False)
-            rems = (st.rem1, st.rem2)
-            for cap, slot in shrink_caps:
-                if cap > 128:
-                    shrink = shrink | (rems[slot] * 4 <= cap)
-            go = go & ~shrink
-        return go
-
-    def body(st):
-        if decrease_key == "bucket":
-            mn = st.mn
-        else:
-            mn = _kops.bucket_min(st.b, st.alive, use_pallas=True)
-        kappa = jnp.maximum(st.kappa, mn)
-        rounds, hi = st.rounds, st.hi
-        if peel_mode == "range":
-            new_bucket = mn >= hi
-            k_sel = (
-                lowest_nonempty_bucket(st.hist)
-                if want_hist
-                else bit_length(mn)
-            )
-            hi = jnp.where(new_bucket, bucket_upper_bound(k_sel), hi)
-            rounds = rounds + new_bucket.astype(jnp.int32)
-        else:
-            rounds = rounds + 1
-        subr = st.subr + 1
-        peel = st.alive & (st.b <= kappa.astype(dtype))
-        out = jnp.where(peel, kappa.astype(dtype), st.out)
-        alive_prev = st.alive
-        alive = st.alive & ~peel
-        # explicit dtype: under x64 jnp.sum promotes to int64 and the
-        # scatter into the int32 sizes buffer would downcast-warn
-        sizes = st.sizes.at[rounds - 1].add(jnp.sum(peel, dtype=jnp.int32))
-        rem1, rem2 = st.rem1, st.rem2
-        if adaptive:
-            rem1 = rem1 - jnp.sum(jnp.where(peel, work1, 0),
-                                  dtype=jnp.int32)
-            rem2 = rem2 - jnp.sum(jnp.where(peel, work2, 0),
-                                  dtype=jnp.int32)
-
-        def _last_round(args):
-            # nothing left alive: the subtract would be a masked no-op
-            # (the host loops' `if not alive.any(): break`)
-            return (args[0], jnp.array(False), jnp.int32(_I32_MAX),
-                    _empty_hist(want_hist))
-
-        b, ovf_i, mn_next, hist_next = jax.lax.cond(
-            jnp.any(alive), expand, _last_round,
-            (st.b, alive, alive_prev, peel),
-        )
-        return _LoopState(
-            b, alive, out, kappa, rounds, subr, sizes,
-            st.overflow | ovf_i, mn_next, hist_next, hi, rem1, rem2,
-        )
-
-    return jax.lax.while_loop(cond, body, state)
-
-
-def _drive_segments(run, state: _LoopState, adaptive: bool, update_caps):
-    """Host-side capacity-segment driver shared by the run wrappers:
-    invoke the jitted loop, fetch the carry (the per-segment host sync
-    — the only one of the whole decomposition under the fixed
-    schedule), and under the adaptive schedule let ``update_caps``
-    pow2-shrink the planned buffers before re-entering. Returns the
-    final host-side ``_LoopState``, or None when the in-graph overflow
-    latch fired (callers fall back to the host engine)."""
-    while True:
-        host = jax.device_get(run(state))
-        if bool(host.overflow):
-            return None
-        if not adaptive or not host.alive.any():
-            return host
-        update_caps(host)
-        state = _LoopState(*(jnp.asarray(x) for x in host))
 
 
 # ---------------------------------------------------------------------------
@@ -1176,7 +946,25 @@ def peel_tips(
     rungs = [_res.Rung("host", run_host, shrinkable=False)]
     if engine == "device":
         rungs.insert(0, _res.Rung("device", run_device))
-    out, report = policy.execute("peel_tips", rungs, _peel_validator(counts))
+    plan = _plan_peel(
+        "peel_tips",
+        expansion="peel_tips_2hop",
+        engine=engine,
+        aggregation=aggregation,
+        n_out=n_side,
+        dtype=np.asarray(counts).dtype.name,
+        capacity=(
+            ("max_frontier",
+             _I32_MAX if max_frontier is None else int(max_frontier)),
+            ("tile_budget",
+             _DEFAULT_TILE_TARGET if tile_budget is None
+             else int(tile_budget)),
+        ),
+        hash_bits=hash_bits,
+    )
+    out, report = _execute_ladder(
+        "peel_tips", policy, rungs, _peel_validator(counts), plan=plan
+    )
     return policy.attach(out, report)
 
 
@@ -1243,8 +1031,25 @@ def peel_tips_stored(
     rungs = [_res.Rung("host", run_host, shrinkable=False)]
     if engine == "device":
         rungs.insert(0, _res.Rung("device", run_device))
-    out, report = policy.execute(
-        "peel_tips_stored", rungs, _peel_validator(counts)
+    plan = _plan_peel(
+        "peel_tips_stored",
+        expansion="peel_tips_stored",
+        engine=engine,
+        aggregation=aggregation,
+        n_out=n_side,
+        dtype=np.asarray(counts).dtype.name,
+        capacity=(
+            ("max_frontier",
+             _I32_MAX if max_frontier is None else int(max_frontier)),
+            ("tile_budget",
+             _DEFAULT_TILE_TARGET if tile_budget is None
+             else int(tile_budget)),
+            ("stored_wedges", int(woff[-1])),
+        ),
+        hash_bits=hash_bits,
+    )
+    out, report = _execute_ladder(
+        "peel_tips_stored", policy, rungs, _peel_validator(counts), plan=plan
     )
     return policy.attach(out, report)
 
@@ -1769,7 +1574,25 @@ def peel_wings(
     rungs = [_res.Rung("host", run_host, shrinkable=False)]
     if engine == "device":
         rungs.insert(0, _res.Rung("device", run_device))
-    out, report = policy.execute("peel_wings", rungs, _peel_validator(counts))
+    plan = _plan_peel(
+        "peel_wings",
+        expansion="peel_wings_triples",
+        engine=engine,
+        aggregation=aggregation,
+        n_out=g.m,
+        dtype=np.asarray(counts).dtype.name,
+        capacity=(
+            ("max_frontier",
+             _I32_MAX if max_frontier is None else int(max_frontier)),
+            ("tile_budget",
+             _DEFAULT_TILE_TARGET if tile_budget is None
+             else int(tile_budget)),
+        ),
+        hash_bits=hash_bits,
+    )
+    out, report = _execute_ladder(
+        "peel_wings", policy, rungs, _peel_validator(counts), plan=plan
+    )
     return policy.attach(out, report)
 
 

@@ -166,6 +166,7 @@ class ExecutionReport:
     requested: str  # the rung the caller asked for
     attempts: List[RungAttempt] = dataclasses.field(default_factory=list)
     final_rung: Optional[str] = None  # rung that produced the result
+    plan: Optional[str] = None  # WedgePlan.summary() (set by the pipeline)
 
     @property
     def degraded(self) -> bool:
@@ -189,7 +190,10 @@ class ExecutionReport:
             + "]"
             for a in self.attempts
         )
-        return f"{self.workload}: requested={self.requested} {path}"
+        base = f"{self.workload}: requested={self.requested} {path}"
+        if self.plan:
+            base += f" | plan: {self.plan}"
+        return base
 
 
 @dataclasses.dataclass(frozen=True)

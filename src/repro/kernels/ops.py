@@ -26,10 +26,17 @@ import jax
 from ..testing import faults as _faults
 from . import ref as _ref
 from .bucket_min import bucket_min_pallas
-from .bucket_update import MAX_UPDATE_CAP, bucket_update_pallas
+from .bucket_update import (
+    MAX_UPDATE_CAP,
+    NUM_BUCKETS,
+    bit_length,
+    bucket_update_pallas,
+    bucket_upper_bound,
+    lowest_nonempty_bucket,
+)
 from .butterfly_combine import butterfly_combine_pallas
 from .wedge_count import wedge_histogram_pallas
-from .wedge_fused import fused_count_tiles_pallas
+from .wedge_fused import MAX_TILE_CAP, TC, fused_count_tiles_pallas
 
 __all__ = [
     "interpret_default",
@@ -39,6 +46,17 @@ __all__ = [
     "bucket_state",
     "bucket_update",
     "fused_count_tiles",
+    # kernel-contract constants and pure helpers, re-exported so core/
+    # consumes them through this dispatch module instead of importing
+    # concrete kernel modules (the layering rule check_layering.py
+    # enforces)
+    "MAX_UPDATE_CAP",
+    "NUM_BUCKETS",
+    "MAX_TILE_CAP",
+    "TC",
+    "bit_length",
+    "bucket_upper_bound",
+    "lowest_nonempty_bucket",
 ]
 
 

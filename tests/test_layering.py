@@ -1,0 +1,147 @@
+"""The import-layering gate (scripts/check_layering.py).
+
+One test pins the real tree clean; the rest plant each violation class
+in a synthetic package and assert the checker catches it — so the gate
+cannot silently rot into a no-op.
+"""
+import importlib.util
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_spec = importlib.util.spec_from_file_location(
+    "check_layering", os.path.join(ROOT, "scripts", "check_layering.py")
+)
+check_layering = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_layering)
+
+
+def _make_tree(tmp_path, files):
+    """Build a repro-shaped package; returns the src root."""
+    base = {
+        "repro/__init__.py": "",
+        "repro/kernels/__init__.py": "",
+        "repro/kernels/ops.py": "from .wedge_fused import kernel\n",
+        "repro/kernels/wedge_fused.py": "def kernel():\n    pass\n",
+        "repro/core/__init__.py": "",
+        "repro/core/pipeline.py": (
+            "def plan_count():\n    pass\n\n\ndef _internal():\n    pass\n"
+        ),
+        "repro/core/count.py": "from . import pipeline as _pipeline\n",
+        "repro/core/peel.py": "from .pipeline import plan_count\n",
+        "repro/launch/__init__.py": "",
+        "repro/launch/mesh.py": "",
+    }
+    base.update(files)
+    src = tmp_path / "src"
+    for rel, text in base.items():
+        p = src / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(text)
+    return src
+
+
+def test_real_tree_is_clean():
+    violations = check_layering.collect_violations(
+        os.path.join(ROOT, "src")
+    )
+    assert violations == [], "\n".join(violations)
+
+
+def test_cli_exit_zero_on_clean_tree():
+    import subprocess
+    r = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "scripts", "check_layering.py"),
+         os.path.join(ROOT, "src")],
+        capture_output=True, text=True,
+    )
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "clean" in r.stdout
+
+
+def test_synthetic_clean_tree_passes(tmp_path):
+    src = _make_tree(tmp_path, {})
+    assert check_layering.collect_violations(src) == []
+
+
+def test_r1_concrete_kernel_import_flagged(tmp_path):
+    src = _make_tree(tmp_path, {
+        "repro/core/count.py":
+            "from ..kernels.wedge_fused import kernel\n",
+    })
+    v = check_layering.collect_violations(src)
+    assert len(v) == 1 and "R1" in v[0] and "wedge_fused" in v[0], v
+
+
+def test_r1_from_package_submodule_flagged(tmp_path):
+    src = _make_tree(tmp_path, {
+        "repro/core/count.py":
+            "from ..kernels import ops, wedge_fused\n",
+    })
+    v = check_layering.collect_violations(src)
+    # `ops` is allowed; `wedge_fused` in the same statement is not
+    assert len(v) == 1 and "R1" in v[0] and "wedge_fused" in v[0], v
+
+
+def test_r1_absolute_import_flagged(tmp_path):
+    src = _make_tree(tmp_path, {
+        "repro/core/count.py":
+            "import repro.kernels.wedge_fused\n",
+    })
+    v = check_layering.collect_violations(src)
+    assert len(v) == 1 and "R1" in v[0], v
+
+
+def test_r1_kernels_internal_imports_allowed(tmp_path):
+    # ops.py importing its siblings is the whole point of the dispatch
+    # layer — the base tree already does it and must stay clean
+    src = _make_tree(tmp_path, {
+        "repro/kernels/ref.py": "from .wedge_fused import kernel\n",
+    })
+    assert check_layering.collect_violations(src) == []
+
+
+def test_r2_core_importing_launch_flagged(tmp_path):
+    src = _make_tree(tmp_path, {
+        "repro/core/distributed.py": "from ..launch import mesh\n",
+    })
+    v = check_layering.collect_violations(src)
+    assert len(v) == 1 and "R2" in v[0], v
+
+
+def test_r2_outside_core_launch_allowed(tmp_path):
+    src = _make_tree(tmp_path, {
+        "repro/roofline/__init__.py": "",
+        "repro/roofline/model.py": "from ..launch.mesh import *\n",
+    })
+    assert check_layering.collect_violations(src) == []
+
+
+def test_r3_private_pipeline_import_flagged(tmp_path):
+    src = _make_tree(tmp_path, {
+        "repro/core/peel.py":
+            "from .pipeline import _internal as helper\n",
+    })
+    v = check_layering.collect_violations(src)
+    assert len(v) == 1 and "R3" in v[0] and "_internal" in v[0], v
+
+
+def test_r3_private_attribute_access_flagged(tmp_path):
+    src = _make_tree(tmp_path, {
+        "repro/core/count.py": (
+            "from . import pipeline as _pipeline\n"
+            "x = _pipeline._internal\n"
+        ),
+    })
+    v = check_layering.collect_violations(src)
+    assert len(v) == 1 and "R3" in v[0] and "_internal" in v[0], v
+
+
+def test_r3_public_surface_allowed(tmp_path):
+    src = _make_tree(tmp_path, {
+        "repro/core/count.py": (
+            "from . import pipeline as _pipeline\n"
+            "plan = _pipeline.plan_count\n"
+        ),
+    })
+    assert check_layering.collect_violations(src) == []

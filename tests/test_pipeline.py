@@ -1,0 +1,351 @@
+"""Plan layer tests: serialization, determinism, partitioning, and the
+per-tile sort-vs-hash strategy (tentpole PR: plan/execute split).
+
+The executor-side guarantees (bitwise parity of every knob combination)
+are pinned by test_counting/test_engine/test_fused; this file pins the
+*plan* object itself: a plan is a plain serializable value, planning is
+a deterministic pure function of (graph, knobs), a round-tripped plan
+executes identically, and partitioned sub-plans tile the parent exactly.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pipeline
+from repro.core.count import count_butterflies
+from repro.core.graph import BipartiteGraph, preprocess
+from repro.core.oracle import global_count, per_vertex_counts
+from repro.core.peel import peel_tips, peel_wings
+from repro.core.ranking import make_order
+from repro.core.wedges import device_graph, host_wedge_counts
+from repro.data.graphs import powerlaw_bipartite
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def _ranked(g):
+    return preprocess(g, make_order(g, "degree"))
+
+
+def _random_graph(nu=60, nv=50, m=700, seed=0):
+    rng = np.random.default_rng(seed)
+    e = np.stack([rng.integers(0, nu, m), rng.integers(0, nv, m)], axis=1)
+    return BipartiteGraph(nu, nv, e)
+
+
+def _plan(g, **kw):
+    kw.setdefault("mode", "all")
+    kw.setdefault("aggregation", "auto")
+    kw.setdefault("budget", 256)
+    kw.setdefault("engine", "fused")
+    return pipeline.plan_count(_ranked(g), **kw)
+
+
+# ---------------------------------------------------------------------------
+# Serialization: a plan is a plain value
+# ---------------------------------------------------------------------------
+
+
+def test_plan_json_roundtrip_equality():
+    plan = _plan(_random_graph())
+    again = pipeline.WedgePlan.from_json(plan.to_json())
+    assert again == plan  # frozen dataclass equality: every field
+    assert again.to_json() == plan.to_json()
+
+
+def test_peel_envelope_plan_roundtrip():
+    plan = pipeline.plan_peel(
+        "peel_tips", expansion="peel_tips_2hop", engine="device",
+        aggregation="sort", n_out=37, dtype="int64",
+        capacity=(("max_frontier", 128), ("tile_budget", 1024)),
+    )
+    again = pipeline.WedgePlan.from_json(plan.to_json())
+    assert again == plan
+    assert again.capacity == (("max_frontier", 128), ("tile_budget", 1024))
+
+
+def test_plan_to_dict_is_json_native():
+    d = _plan(_random_graph()).to_dict()
+    assert json.loads(json.dumps(d)) == d  # no tuples/np scalars survive
+    assert isinstance(d["bounds"], list)
+    assert isinstance(d["accumulator"], dict)
+
+
+def test_roundtripped_plan_executes_identically():
+    g = _random_graph()
+    rg = _ranked(g)
+    plan = pipeline.plan_count(
+        rg, mode="all", aggregation="auto", budget=256, engine="fused"
+    )
+    dg = device_graph(rg)
+    a = pipeline.execute_count_plan(dg, plan)
+    b = pipeline.execute_count_plan(
+        dg, pipeline.WedgePlan.from_json(plan.to_json())
+    )
+    for x, y in zip(a, b):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+    assert int(a[0]) == global_count(g)
+
+
+def test_plan_summary_one_line():
+    plan = _plan(_random_graph())
+    s = plan.summary()
+    assert "\n" not in s
+    assert s.startswith("count/count_wedges")
+    assert f"tiles={plan.n_tiles}" in s and "caps=chunk_cap=" in s
+
+
+# ---------------------------------------------------------------------------
+# Validation
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_expansion_rejected():
+    with pytest.raises(ValueError, match="expansion"):
+        pipeline.plan_peel(
+            "peel_tips", expansion="nope", engine="host",
+            aggregation="sort", n_out=1,
+        )
+
+
+def test_tile_list_shape_validated():
+    plan = _plan(_random_graph())
+    import dataclasses
+    with pytest.raises(ValueError, match="tile_wedges"):
+        dataclasses.replace(plan, tile_wedges=plan.tile_wedges[:-1])
+    with pytest.raises(ValueError, match="tile_aggregation"):
+        dataclasses.replace(
+            plan, tile_aggregation=plan.tile_aggregation + ("sort",)
+        )
+
+
+def test_plan_strategies_resolution():
+    plan = _plan(_random_graph())
+    assert len(set(plan.tile_aggregation)) > 1  # graph chosen to mix
+    strat = pipeline.plan_strategies(plan)
+    assert strat is not None and strat.dtype == jnp.int8
+    assert list(np.asarray(strat)) == [
+        1 if s == "hash" else 0 for s in plan.tile_aggregation
+    ]
+    uniform = _plan(_random_graph(), aggregation="sort")
+    assert pipeline.plan_strategies(uniform) is None
+    import dataclasses
+    bad = dataclasses.replace(
+        plan,
+        tile_aggregation=("histogram",) * (plan.n_tiles - 1) + ("sort",),
+    )
+    with pytest.raises(ValueError, match="sort/hash"):
+        pipeline.plan_strategies(bad)
+
+
+# ---------------------------------------------------------------------------
+# Determinism: planning is a pure function of (graph, knobs)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    budget=st.integers(min_value=16, max_value=2048),
+    aggregation=st.sampled_from(["sort", "hash", "auto"]),
+    mode=st.sampled_from(["global", "vertex", "edge", "all"]),
+)
+def test_planning_deterministic(seed, budget, aggregation, mode):
+    g = _random_graph(seed=seed)
+    a = _plan(g, budget=budget, aggregation=aggregation, mode=mode)
+    b = _plan(g, budget=budget, aggregation=aggregation, mode=mode)
+    assert a == b and a.to_json() == b.to_json()
+    # and tiles tile: exact budget honor + full coverage
+    assert all(w <= max(budget, max(a.tile_wedges or (0,)))
+               for w in a.tile_wedges)
+    assert a.tile_flat_bounds()[-1, 1] == a.total_wedges
+
+
+def test_golden_plan_snapshot_pl_small():
+    """The pl_small bench graph's plan is pinned byte-for-byte: any
+    planner drift (tile boundaries, density choices, capacity segments)
+    must show up as a reviewed golden update, not silently."""
+    g = powerlaw_bipartite(2_000, 1_500, 12_000, seed=1)
+    plan = pipeline.plan_count(
+        _ranked(g), mode="all", aggregation="auto", budget=4096,
+        engine="fused",
+    )
+    path = os.path.join(HERE, "data", "golden_plan_pl_small.json")
+    golden = json.loads(open(path).read())
+    assert plan.to_dict() == golden, (
+        "planner output drifted from the golden snapshot; if intended, "
+        "regenerate tests/data/golden_plan_pl_small.json"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Per-tile sort-vs-hash (satellite: density decision, bitwise parity)
+# ---------------------------------------------------------------------------
+
+
+def test_auto_plan_mixes_strategies():
+    plan = _plan(_random_graph(), budget=256)
+    sc = plan.strategy_counts()
+    assert set(sc) == {"sort", "hash"}, sc  # both paths exercised below
+
+
+def test_density_threshold_extremes():
+    g = _random_graph()
+    all_hash = _plan(g, density_threshold=0.0)
+    assert set(all_hash.tile_aggregation) == {"hash"}
+    all_sort = _plan(g, density_threshold=float("inf"))
+    assert set(all_sort.tile_aggregation) == {"sort"}
+
+
+@pytest.mark.parametrize("engine", ["xla", "pallas", "fused",
+                                    "fused_pallas"])
+def test_auto_bitwise_parity_vs_forced(engine):
+    """aggregation='auto' (mixed per-tile strategies) is bitwise equal
+    to forced-sort and forced-hash on every engine, and oracle-exact."""
+    g = _random_graph()
+    results = {
+        agg: count_butterflies(
+            g, order="degree", mode="all", aggregation=agg,
+            engine=engine, max_chunk=256,
+        )
+        for agg in ("auto", "sort", "hash")
+    }
+    ra = results["auto"]
+    assert int(ra.total) == global_count(g)
+    pu, pv = per_vertex_counts(g)
+    assert np.array_equal(np.asarray(ra.per_u), pu)
+    assert np.array_equal(np.asarray(ra.per_v), pv)
+    for agg in ("sort", "hash"):
+        rf = results[agg]
+        assert int(rf.total) == int(ra.total)
+        for fld in ("per_u", "per_v", "per_edge"):
+            assert np.array_equal(
+                np.asarray(getattr(ra, fld)), np.asarray(getattr(rf, fld))
+            ), (engine, agg, fld)
+
+
+# ---------------------------------------------------------------------------
+# plan_partition: the distributed seam
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_dev", [1, 2, 3, 8])
+def test_partition_concat_identity(n_dev):
+    plan = _plan(_random_graph(), budget=128)
+    parts = pipeline.plan_partition(plan, n_dev)
+    assert len(parts) == n_dev
+    cat = np.concatenate([p.tile_flat_bounds() for p in parts])
+    assert np.array_equal(cat, plan.tile_flat_bounds())
+    assert sum(p.n_tiles for p in parts) == plan.n_tiles
+    agg = tuple(s for p in parts for s in p.tile_aggregation)
+    assert agg == plan.tile_aggregation  # strategies travel with tiles
+    assert sum(p.total_wedges for p in parts) == plan.total_wedges
+
+
+def test_partition_excess_devices_get_empty_plans():
+    plan = _plan(_random_graph(), budget=100_000)  # one tile
+    assert plan.n_tiles == 1
+    parts = pipeline.plan_partition(plan, 4)
+    assert [p.n_tiles for p in parts] == [1, 0, 0, 0]
+    tiles, cap = pipeline.partition_tile_array(parts)
+    assert tiles.shape == (4, 1, 2) and tiles.dtype == np.int32
+    assert np.array_equal(tiles[1:], np.zeros((3, 1, 2), np.int32))
+    assert cap == plan.chunk_cap
+
+
+def test_partition_envelope_plan_rejected():
+    plan = pipeline.plan_peel(
+        "peel_wings", expansion="peel_wings_triples", engine="host",
+        aggregation="sort", n_out=5,
+    )
+    with pytest.raises(ValueError, match="no tile list"):
+        pipeline.plan_partition(plan, 2)
+
+
+def test_partitioned_execution_sums_to_total():
+    """Executing each device sub-plan independently and summing equals
+    the single-device total bitwise (the tile-alignment invariant)."""
+    g = _random_graph()
+    rg = _ranked(g)
+    dg = device_graph(rg)
+    plan = pipeline.plan_count(
+        rg, mode="global", aggregation="auto", budget=128, engine="fused"
+    )
+    full = int(pipeline.execute_count_plan(dg, plan))
+    parts = pipeline.plan_partition(plan, 4)
+    partial = sum(
+        int(pipeline.execute_count_plan(dg, p))
+        for p in parts if p.n_tiles
+    )
+    assert partial == full == global_count(g)
+
+
+@pytest.mark.slow
+def test_plan_partition_subprocess_4dev_parity():
+    """4 real host devices: the distributed engine (whose tile shards
+    now come from pipeline.plan_partition) stays oracle-exact and
+    matches the slice engine bitwise."""
+    from repro.core.distributed import launch_device_worker
+
+    code = """
+import numpy as np, jax
+from jax.sharding import Mesh
+from repro.core import BipartiteGraph
+from repro.core.oracle import global_count
+from repro.core.distributed import distributed_count, plan_fused_partition
+from repro.core import pipeline
+from repro.core.graph import preprocess
+from repro.core.ranking import make_order
+
+rng = np.random.default_rng(3)
+e = np.stack([rng.integers(0, 50, 400), rng.integers(0, 40, 400)], axis=1)
+g = BipartiteGraph(50, 40, e)
+
+rg = preprocess(g, make_order(g, "degree"))
+tiles, cap = plan_fused_partition(rg, 4, max_chunk=64)
+plan = pipeline.plan_count(rg, mode="global", direction="low",
+                           aggregation="sort", budget=64, engine="fused")
+parts = pipeline.plan_partition(plan, 4)
+t2, c2 = pipeline.partition_tile_array(parts)
+assert np.array_equal(tiles, t2) and cap == c2  # one partition source
+
+mesh = Mesh(np.array(jax.devices()), ("data",))
+got, _ = distributed_count(g, mesh, mode="global", engine="fused",
+                           max_chunk=64)
+assert int(got) == global_count(g), (int(got), global_count(g))
+a, _ = distributed_count(g, mesh, mode="vertex", engine="fused",
+                         max_chunk=64)
+b, _ = distributed_count(g, mesh, mode="vertex", engine="slice")
+assert np.array_equal(np.asarray(a), np.asarray(b))
+print("PLAN_PARTITION_4DEV_OK")
+"""
+    out = launch_device_worker(code, devices=4, retries=1)
+    assert "PLAN_PARTITION_4DEV_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# Report integration: every decomposition records its plan
+# ---------------------------------------------------------------------------
+
+
+def test_count_report_records_plan():
+    g = _random_graph()
+    r = count_butterflies(g, engine="fused", aggregation="auto",
+                          max_chunk=256)
+    assert r.report is not None and r.report.plan is not None
+    assert r.report.plan.startswith("count/count_wedges")
+    assert "| plan: count/count_wedges" in r.report.summary()
+
+
+def test_peel_reports_record_plan():
+    g = powerlaw_bipartite(120, 100, 700, seed=4)
+    tips = peel_tips(g)
+    assert tips.report.plan.startswith("peel_tips/peel_tips_2hop")
+    assert "caps=max_frontier=" in tips.report.plan
+    wings = peel_wings(g)
+    assert wings.report.plan.startswith("peel_wings/peel_wings_triples")

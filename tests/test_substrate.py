@@ -1,143 +1,19 @@
-"""Sharding rules, optimizer, checkpoint, data pipeline units."""
-import numpy as np
-import pytest
-
-import jax
-import jax.numpy as jnp
+"""Sharding-rule units for the substrate kept out of contrib/
+quarantine: mesh-shape-only partition-spec resolution, used by the
+distributed counting path."""
 from jax.sharding import PartitionSpec as P
 
-from repro.ckpt import checkpoint as ckpt
-from repro.configs import get_config
-from repro.data.tokens import TokenStream
-from repro.models import param_specs
-from repro.models.model import specs_to_sds
-from repro.optim import AdamWConfig, adamw_init, adamw_update, ef_psum, ef_init
-from repro.sharding.rules import (
-    batch_pspec,
-    best_effort,
-    param_pspecs,
-    zero_pspecs,
-)
-
-
 from repro.launch.mesh import abstract_mesh, make_test_mesh
-
-
-def _mesh(shape, axes):
-    return make_test_mesh(shape, axes)
+from repro.sharding.rules import batch_pspec, best_effort
 
 
 def test_best_effort_drops_nondivisible():
     # single-device mesh: every axis has size 1 -> always divisible
-    m = _mesh((1,), ("model",))
+    m = make_test_mesh((1,), ("model",))
     assert best_effort(m, ("model", None), (40, 3)) == P("model", None)
-
-
-def test_param_pspecs_cover_all_archs():
-    m = _mesh((1,), ("model",))
-    for arch in ("qwen2.5-32b", "zamba2-7b", "rwkv6-3b", "arctic-480b",
-                 "seamless-m4t-large-v2"):
-        cfg = get_config(arch)
-        specs = param_specs(cfg)
-        psp = param_pspecs(specs, cfg, m)
-        flat_s = jax.tree.leaves(
-            specs,
-            is_leaf=lambda x: isinstance(x, tuple) and isinstance(x[0], tuple),
-        )
-        flat_p = jax.tree.leaves(psp, is_leaf=lambda x: isinstance(x, P))
-        assert len(flat_s) == len(flat_p)
-        for (shape, _), ps in zip(flat_s, flat_p):
-            assert len(ps) <= len(shape)
-
-
-def test_zero_pspecs_adds_dp_axis():
-    # rule resolution is mesh-shape-only: AbstractMesh needs no devices
-    m = abstract_mesh((2, 1), ("data", "model"))
-    cfg = get_config("qwen2.5-3b").reduced()
-    specs = param_specs(cfg)
-    zp = zero_pspecs(specs, cfg, m)
-    flat = jax.tree.leaves(zp, is_leaf=lambda x: isinstance(x, P))
-    assert any("data" in str(ps) for ps in flat)
 
 
 def test_batch_pspec_divisibility():
     m = abstract_mesh((2, 1), ("data", "model"))
     assert batch_pspec(m, 4) == P("data")
     assert batch_pspec(m, 3) == P(None)  # indivisible -> replicate
-
-
-def test_adamw_converges_quadratic():
-    cfg = AdamWConfig(lr_peak=0.1, warmup_steps=5, total_steps=200,
-                      weight_decay=0.0, clip_norm=10.0)
-    params = {"w": jnp.array([3.0, -2.0])}
-    opt = adamw_init(params, cfg)
-    target = jnp.array([1.0, 1.0])
-
-    @jax.jit
-    def step(params, opt):
-        g = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
-        return adamw_update(g, opt, params, cfg)
-
-    for _ in range(200):
-        params, opt, _ = step(params, opt)
-    np.testing.assert_allclose(np.asarray(params["w"]), [1.0, 1.0], atol=1e-2)
-
-
-def test_ef_compression_error_bounded():
-    """int8 EF-psum on 1 device: quantization error is re-injected, so
-    the *accumulated* update drift stays bounded."""
-    rng = np.random.default_rng(0)
-    g = jnp.asarray(rng.normal(size=(256,)).astype(np.float32))
-    err = jnp.zeros_like(g)
-    total_exact = np.zeros(256, np.float32)
-    total_comp = np.zeros(256, np.float32)
-    for _ in range(20):
-        out, err = jax.jit(lambda g, e: ef_psum(g, e, ()))(g, err)
-        total_exact += np.asarray(g)
-        total_comp += np.asarray(out)
-    # error feedback keeps cumulative drift within one quantization step
-    scale = float(jnp.max(jnp.abs(g))) / 127.0
-    assert np.max(np.abs(total_exact - total_comp)) < 2 * scale
-
-
-def test_checkpoint_roundtrip_bf16(tmp_path):
-    tree = {
-        "a": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3),
-        "b": {"c": jnp.ones((4,), jnp.float32)},
-        "s": jnp.int32(7),
-    }
-    ckpt.save(str(tmp_path), 3, tree, async_write=False)
-    assert ckpt.latest_step(str(tmp_path)) == 3
-    step, got = ckpt.restore(str(tmp_path), tree)
-    assert step == 3
-    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
-        assert x.dtype == y.dtype
-        np.testing.assert_array_equal(
-            np.asarray(x, np.float32), np.asarray(y, np.float32)
-        )
-
-
-def test_checkpoint_ignores_partial(tmp_path):
-    import os
-    os.makedirs(tmp_path / "step_9.tmp")
-    tree = {"a": jnp.ones(3)}
-    ckpt.save(str(tmp_path), 2, tree, async_write=False)
-    assert ckpt.latest_step(str(tmp_path)) == 2
-
-
-def test_tokenstream_shard_decomposition():
-    """Global batch == concatenation of shards; elastic width changes
-    produce the same global data (coordination-free replacement)."""
-    ts = TokenStream(vocab=97, seq_len=16, global_batch=8, kind="lm")
-    full = ts.batch(5, 0, 1)
-    parts2 = np.concatenate([ts.batch(5, s, 2) for s in range(2)])
-    parts4 = np.concatenate([ts.batch(5, s, 4) for s in range(4)])
-    np.testing.assert_array_equal(full, parts2)
-    np.testing.assert_array_equal(full, parts4)
-
-
-def test_tokenstream_copy_learnable():
-    ts = TokenStream(vocab=64, seq_len=16, global_batch=2, kind="copy")
-    b = ts.batch(0)
-    # successor rule: next = (cur mod vocab-1) + 1
-    assert (b[:, 1:] == (b[:, :-1] % 63) + 1).all()

@@ -1,10 +1,5 @@
 """End-to-end behaviour tests for the ParButterfly-JAX system."""
-import numpy as np
-import pytest
-
-import jax.numpy as jnp
-
-from repro.core import BipartiteGraph, count_butterflies
+from repro.core import count_butterflies
 from repro.core.oracle import global_count
 from repro.core.peel import peel_tips, peel_wings
 from repro.data.graphs import powerlaw_bipartite
@@ -48,26 +43,3 @@ def test_cache_optimization_same_results():
     a = count_butterflies(g, order="degree", cache_opt=False)
     b = count_butterflies(g, order="degree", cache_opt=True)
     assert int(a.total) == int(b.total)
-
-
-def test_moe_router_diagnostic_integration():
-    """The paper's engine consumed by the LM side (DESIGN.md §4)."""
-    import jax
-    from repro.configs import get_config
-    from repro.models import init_params
-    from repro.models.moe import routing_assignment
-
-    cfg = get_config("moonshot-v1-16b-a3b").reduced()
-    params = init_params(cfg, jax.random.PRNGKey(0))
-    bp0 = jax.tree_util.tree_map(lambda a: a[0], params["blocks"])
-    x = jax.random.normal(
-        jax.random.PRNGKey(1), (2, 16, cfg.d_model), jnp.float32
-    ).astype(jnp.bfloat16)
-    toks, experts = routing_assignment(bp0["moe"], x, cfg)
-    g = BipartiteGraph(
-        int(np.asarray(toks).max()) + 1,
-        cfg.n_experts,
-        np.stack([np.asarray(toks), np.asarray(experts)], axis=1),
-    )
-    r = count_butterflies(g, order="side", aggregation="sort")
-    assert int(r.total) >= 0
