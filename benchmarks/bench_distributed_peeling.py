@@ -1,0 +1,194 @@
+"""Distributed peeling scaling curve + fault overlay
+(``BENCH_distributed_peeling.json``, schema v1).
+
+Scaling rows: each decomposition runs through the supervised
+bucket-range round loop (``distributed.PeelSupervisor``) on a 1-, 2-,
+and 4-worker mesh; every row records wall time, bucket rounds,
+re-settle ``sub_rounds``, checkpoint restores, and a ``bitwise_equal``
+parity bit against the single-device host engine — the acceptance gate
+is that every bit stays True. On a CPU host the workers are threads
+over numpy partials (the same integers a real mesh would reduce), so
+the curve measures supervisor + fan-out overhead against the
+single-device loop, not chip-level speedup.
+
+Fault-overlay rows re-run the 4-worker mesh with an injected
+``device_loss`` at an early round boundary (rollback + elastic
+re-partition) and with an injected ``slow`` straggler (re-dispatch,
+first-completion): recovery wall time, restores/redispatches, and the
+same parity bit. The derived ``recovery_overhead`` per decomposition
+is fault wall / clean 4-worker wall.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from .common import emit
+from .bench_peeling import PEEL_GRAPHS, _tip_inputs
+
+from repro.core import count_butterflies
+from repro.core.count import default_count_dtype
+from repro.core.peel import peel_tips, peel_tips_stored, peel_wings
+from repro.testing import faults
+
+DEVICE_COUNTS = (1, 2, 4)
+FAULT_DEVICES = 4
+
+
+def _decomps(g):
+    side, vcounts = _tip_inputs(g)
+    ecounts = np.asarray(count_butterflies(
+        g, mode="edge", count_dtype=default_count_dtype()
+    ).per_edge)
+    return {
+        "peel_tips": lambda **kw: peel_tips(
+            g, counts=vcounts, side=side, **kw
+        ),
+        "peel_tips_stored": lambda **kw: peel_tips_stored(
+            g, counts=vcounts, side=side, **kw
+        ),
+        "peel_wings": lambda **kw: peel_wings(g, counts=ecounts, **kw),
+    }
+
+
+def _time_best(fn, repeats: int):
+    best, out = float("inf"), None
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def write_json(path, graphs=("peel_small",), repeats: int = 1) -> dict:
+    """Build (and optionally write) the scaling + fault-overlay
+    payload. ``path=None`` skips the file write."""
+    payload: dict = {
+        "schema": "bench_distributed_peeling/v1",
+        "backend": jax.default_backend(),
+        "visible_devices": len(jax.devices()),
+        "device_counts": list(DEVICE_COUNTS),
+        "graphs": {},
+        "runs": [],
+        "fault_overlay": [],
+        "derived": {},
+    }
+    for gname in graphs:
+        g = PEEL_GRAPHS[gname]()
+        payload["graphs"][gname] = {"n_u": g.n_u, "n_v": g.n_v, "m": g.m}
+        for algo, run in _decomps(g).items():
+            ref = run()  # single-device host engine: the parity oracle
+            wall4 = None
+            for nd in DEVICE_COUNTS:
+                res, wall = _time_best(
+                    lambda: run(devices=nd), repeats
+                )
+                if nd == FAULT_DEVICES:
+                    wall4 = wall
+                payload["runs"].append({
+                    "graph": gname,
+                    "algo": algo,
+                    "devices": nd,
+                    "wall_s": wall,
+                    "rounds": int(res.rounds),
+                    "sub_rounds": int(res.sub_rounds),
+                    "checkpoint_restores":
+                        res.report.checkpoint_restores,
+                    "bitwise_equal": bool(
+                        np.array_equal(res.numbers, ref.numbers)
+                    ),
+                })
+            # fault overlay 1: kill one worker at round 1 -> rollback +
+            # elastic re-partition over the 3 survivors
+            with faults.inject(
+                "device_loss", site="round1.", times=1, device=1
+            ) as f:
+                res, wall = _time_best(
+                    lambda: run(devices=FAULT_DEVICES), repeats
+                )
+            payload["fault_overlay"].append({
+                "graph": gname,
+                "algo": algo,
+                "devices": FAULT_DEVICES,
+                "fault": "device_loss@round1",
+                "fired": int(f.fired),
+                "wall_s": wall,
+                "checkpoint_restores": res.report.checkpoint_restores,
+                "final_rung": res.report.final_rung,
+                "bitwise_equal": bool(
+                    np.array_equal(res.numbers, ref.numbers)
+                ),
+            })
+            loss_wall = wall
+            # fault overlay 2: one straggling worker -> re-dispatch,
+            # first completion wins
+            with faults.inject("slow", times=1, device=0, delay=0.3) as f:
+                res, wall = _time_best(
+                    lambda: run(
+                        devices=FAULT_DEVICES, round_deadline_s=0.1
+                    ),
+                    repeats,
+                )
+            payload["fault_overlay"].append({
+                "graph": gname,
+                "algo": algo,
+                "devices": FAULT_DEVICES,
+                "fault": "slow@first-dispatch",
+                "fired": int(f.fired),
+                "wall_s": wall,
+                "redispatches": res.report.retries,
+                "final_rung": res.report.final_rung,
+                "bitwise_equal": bool(
+                    np.array_equal(res.numbers, ref.numbers)
+                ),
+            })
+            if wall4:
+                payload["derived"][f"{gname}/{algo}"] = {
+                    "recovery_overhead": loss_wall / wall4,
+                    "straggler_overhead": wall / wall4,
+                }
+    payload["derived"]["all_bitwise_equal"] = all(
+        r["bitwise_equal"]
+        for r in payload["runs"] + payload["fault_overlay"]
+    )
+    if path:
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--graphs", nargs="*", default=["peel_small"])
+    ap.add_argument(
+        "--json", default=None, metavar="PATH",
+        help="also write the BENCH_distributed_peeling.json curve",
+    )
+    ap.add_argument("--repeats", type=int, default=1)
+    args = ap.parse_args(argv)
+    payload = write_json(
+        args.json, graphs=tuple(args.graphs), repeats=args.repeats
+    )
+    for r in payload["runs"]:
+        emit(
+            f"{r['algo']}/{r['graph']}/dev{r['devices']}",
+            r["wall_s"] * 1e6,
+            f"rho={r['rounds']},sub={r['sub_rounds']},"
+            f"restores={r['checkpoint_restores']},"
+            f"parity={int(r['bitwise_equal'])}",
+        )
+    for r in payload["fault_overlay"]:
+        emit(
+            f"{r['algo']}/{r['graph']}/dev{r['devices']}/{r['fault']}",
+            r["wall_s"] * 1e6,
+            f"rung={r['final_rung']},parity={int(r['bitwise_equal'])}",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV (see DESIGN.md §9 index).
   peeling     -> paper Table 4 / Figs. 12-13
   kernels     -> Pallas kernel validation timings
   distributed -> shard_map engine on the host mesh
+  distributed_peeling -> supervised mesh peeling scaling curve
+                 (1/2/4 workers) + device-loss / straggler overlay
 
 The counting section additionally writes the machine-readable
 ``BENCH_counting.json`` perf baseline (``--json-out``; see
@@ -16,29 +18,33 @@ The counting section additionally writes the machine-readable
 ``BENCH_fused.json`` (``--json-out-fused``; fused-vs-materialized wall
 time + temp-memory footprint), and the peeling section writes
 ``BENCH_peeling.json`` (``--json-out-peeling``; host-vs-device engine
-rounds / wall time / host-sync counts) so future PRs have trajectories
-to compare against.
+rounds / wall time / host-sync counts), and the distributed_peeling
+section writes ``BENCH_distributed_peeling.json``
+(``--json-out-distpeel``; 1/2/4-worker scaling + fault-recovery
+overlay, every row carrying a bitwise-parity bit) so future PRs have
+trajectories to compare against.
 
 ``python -m benchmarks.run [section ...] [--quick | --smoke]``
 
 ``python -m benchmarks.run all`` is the JSON aggregator: it runs the
-counting + fused + peeling sections and refreshes all three
-``BENCH_*.json`` baselines in one invocation (the other sections print
-CSV only and are excluded — add them explicitly if wanted).
+counting + fused + peeling + distributed_peeling sections and
+refreshes all four ``BENCH_*.json`` baselines in one invocation (the
+other sections print CSV only and are excluded — add them explicitly
+if wanted).
 
 ``--smoke`` is the CI variant of ``--quick``: smallest graph only, one
 timing rep, and the CSV sweeps are skipped — each JSON section goes
-straight to its ``write_json`` so a clean checkout refreshes all three
+straight to its ``write_json`` so a clean checkout refreshes all four
 ``BENCH_*.json`` artifacts in minutes.
 """
 import argparse
 import sys
 
 SECTIONS = ("counting", "fused", "ranking", "sparsify", "peeling",
-            "kernels", "distributed")
+            "kernels", "distributed", "distributed_peeling")
 # the sections that write machine-readable BENCH_*.json baselines;
 # `python -m benchmarks.run all` runs exactly these
-JSON_SECTIONS = ("counting", "fused", "peeling")
+JSON_SECTIONS = ("counting", "fused", "peeling", "distributed_peeling")
 
 
 def main() -> None:
@@ -67,6 +73,10 @@ def main() -> None:
     ap.add_argument("--json-out-fused", default="BENCH_fused.json",
                     help="path for the fused-engine baseline "
                          "(empty string disables)")
+    ap.add_argument("--json-out-distpeel",
+                    default="BENCH_distributed_peeling.json",
+                    help="path for the supervised mesh-peeling scaling "
+                         "curve + fault overlay (empty string disables)")
     args = ap.parse_args()
     sections = args.sections or list(SECTIONS)
     if "all" in sections:
@@ -95,6 +105,12 @@ def main() -> None:
                 args.json_out_peeling, graphs=("peel_small",), repeats=1
             )
             print(f"# wrote {args.json_out_peeling}", file=sys.stderr)
+        if "distributed_peeling" in sections and args.json_out_distpeel:
+            from . import bench_distributed_peeling
+            bench_distributed_peeling.write_json(
+                args.json_out_distpeel, graphs=("peel_small",), repeats=1
+            )
+            print(f"# wrote {args.json_out_distpeel}", file=sys.stderr)
         if args.faults:
             if "counting" in sections and args.json_out:
                 from . import bench_counting
@@ -166,6 +182,14 @@ def main() -> None:
     if "distributed" in sections:
         from . import bench_distributed
         bench_distributed.main()
+    if "distributed_peeling" in sections:
+        from . import bench_distributed_peeling
+        dp_args = ["--graphs", "peel_small"]
+        if args.json_out_distpeel:
+            dp_args += ["--json", args.json_out_distpeel]
+        bench_distributed_peeling.main(dp_args)
+        if args.json_out_distpeel:
+            print(f"# wrote {args.json_out_distpeel}", file=sys.stderr)
 
 
 if __name__ == '__main__':

@@ -5,6 +5,7 @@ from .count import CountResult, count_butterflies, count_from_ranked
 from .resilience import (
     AccumulatorOverflowRisk,
     CapacityOverflow,
+    CheckpointCorrupt,
     DeviceLost,
     ExecutionReport,
     GraphValidationError,
@@ -13,7 +14,9 @@ from .resilience import (
     ResourceExhausted,
     ResultInvariantViolation,
     RungUnavailable,
+    StragglerTimeout,
 )
+from .checkpoint import CheckpointStore, RoundCheckpoint
 
 __all__ = [
     "BipartiteGraph",
@@ -33,6 +36,10 @@ __all__ = [
     "ResourceExhausted",
     "RungUnavailable",
     "ResultInvariantViolation",
+    "StragglerTimeout",
+    "CheckpointCorrupt",
     "ExecutionReport",
     "ResiliencePolicy",
+    "CheckpointStore",
+    "RoundCheckpoint",
 ]

@@ -34,11 +34,13 @@ exactly and the engines agree bitwise.
 """
 from __future__ import annotations
 
+import concurrent.futures as _cf
+import dataclasses
 import os
 import subprocess
 import sys
 import time
-from typing import Optional, Sequence
+from typing import Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -47,11 +49,18 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from ..testing import faults as _faults
+from . import checkpoint as _ckpt
 from . import pipeline as _pipeline  # shared hot path + partition seam
 from .aggregate import aggregate_sort
 from .graph import BipartiteGraph, RankedGraph, preprocess
 from .ranking import make_order
-from .resilience import DeviceLost
+from .resilience import (
+    DeviceLost,
+    ExecutionReport,
+    RungAttempt,
+    RungUnavailable,
+    StragglerTimeout,
+)
 from .wedges import (
     auto_chunk_budget,
     device_graph,
@@ -68,16 +77,23 @@ __all__ = [
     "distributed_count",
     "distributed_count_fn",
     "launch_device_worker",
+    "SupervisedPeel",
+    "PeelSupervisor",
 ]
 
 DIST_ENGINES = ("fused", "slice")
 
-# Prepended to every worker payload: lets the chaos matrix kill or hang
-# a specific launch attempt from the parent via the environment, before
-# the worker imports jax (so a "lost device" looks exactly like a dead
-# or wedged XLA client process).
+# Prepended to every worker payload: lets the chaos matrix kill, hang,
+# or delay a specific launch attempt from the parent via the
+# environment, before the worker imports jax (so a "lost device" looks
+# exactly like a dead or wedged XLA client process, and a "slow" device
+# like a straggling one — it still answers, just late).
 _WORKER_FAULT_PREAMBLE = """\
 import os as _os
+_slow = _os.environ.pop("REPRO_FAULT_DEVICE_SLOW", None)
+if _slow:
+    import time as _time
+    _time.sleep(float(_slow))
 _mode = _os.environ.pop("REPRO_FAULT_DEVICE_LOSS", None)
 if _mode == "hang":
     import time as _time
@@ -125,6 +141,7 @@ def launch_device_worker(
     if env:
         base_env.update(env)
     base_env.pop("REPRO_FAULT_DEVICE_LOSS", None)
+    base_env.pop("REPRO_FAULT_DEVICE_SLOW", None)
     payload = _WORKER_FAULT_PREAMBLE + code
     attempts = int(retries) + 1
     last_detail = ""
@@ -398,3 +415,359 @@ def distributed_count(
     else:
         out = fn(dg_repl, bounds_dev)
     return out, rg
+
+
+# ---------------------------------------------------------------------------
+# Distributed peeling: the supervised, checkpointable round loop
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SupervisedPeel:
+    """Result of one supervised distributed peeling run — the peel
+    numbers plus the recovery audit the frontend folds into its
+    :class:`~repro.core.resilience.ExecutionReport`."""
+
+    numbers: np.ndarray
+    rounds: int  # bucket rounds (range-mode ρ)
+    round_sizes: np.ndarray
+    sub_rounds: int  # re-settle iterations (== exact-mode ρ)
+    checkpoint_restores: int
+    device_reports: List[ExecutionReport]
+    devices_initial: int
+    devices_final: int
+    resumed_from_round: int  # 0 = fresh start
+
+
+@dataclasses.dataclass
+class _RoundState:
+    """Mutable supervisor state between checkpoints."""
+
+    b: np.ndarray  # remaining support (counts)
+    alive: np.ndarray  # bool per entity
+    out: np.ndarray  # peel numbers assigned so far
+    kappa: int
+    hi: int  # exclusive bound of the active geometric bucket
+    rounds: int
+    subr: int
+    sizes: list
+
+
+class PeelSupervisor:
+    """The distributed peeling round loop: coarse bucket selection on
+    the host, per-range fine passes fanned out across a worker mesh,
+    one checkpoint per committed round, and elastic recovery.
+
+    Round structure (Lakhotia-style two-phase, extending PR 5's range
+    mode): the **coarse phase** reads the geometric occupancy of the
+    remaining support and opens the lowest non-empty bucket
+    ``[2^(k-1), 2^k)``; the **fine phase** re-settles that bucket to
+    completion — peel every alive entity with support ≤ κ, fan the
+    frontier's subtract work out across the devices, reduce the
+    per-device partial decrements, advance κ — until the masked min
+    leaves the bucket. This replays exactly the κ trajectory of the
+    single-device engines (`peel._RoundAccounting`), so the numbers
+    are bitwise-identical by construction, not by luck.
+
+    Fan-out goes through ``pipeline.plan_partition`` over the peeling
+    plan's coarse entity tiles: device *i* owns a contiguous entity
+    range, every frontier item is routed by its **iterating entity**
+    (the peeled vertex for tips, the peeled edge for wings), and since
+    every subtract group is keyed by that entity, no group spans a
+    device — integer partial decrements add exactly in any order.
+
+    Recovery ladder, every path bitwise-identical or typed:
+
+      - **DeviceLost** (a worker dies mid-round): drop the device,
+        re-run ``plan_partition`` over the survivors, restore the last
+        committed :class:`~repro.core.checkpoint.RoundCheckpoint`, and
+        replay the round. Counted in ``checkpoint_restores``.
+      - **Straggler** (a device misses the per-round deadline derived
+        from the plan's wedge totals): re-dispatch its sub-plan to a
+        free worker and keep the first completion — both compute the
+        same integers, so whichever answers first is the answer.
+      - **Repeated failure**: a second consecutive deadline miss
+        raises :class:`~repro.core.resilience.StragglerTimeout`; all
+        devices lost raises
+        :class:`~repro.core.resilience.RungUnavailable`. Both descend
+        the caller's resilience ladder to the single-device engines —
+        never a silent partial decomposition.
+
+    The decomposition-specific pieces come in as two callables:
+    ``expand(a_ids, alive, peel) -> (owner, payload)`` enumerates one
+    round's frontier (``owner`` ascending iterating-entity ids;
+    ``payload`` a tuple of equal-length arrays), and
+    ``subtract(payload_slice) -> partial`` turns one device's slice
+    into a dense decrement array. Both are plain numpy — exact integer
+    arithmetic, bitwise-equal to the jitted single-device subtracts.
+    """
+
+    def __init__(
+        self,
+        workload: str,
+        plan,
+        counts: np.ndarray,
+        *,
+        expand: Callable,
+        subtract: Callable,
+        devices: int,
+        checkpoint=None,
+        round_deadline_s: Optional[float] = None,
+    ):
+        self.workload = workload
+        self.plan = plan
+        self.counts = np.asarray(counts)
+        self.expand = expand
+        self.subtract = subtract
+        self.devices = int(devices)
+        if self.devices < 1:
+            raise ValueError(f"devices must be >= 1, got {devices}")
+        if isinstance(checkpoint, _ckpt.CheckpointStore):
+            self.store = checkpoint
+        elif checkpoint is None:
+            self.store = _ckpt.CheckpointStore()
+        else:
+            self.store = _ckpt.CheckpointStore(directory=str(checkpoint))
+        # per-round deadline from the plan's static expansion totals:
+        # generous (never fires on a healthy CPU worker at bench scale)
+        # but bounded, so a wedged worker can't stall the run for the
+        # full subprocess timeout the way a 3600 s hang would
+        if round_deadline_s is None:
+            round_deadline_s = max(5.0, 1e-6 * float(plan.total_wedges))
+        self.round_deadline_s = float(round_deadline_s)
+        self.plan_hash = _ckpt.plan_hash(plan)
+        self._stats = {
+            d: {"rounds": 0, "redispatch": 0, "lost": 0}
+            for d in range(self.devices)
+        }
+
+    # -- partition ----------------------------------------------------
+
+    def _entity_ranges(self, live: list) -> list:
+        """Contiguous entity range per live device via plan_partition
+        over the surviving device count (the elastic re-partition)."""
+        parts = _pipeline.plan_partition(self.plan, len(live))
+        ranges = []
+        for p in parts:
+            if p.n_tiles:
+                ranges.append((int(p.bounds[0]), int(p.bounds[-1])))
+            else:
+                ranges.append((0, 0))
+        return ranges
+
+    # -- worker task --------------------------------------------------
+
+    def _device_task(self, round_ix: int, d: int, payload):
+        site = f"distributed.peel.round{round_ix}.dev{d}"
+        _faults.maybe_device_loss(site, device=d)
+        _faults.maybe_slow(site, device=d)
+        return self.subtract(payload)
+
+    # -- fine-pass fan-out with straggler re-dispatch -----------------
+
+    def _fanout(self, pool, round_ix: int, live: list, ranges: list,
+                owner: np.ndarray, payload: tuple) -> list:
+        slices = {}
+        for i, d in enumerate(live):
+            lo, hi = ranges[i]
+            s = int(np.searchsorted(owner, lo, side="left"))
+            e = int(np.searchsorted(owner, hi, side="left"))
+            slices[d] = tuple(a[s:e] for a in payload)
+        primary = {
+            d: pool.submit(self._device_task, round_ix, d, slices[d])
+            for d in live
+        }
+        fut_dev = {f: d for d, f in primary.items()}
+        pending = dict(primary)
+        dups: dict = {}
+        results: dict = {}
+        deadline = time.monotonic() + self.round_deadline_s
+        while pending:
+            waitset = [
+                f
+                for d in pending
+                for f in (pending[d], dups.get(d))
+                if f is not None
+            ]
+            timeout = max(0.0, deadline - time.monotonic())
+            done, _ = _cf.wait(
+                waitset, timeout=timeout,
+                return_when=_cf.FIRST_COMPLETED,
+            )
+            progressed = False
+            for f in done:
+                d = fut_dev[f]
+                if d in results:
+                    continue  # the twin already answered
+                # first completion wins; a raising future (DeviceLost)
+                # surfaces here and the run loop handles recovery
+                results[d] = f.result()
+                self._stats[d]["rounds"] += 1
+                pending.pop(d, None)
+                dups.pop(d, None)
+                progressed = True
+            if progressed:
+                deadline = time.monotonic() + self.round_deadline_s
+                continue
+            if time.monotonic() < deadline:
+                continue
+            # deadline passed, nothing finished: every still-pending
+            # device is a straggler — re-dispatch once to a free
+            # worker slot; a second miss is a typed failure
+            for d in sorted(pending):
+                if d in dups:
+                    raise StragglerTimeout(
+                        f"{self.workload}: device {d} missed the "
+                        f"{self.round_deadline_s:.3f}s round deadline "
+                        f"twice (round {round_ix})",
+                        device=d,
+                        deadline_s=self.round_deadline_s,
+                    )
+                nf = pool.submit(
+                    self._device_task, round_ix, d, slices[d]
+                )
+                dups[d] = nf
+                fut_dev[nf] = d
+                self._stats[d]["redispatch"] += 1
+            deadline = time.monotonic() + self.round_deadline_s
+        # fixed ascending-device reduction order (immaterial for the
+        # integer sums, deterministic for everything else)
+        return [results[d] for d in sorted(results)]
+
+    # -- the round loop -----------------------------------------------
+
+    def _capture(self, st: _RoundState) -> None:
+        self.store.save(_ckpt.RoundCheckpoint.capture(
+            plan_hash=self.plan_hash,
+            round_index=st.rounds,
+            sub_rounds=st.subr,
+            kappa=st.kappa,
+            bucket_hi=st.hi,
+            support=st.b,
+            alive=st.alive,
+            numbers=st.out,
+            round_sizes=st.sizes,
+        ))
+
+    def _restore(self) -> _RoundState:
+        cp = self.store.restore(self.plan_hash)
+        b, alive, out = cp.arrays()
+        return _RoundState(
+            b=b, alive=alive, out=out, kappa=cp.kappa, hi=cp.bucket_hi,
+            rounds=cp.round_index, subr=cp.sub_rounds,
+            sizes=list(cp.round_sizes),
+        )
+
+    def _bucket_round(self, pool, st: _RoundState, live: list,
+                      ranges: list) -> None:
+        """One coarse bucket + its fine re-settle passes, mutating
+        ``st``. Raises DeviceLost/StragglerTimeout without committing —
+        the caller restores the last checkpoint."""
+        imax = np.iinfo(st.b.dtype).max
+        round_ix = st.rounds
+        mn = int(np.where(st.alive, st.b, imax).min())
+        st.kappa = max(st.kappa, mn)
+        # coarse phase: the masked min's bit length names the lowest
+        # non-empty geometric bucket [2^(k-1), 2^k) — identical to the
+        # device engines' occupancy-histogram selection (PR 5)
+        st.hi = 1 << int(mn).bit_length()
+        st.rounds += 1
+        st.sizes.append(0)
+        while True:
+            st.subr += 1
+            peel = st.alive & (st.b <= st.kappa)
+            a_ids = np.flatnonzero(peel)
+            st.out[a_ids] = st.kappa
+            st.alive[a_ids] = False
+            st.sizes[-1] += int(a_ids.size)
+            if not st.alive.any():
+                return
+            owner, payload = self.expand(a_ids, st.alive, peel)
+            if owner.size:
+                partials = self._fanout(
+                    pool, round_ix, live, ranges, owner, payload
+                )
+                for p in partials:
+                    st.b -= p.astype(st.b.dtype, copy=False)
+            mn = int(np.where(st.alive, st.b, imax).min())
+            if mn >= st.hi:
+                return  # min left the bucket: round committed
+            st.kappa = max(st.kappa, mn)
+
+    def run(self) -> SupervisedPeel:
+        n_out = int(self.counts.shape[0])
+        resumed_from = 0
+        if self.store.latest() is not None:
+            # cross-process resume: continue from the stored snapshot
+            st = self._restore()
+            self.store.restores -= 1  # construction-time, not recovery
+            resumed_from = st.rounds
+        else:
+            st = _RoundState(
+                b=self.counts.copy(),
+                alive=np.ones(n_out, dtype=bool),
+                out=np.zeros(n_out, dtype=self.counts.dtype),
+                kappa=0, hi=0, rounds=0, subr=0, sizes=[],
+            )
+            self._capture(st)  # round-0 snapshot anchors first rollback
+        live = list(range(self.devices))
+        ranges = self._entity_ranges(live)
+        restores = 0
+        pool = _cf.ThreadPoolExecutor(
+            max_workers=self.devices + 1,
+            thread_name_prefix="peel-dev",
+        )
+        try:
+            while st.alive.any():
+                try:
+                    self._bucket_round(pool, st, live, ranges)
+                except DeviceLost as e:
+                    d = e.device if e.device in live else live[0]
+                    live.remove(d)
+                    self._stats[d]["lost"] += 1
+                    if not live:
+                        raise RungUnavailable(
+                            f"{self.workload}: all {self.devices} mesh "
+                            f"devices lost (last: device {d}; "
+                            f"{restores} checkpoint restores)"
+                        ) from e
+                    st = self._restore()
+                    restores += 1
+                    ranges = self._entity_ranges(live)
+                    continue
+                self._capture(st)
+        finally:
+            pool.shutdown(wait=False, cancel_futures=True)
+        return SupervisedPeel(
+            numbers=st.out,
+            rounds=st.rounds,
+            round_sizes=np.asarray(st.sizes),
+            sub_rounds=st.subr,
+            checkpoint_restores=restores,
+            device_reports=self._device_reports(live),
+            devices_initial=self.devices,
+            devices_final=len(live),
+            resumed_from_round=resumed_from,
+        )
+
+    def _device_reports(self, live: list) -> List[ExecutionReport]:
+        reports = []
+        for d in range(self.devices):
+            s = self._stats[d]
+            outcome = "device-lost" if s["lost"] else "ok"
+            rep = ExecutionReport(
+                workload=f"{self.workload}@dev{d}",
+                requested="worker",
+            )
+            rep.attempts.append(RungAttempt(
+                rung=f"dev{d}",
+                outcome=outcome,
+                detail=(
+                    f"rounds={s['rounds']} "
+                    f"redispatches={s['redispatch']} losses={s['lost']}"
+                ),
+                retries=s["redispatch"],
+            ))
+            rep.final_rung = f"dev{d}" if d in live else None
+            reports.append(rep)
+        return reports

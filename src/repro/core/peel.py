@@ -163,6 +163,8 @@ import numpy as np
 
 from ..kernels import ops as _kops
 from ..testing import faults as _faults
+from . import distributed as _dist  # supervised mesh rung (acyclic:
+#   distributed never imports peel — the decomposition callables flow in)
 from . import resilience as _res
 from .count import count_butterflies, default_count_dtype
 from .graph import BipartiteGraph
@@ -809,6 +811,181 @@ def _peel_validator(counts: np.ndarray):
     return validate
 
 
+# ---------------------------------------------------------------------------
+# Distributed peeling rung: numpy frontier expansion + partial subtracts
+# for the supervised device mesh (distributed.PeelSupervisor). The
+# supervisor owns the round loop / checkpointing / recovery; the
+# decomposition-specific pieces below are the same enumerations as the
+# host engines (byte-for-byte the same index math) factored into
+# ``expand(a_ids, alive, peel) -> (owner, payload)`` and
+# ``subtract(payload_slice) -> partial`` callables. ``owner`` is the
+# ascending iterating-entity id per frontier item — the routing key of
+# the entity-range fan-out — and every subtract group is keyed by that
+# entity, so per-device partial decrement arrays add exactly.
+# ---------------------------------------------------------------------------
+
+
+def _resolve_devices(devices) -> int:
+    """``devices=`` knob: an int mesh width or ``"auto"`` (every
+    visible jax device — forced-host devices included)."""
+    if devices == "auto":
+        return len(jax.devices())
+    return int(devices)
+
+
+def _tips_expand_fn(off, nbr, base, n_side):
+    """PEEL-V frontier: 2-hop re-enumeration from the peeled set, the
+    distributed twin of ``_peel_tips_host``'s GET-V-WEDGES block."""
+
+    def expand(a_ids, alive, peel):
+        ga = a_ids + base
+        deg1 = off[ga + 1] - off[ga]
+        u1_rep = np.repeat(a_ids, deg1)
+        v_rep = nbr[_ranges(off[ga], deg1)]
+        deg2 = off[v_rep + 1] - off[v_rep]
+        u1_w = np.repeat(u1_rep, deg2)
+        u2_w = nbr[_ranges(off[v_rep], deg2)] - base
+        ok = alive[u2_w]
+        u1_w, u2_w = u1_w[ok], u2_w[ok]
+        return u1_w, (u1_w, u2_w)
+
+    return expand
+
+
+def _stored_expand_fn(woff, w_u2):
+    """WPEEL-V frontier: stored-wedge CSR lookup, the distributed twin
+    of ``_peel_tips_stored_host``'s per-round block."""
+
+    def expand(a_ids, alive, peel):
+        lens = woff[a_ids + 1] - woff[a_ids]
+        pos = _ranges(woff[a_ids], lens)
+        u1_w = np.repeat(a_ids, lens)
+        u2_w = w_u2[pos]
+        ok = alive[u2_w]
+        u1_w, u2_w = u1_w[ok], u2_w[ok]
+        return u1_w, (u1_w, u2_w)
+
+    return expand
+
+
+def _pair_subtract_fn(n_side, dtype):
+    """Tip partial subtract: group one device's (u1, u2) wedge pairs
+    and accumulate C(d, 2) per u2 into a dense partial — the numpy
+    mirror of ``_subtract_tile``'s consume step, with ``dec`` computed
+    in the count dtype so wraparound semantics match the device
+    engines bit for bit."""
+    dtype = np.dtype(dtype)
+
+    def subtract(payload):
+        u1, u2 = payload
+        partial = np.zeros(n_side, dtype=dtype)
+        if u1.size:
+            key = u1.astype(np.int64) * np.int64(n_side) + u2
+            uniq, cnt = np.unique(key, return_counts=True)
+            d = cnt.astype(dtype)
+            dec = d * (d - 1) // 2
+            np.add.at(partial, uniq % np.int64(n_side), dec)
+        return partial
+
+    return subtract
+
+
+def _wings_expand_fn(g, off, nbr, uid):
+    """PEEL-E frontier: per-butterfly triple location via
+    min-degree-side intersections — the distributed twin of
+    ``_peel_wings_host``'s level-1/level-2 block. The supervisor clears
+    ``alive`` before expanding, so the paper's presence rule
+    reconstructs the pre-round mask as ``alive | peel``."""
+    n, m = g.n, g.m
+    deg = np.diff(off)
+    eu = g.edges[:, 0].astype(np.int64)
+    ev = (g.edges[:, 1] + g.n_u).astype(np.int64)
+    src = np.repeat(np.arange(n), deg)
+    comp = src * np.int64(n) + nbr
+    empty = np.empty(0, dtype=np.int64)
+
+    def expand(a_ids, alive, peel):
+        alive_prev = alive | peel
+
+        def present(x, a):
+            return alive_prev[x] & (~peel[x] | (x > a))
+
+        # level 1: (a=(u1,v1), u2 in N(v1))
+        u1s, v1s = eu[a_ids], ev[a_ids]
+        d1 = deg[v1s]
+        a_rep = np.repeat(a_ids, d1)
+        u1_rep = np.repeat(u1s, d1)
+        v1_rep = np.repeat(v1s, d1)
+        pos_b = _ranges(off[v1s], d1)
+        u2_rep = nbr[pos_b]
+        b_edge = uid[pos_b]
+        keep = (u2_rep != u1_rep) & present(b_edge, a_rep)
+        a_rep, u1_rep, v1_rep, u2_rep, b_edge = (
+            a_rep[keep],
+            u1_rep[keep],
+            v1_rep[keep],
+            u2_rep[keep],
+            b_edge[keep],
+        )
+        if a_rep.size == 0:
+            return empty, (np.empty((0, 3), dtype=np.int64),)
+        # level 2: scan the smaller of N(u1), N(u2)
+        small = np.where(deg[u1_rep] <= deg[u2_rep], u1_rep, u2_rep)
+        other = np.where(deg[u1_rep] <= deg[u2_rep], u2_rep, u1_rep)
+        d2 = deg[small]
+        a2 = np.repeat(a_rep, d2)
+        v1_2 = np.repeat(v1_rep, d2)
+        b_2 = np.repeat(b_edge, d2)
+        oth2 = np.repeat(other, d2)
+        pos_s = _ranges(off[small], d2)
+        v2 = nbr[pos_s]
+        e_small = uid[pos_s]
+        # membership: (other, v2) must be an edge
+        p = np.searchsorted(comp, oth2 * np.int64(n) + v2)
+        p = np.minimum(p, comp.shape[0] - 1)
+        hit = comp[p] == oth2 * np.int64(n) + v2
+        e_other = uid[p]
+        # c = (u1, v2), d_edge = (u2, v2): map small/other back
+        small_is_u1 = np.repeat(deg[u1_rep] <= deg[u2_rep], d2)
+        c_edge = np.where(small_is_u1, e_small, e_other)
+        d_edge = np.where(small_is_u1, e_other, e_small)
+        ok = (
+            hit
+            & (v2 != v1_2)
+            & present(c_edge, a2)
+            & present(d_edge, a2)
+        )
+        tri = np.stack([b_2, c_edge, d_edge], axis=1)[ok]
+        return a2[ok], (tri,)
+
+    return expand
+
+
+def _tri_subtract_fn(m, dtype):
+    """Wing partial subtract: -1 per still-present edge of each located
+    butterfly (the host engine's raw triple scatter), accumulated in
+    the count dtype."""
+    dtype = np.dtype(dtype)
+
+    def subtract(payload):
+        (tri,) = payload
+        partial = np.zeros(m, dtype=dtype)
+        if tri.size:
+            np.add.at(partial, tri.ravel(), dtype.type(1))
+        return partial
+
+    return subtract
+
+
+def _merge_distributed(report: "_res.ExecutionReport", sp) -> None:
+    """Fold a :class:`~repro.core.distributed.SupervisedPeel` audit
+    into the parent ladder report: rollback count plus one child row
+    per mesh device."""
+    report.checkpoint_restores += sp.checkpoint_restores
+    for child in sp.device_reports:
+        report.merge_child(child)
+
+
 def _peel_tips_host(g, counts, side, aggregation, hash_bits, subtract,
                     tile_budget, peel_mode, off, nbr, w2) -> PeelResult:
     """Host tip round loop (PEEL-V's bottom rung): whole-frontier 2-hop
@@ -873,6 +1050,9 @@ def peel_tips(
     capacity_schedule: str = "fixed",
     tile_budget: Optional[int] = None,
     peel_mode: str = "exact",
+    devices=None,
+    checkpoint=None,
+    round_deadline_s: Optional[float] = None,
     resilience=None,
 ) -> PeelResult:
     """Tip decomposition (PEEL-V, Alg. 5).
@@ -904,11 +1084,31 @@ def peel_tips(
     bucket rounds, re-settle iterations in ``sub_rounds``. All knob
     combinations produce bitwise-identical numbers.
 
+    ``devices=N`` (or ``"auto"`` = every visible jax device) inserts
+    the **distributed** rung on top of the ladder: the supervised,
+    checkpointable bucket-range round loop of
+    :class:`~repro.core.distributed.PeelSupervisor` — coarse bucket
+    selection on the host, each range's fine pass fanned out across N
+    workers along the plan's entity tiles (``pipeline.plan_partition``),
+    per-device partial subtracts reduced exactly. Always runs
+    bucket-range rounds (``rounds``/``sub_rounds`` follow
+    ``peel_mode="range"`` semantics); numbers are bitwise-identical to
+    every single-device engine regardless. ``checkpoint`` persists the
+    supervisor's per-round snapshots (a directory path or a
+    :class:`~repro.core.checkpoint.CheckpointStore`; default
+    in-memory), enabling lost-device rollback and cross-process
+    resume; ``round_deadline_s`` overrides the per-round straggler
+    deadline (default derived from the plan's wedge totals). A lost
+    device triggers restore + elastic re-partition over the survivors;
+    losing every device (or a twice-missed deadline) descends the
+    ladder to the single-device rungs below.
+
     ``resilience`` selects the degradation policy (``None``/``True`` =
     default ladder, ``False`` = no validation/retries/report, or a
     :class:`~repro.core.resilience.ResiliencePolicy`); when the report
-    is attached, ``result.report`` records the ``device -> host``
-    descent path, shrink-retries, and outcomes.
+    is attached, ``result.report`` records the
+    ``distributed -> device -> host`` descent path, shrink-retries,
+    checkpoint restores, per-device worker rows, and outcomes.
     """
     _check_engine(engine)
     _check_knobs(aggregation, subtract, decrease_key, capacity_schedule,
@@ -943,9 +1143,6 @@ def peel_tips(
             tile_budget, peel_mode, off, nbr, w2,
         )
 
-    rungs = [_res.Rung("host", run_host, shrinkable=False)]
-    if engine == "device":
-        rungs.insert(0, _res.Rung("device", run_device))
     plan = _plan_peel(
         "peel_tips",
         expansion="peel_tips_2hop",
@@ -961,10 +1158,37 @@ def peel_tips(
              else int(tile_budget)),
         ),
         hash_bits=hash_bits,
+        entity_work=w2,
     )
+    dist_audit: list = []
+
+    def run_distributed(shrinks: int):
+        _faults.maybe_oom("peel_tips.distributed")
+        sup = _dist.PeelSupervisor(
+            "peel_tips", plan, counts,
+            expand=_tips_expand_fn(off, nbr, base, n_side),
+            subtract=_pair_subtract_fn(n_side, counts.dtype),
+            devices=_resolve_devices(devices),
+            checkpoint=checkpoint,
+            round_deadline_s=round_deadline_s,
+        )
+        sp = sup.run()
+        dist_audit.append(sp)
+        return PeelResult(sp.numbers, side, sp.rounds, sp.round_sizes,
+                          sub_rounds=sp.sub_rounds)
+
+    rungs = [_res.Rung("host", run_host, shrinkable=False)]
+    if engine == "device":
+        rungs.insert(0, _res.Rung("device", run_device))
+    if devices is not None:
+        rungs.insert(
+            0, _res.Rung("distributed", run_distributed, shrinkable=False)
+        )
     out, report = _execute_ladder(
         "peel_tips", policy, rungs, _peel_validator(counts), plan=plan
     )
+    if dist_audit:
+        _merge_distributed(report, dist_audit[-1])
     return policy.attach(out, report)
 
 
@@ -982,6 +1206,9 @@ def peel_tips_stored(
     capacity_schedule: str = "fixed",
     tile_budget: Optional[int] = None,
     peel_mode: str = "exact",
+    devices=None,
+    checkpoint=None,
+    round_deadline_s: Optional[float] = None,
     resilience=None,
 ) -> PeelResult:
     """WPEEL-V (paper Alg. 7): store all side-oriented wedges upfront,
@@ -996,7 +1223,9 @@ def peel_tips_stored(
     device engine recovers each tile straight from the stored-wedge
     CSR — no per-round frontier buffer exists at all, so
     ``max_frontier`` (and capacity overflow) only applies to
-    ``subtract="materialize"``. ``resilience`` as in :func:`peel_tips`.
+    ``subtract="materialize"``. ``devices``/``checkpoint``/
+    ``round_deadline_s`` (the supervised distributed rung) and
+    ``resilience`` as in :func:`peel_tips`.
     """
     _check_engine(engine)
     _check_knobs(aggregation, subtract, decrease_key, capacity_schedule,
@@ -1028,9 +1257,6 @@ def peel_tips_stored(
             tile_budget, peel_mode, woff, w_u2,
         )
 
-    rungs = [_res.Rung("host", run_host, shrinkable=False)]
-    if engine == "device":
-        rungs.insert(0, _res.Rung("device", run_device))
     plan = _plan_peel(
         "peel_tips_stored",
         expansion="peel_tips_stored",
@@ -1047,10 +1273,37 @@ def peel_tips_stored(
             ("stored_wedges", int(woff[-1])),
         ),
         hash_bits=hash_bits,
+        entity_work=np.diff(woff),
     )
+    dist_audit: list = []
+
+    def run_distributed(shrinks: int):
+        _faults.maybe_oom("peel_tips_stored.distributed")
+        sup = _dist.PeelSupervisor(
+            "peel_tips_stored", plan, counts,
+            expand=_stored_expand_fn(woff, w_u2),
+            subtract=_pair_subtract_fn(n_side, counts.dtype),
+            devices=_resolve_devices(devices),
+            checkpoint=checkpoint,
+            round_deadline_s=round_deadline_s,
+        )
+        sp = sup.run()
+        dist_audit.append(sp)
+        return PeelResult(sp.numbers, side, sp.rounds, sp.round_sizes,
+                          sub_rounds=sp.sub_rounds)
+
+    rungs = [_res.Rung("host", run_host, shrinkable=False)]
+    if engine == "device":
+        rungs.insert(0, _res.Rung("device", run_device))
+    if devices is not None:
+        rungs.insert(
+            0, _res.Rung("distributed", run_distributed, shrinkable=False)
+        )
     out, report = _execute_ladder(
         "peel_tips_stored", policy, rungs, _peel_validator(counts), plan=plan
     )
+    if dist_audit:
+        _merge_distributed(report, dist_audit[-1])
     return policy.attach(out, report)
 
 
@@ -1383,6 +1636,7 @@ def _peel_wings_device_run(
     peel_mode: str = "exact",
     budget_shrinks: int = 0,
     note: Optional[list] = None,
+    w_totals=None,
 ) -> Optional[PeelResult]:
     """Capacity-plan and run the device wing loop; one ``device_get``
     per segment (one total under the fixed schedule). Returns None when
@@ -1405,7 +1659,9 @@ def _peel_wings_device_run(
     if 2 * m >= _I32_MAX:
         note.append("device engine unavailable: edge slots beyond int32")
         return None
-    eu, ev, l1, l2 = _wing_work_totals(g, off, nbr)
+    eu, ev, l1, l2 = (
+        _wing_work_totals(g, off, nbr) if w_totals is None else w_totals
+    )
     lvl1 = int(l1.sum())
     lvl2 = int(l2.sum())
     if lvl1 >= _I32_MAX or lvl2 >= _I32_MAX:
@@ -1511,6 +1767,9 @@ def peel_wings(
     capacity_schedule: str = "fixed",
     tile_budget: Optional[int] = None,
     peel_mode: str = "exact",
+    devices=None,
+    checkpoint=None,
+    round_deadline_s: Optional[float] = None,
     resilience=None,
 ) -> PeelResult:
     """Wing decomposition (PEEL-E, Alg. 6).
@@ -1538,7 +1797,9 @@ def peel_wings(
     capacity overflow) only applies to ``subtract="materialize"``.
     Counts at or beyond INT32_MAX, expansion totals beyond int32, or a
     bounded-buffer overflow transparently fall back to the host loop.
-    ``resilience`` as in :func:`peel_tips`.
+    ``devices``/``checkpoint``/``round_deadline_s`` (the supervised
+    distributed rung, fanning the per-edge triple space out along edge
+    tiles) and ``resilience`` as in :func:`peel_tips`.
     """
     _check_engine(engine)
     _check_knobs(aggregation, subtract, decrease_key, capacity_schedule,
@@ -1553,6 +1814,9 @@ def peel_wings(
         counts = r.per_edge
     counts = np.asarray(counts).copy()
     off, nbr, uid = _csr(g)
+    # per-edge triple-space totals: shared between the device planner,
+    # the peeling plan's entity tiles, and the distributed fan-out
+    w_totals = _wing_work_totals(g, off, nbr)
 
     def run_device(shrinks: int):
         _faults.maybe_oom("peel_wings.device")
@@ -1564,6 +1828,7 @@ def peel_wings(
             (off, nbr, uid), subtract=subtract, decrease_key=decrease_key,
             capacity_schedule=capacity_schedule, tile_budget=tile_budget,
             peel_mode=peel_mode, budget_shrinks=shrinks, note=notes,
+            w_totals=w_totals,
         )
         return _res.require_rung(res, notes)
 
@@ -1571,9 +1836,6 @@ def peel_wings(
         _faults.maybe_oom("peel_wings.host")
         return _peel_wings_host(g, counts, off, nbr, uid, peel_mode)
 
-    rungs = [_res.Rung("host", run_host, shrinkable=False)]
-    if engine == "device":
-        rungs.insert(0, _res.Rung("device", run_device))
     plan = _plan_peel(
         "peel_wings",
         expansion="peel_wings_triples",
@@ -1589,10 +1851,37 @@ def peel_wings(
              else int(tile_budget)),
         ),
         hash_bits=hash_bits,
+        entity_work=w_totals[3],
     )
+    dist_audit: list = []
+
+    def run_distributed(shrinks: int):
+        _faults.maybe_oom("peel_wings.distributed")
+        sup = _dist.PeelSupervisor(
+            "peel_wings", plan, counts,
+            expand=_wings_expand_fn(g, off, nbr, uid),
+            subtract=_tri_subtract_fn(g.m, counts.dtype),
+            devices=_resolve_devices(devices),
+            checkpoint=checkpoint,
+            round_deadline_s=round_deadline_s,
+        )
+        sp = sup.run()
+        dist_audit.append(sp)
+        return PeelResult(sp.numbers, None, sp.rounds, sp.round_sizes,
+                          sub_rounds=sp.sub_rounds)
+
+    rungs = [_res.Rung("host", run_host, shrinkable=False)]
+    if engine == "device":
+        rungs.insert(0, _res.Rung("device", run_device))
+    if devices is not None:
+        rungs.insert(
+            0, _res.Rung("distributed", run_distributed, shrinkable=False)
+        )
     out, report = _execute_ladder(
         "peel_wings", policy, rungs, _peel_validator(counts), plan=plan
     )
+    if dist_audit:
+        _merge_distributed(report, dist_audit[-1])
     return policy.attach(out, report)
 
 

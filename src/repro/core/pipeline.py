@@ -96,6 +96,7 @@ __all__ = [
     "DENSITY_HASH_THRESHOLD",
     "plan_count",
     "plan_peel",
+    "peel_tile_bounds",
     "plan_partition",
     "partition_tile_array",
     # execute: counting
@@ -396,6 +397,53 @@ def plan_count(
     )
 
 
+def peel_tile_bounds(
+    entity_work, n_tiles: int = 64
+) -> tuple:
+    """Cut entity-aligned coarse tiles over a peeling decomposition's
+    static per-entity expansion totals (per-vertex 2-hop totals for
+    tips, stored-wedge row lengths for WPEEL-V, per-edge triple totals
+    for wings).
+
+    Unlike counting tiles — per-round buffers the executor streams —
+    peeling tiles are the *partition granularity*: each tile is a
+    contiguous run of iterating-entity ids with its summed worst-case
+    expansion work, and ``plan_partition`` balances whole tiles across
+    devices. Entity alignment is the same invariant as the counting
+    planner's vertex alignment: every subtract group is keyed by its
+    iterating entity, so no group spans a tile (or a device) and the
+    per-device partial decrements add exactly.
+
+    Boundaries come from ``n_tiles`` equal-work quantiles of the work
+    prefix sum (deduplicated — a single heavy entity gets a solo tile).
+    Returns ``(bounds, tile_wedges)`` tuples ready for
+    :class:`WedgePlan`.
+    """
+    work = np.asarray(entity_work, dtype=np.int64)
+    n = int(work.shape[0])
+    if n == 0:
+        return (), ()
+    coff = np.concatenate([[0], np.cumsum(work)])
+    total = int(coff[-1])
+    k = max(1, min(int(n_tiles), n))
+    if total == 0:
+        # no expansion work anywhere: uniform entity-count tiles keep
+        # the partition well-defined (devices still get entity ranges)
+        cuts = np.unique(
+            np.linspace(0, n, k + 1).astype(np.int64)
+        )
+    else:
+        targets = (np.arange(1, k) * total) / k
+        cuts = np.searchsorted(coff, targets, side="left")
+        cuts = np.unique(np.concatenate([[0], cuts, [n]]))
+    bounds = tuple(int(b) for b in cuts)
+    tile_wedges = tuple(
+        int(coff[bounds[i + 1]] - coff[bounds[i]])
+        for i in range(len(bounds) - 1)
+    )
+    return bounds, tile_wedges
+
+
 def plan_peel(
     kind: str,
     *,
@@ -407,13 +455,22 @@ def plan_peel(
     capacity: Sequence = (),
     budget: int = I32_MAX,
     hash_bits: Optional[int] = None,
+    entity_work=None,
+    coarse_tiles: int = 64,
 ) -> WedgePlan:
-    """Envelope plan for a peeling decomposition: the expansion id,
-    accumulator spec, and planned capacity segments. Per-round tile
-    boundaries are data-dependent (the frontier), so they stay
-    in-graph (``stream_tiles``/``aligned_tile_end``) — the envelope is
-    what the ExecutionReport records and what distributed peeling
-    (ROADMAP item 1) will extend with real tile lists."""
+    """Plan for a peeling decomposition: the expansion id, accumulator
+    spec, planned capacity segments — and, when the frontend passes its
+    static per-entity expansion totals as ``entity_work``, real coarse
+    tile bounds (:func:`peel_tile_bounds`) so ``plan_partition`` can
+    split the decomposition across devices. Fine per-round tile
+    boundaries remain data-dependent (the frontier) and stay in-graph
+    (``stream_tiles``/``aligned_tile_end``); the coarse tiles are the
+    entity-aligned partition granularity the distributed supervisor
+    fans out over."""
+    if entity_work is not None:
+        bounds, tile_wedges = peel_tile_bounds(entity_work, coarse_tiles)
+    else:
+        bounds, tile_wedges = (), ()
     return WedgePlan(
         kind=kind,
         expansion=expansion,
@@ -421,8 +478,8 @@ def plan_peel(
         engine=engine,
         aggregation=aggregation,
         tile_aggregation=(),
-        bounds=(),
-        tile_wedges=(),
+        bounds=bounds,
+        tile_wedges=tile_wedges,
         chunk_cap=0,
         w_start=0,
         capacity=tuple((str(k), int(v)) for k, v in capacity),
@@ -444,19 +501,20 @@ def plan_partition(plan: WedgePlan, n: int) -> list:
     the ideal share (the wedge-aware batching heuristic promoted to the
     partition strategy, as in the former ``plan_fused_partition``).
 
-    Tiles are never split — they are vertex-aligned, so assigning each
-    whole tile to one device preserves the invariant that no
-    endpoint-pair group spans a device, and the per-device partial
-    counts add exactly (bitwise — integer adds commute). Returns ``n``
-    sub-plans whose ``tile_flat_bounds()`` concatenate to the parent's;
-    devices beyond the tile count get empty plans.
+    Tiles are never split — they are vertex-aligned (entity-aligned for
+    peeling plans), so assigning each whole tile to one device
+    preserves the invariant that no endpoint-pair group spans a device,
+    and the per-device partial counts add exactly (bitwise — integer
+    adds commute). Returns ``n`` sub-plans whose ``tile_flat_bounds()``
+    concatenate to the parent's; devices beyond the tile count get
+    empty plans. A plan with no tiles at all (an empty workload, or a
+    peeling plan built without ``entity_work``) partitions into ``n``
+    empty sub-plans — every device sees an empty tile list, not an
+    error.
     """
-    if plan.n_tiles == 0:
-        raise ValueError(
-            f"plan kind={plan.kind!r} has no tile list to partition "
-            "(peeling envelope plans gain tiles with ROADMAP item 1)"
-        )
     n = max(int(n), 1)
+    if plan.n_tiles == 0:
+        return [dataclasses.replace(plan) for _ in range(n)]
     tw = np.asarray(plan.tile_wedges, np.int64)
     pref = np.concatenate([[0], np.cumsum(tw)])
     total = int(pref[-1])

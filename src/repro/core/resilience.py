@@ -48,6 +48,8 @@ __all__ = [
     "CapacityOverflow",
     "AccumulatorOverflowRisk",
     "DeviceLost",
+    "StragglerTimeout",
+    "CheckpointCorrupt",
     "ResourceExhausted",
     "RungUnavailable",
     "ResultInvariantViolation",
@@ -100,6 +102,29 @@ class DeviceLost(ResilienceError, RuntimeError):
         self.attempts = attempts
 
 
+class StragglerTimeout(ResilienceError, TimeoutError):
+    """A device's sub-plan missed its per-round deadline twice — once
+    on the original worker and once on the first-completion
+    re-dispatch. The distributed supervisor treats one miss as a
+    straggler (duplicate the work, keep whichever finishes first); a
+    second consecutive miss means the round cannot make progress on
+    this mesh, so the ladder descends to the single-device rungs.
+    Carries the device index and the deadline that was missed."""
+
+    def __init__(self, message: str, *, device: Optional[int] = None,
+                 deadline_s: float = 0.0):
+        super().__init__(message)
+        self.device = device
+        self.deadline_s = deadline_s
+
+
+class CheckpointCorrupt(ResilienceError, ValueError):
+    """A round checkpoint failed its integrity check (digest mismatch,
+    wrong plan hash, unparseable payload) — recovery from it would risk
+    a silently wrong decomposition, so the supervisor refuses and the
+    ladder descends to a rung that needs no checkpoint."""
+
+
 class ResourceExhausted(ResilienceError, MemoryError):
     """Device memory exhaustion (mirrors XLA's RESOURCE_EXHAUSTED
     status). The ladder retries the same rung with a halved budget
@@ -150,7 +175,8 @@ class RungAttempt:
 
     rung: str
     outcome: str  # ok | unavailable | capacity-overflow |
-    #               resource-exhausted | invalid-result
+    #               resource-exhausted | invalid-result |
+    #               straggler-timeout | checkpoint-corrupt
     detail: str = ""
     retries: int = 0  # RESOURCE_EXHAUSTED retries burned on this rung
     budget_shrinks: int = 0  # budget halvings applied by those retries
@@ -167,6 +193,14 @@ class ExecutionReport:
     attempts: List[RungAttempt] = dataclasses.field(default_factory=list)
     final_rung: Optional[str] = None  # rung that produced the result
     plan: Optional[str] = None  # WedgePlan.summary() (set by the pipeline)
+    checkpoint_restores: int = 0  # supervisor rollbacks to a snapshot
+    # Per-device worker reports from a distributed rung. The supervisor
+    # produces one small report per mesh device (rounds served, losses,
+    # straggler re-dispatches); the parent frontend merges them here so
+    # the audit trail survives instead of dying with the worker.
+    children: List["ExecutionReport"] = dataclasses.field(
+        default_factory=list
+    )
 
     @property
     def degraded(self) -> bool:
@@ -174,7 +208,14 @@ class ExecutionReport:
 
     @property
     def retries(self) -> int:
-        return sum(a.retries for a in self.attempts)
+        return sum(a.retries for a in self.attempts) + sum(
+            c.retries for c in self.children
+        )
+
+    def merge_child(self, child: "ExecutionReport") -> None:
+        """Aggregate one per-device worker report into this run's
+        audit trail (shown as an indented row by ``summary()``)."""
+        self.children.append(child)
 
     @property
     def final_budget_shrinks(self) -> int:
@@ -191,8 +232,14 @@ class ExecutionReport:
             for a in self.attempts
         )
         base = f"{self.workload}: requested={self.requested} {path}"
+        if self.checkpoint_restores:
+            base += f" restores={self.checkpoint_restores}"
         if self.plan:
             base += f" | plan: {self.plan}"
+        if self.children:
+            base += "".join(
+                "\n  " + child.summary() for child in self.children
+            )
         return base
 
 
@@ -240,7 +287,8 @@ class ResiliencePolicy:
         """Run ``rungs`` in order until one returns a valid result.
 
         Returns ``(result, report)``. Degradable failures
-        (:class:`CapacityOverflow`, :class:`RungUnavailable`, exhausted
+        (:class:`CapacityOverflow`, :class:`RungUnavailable`,
+        :class:`StragglerTimeout`, :class:`CheckpointCorrupt`, exhausted
         RESOURCE_EXHAUSTED retries, invariant violations) descend;
         input/world errors (:class:`GraphValidationError`,
         :class:`AccumulatorOverflowRisk`, :class:`DeviceLost`) and
@@ -266,6 +314,21 @@ class ResiliencePolicy:
                 except CapacityOverflow as e:
                     report.attempts.append(RungAttempt(
                         rung.name, "capacity-overflow", str(e), retries,
+                        shrinks))
+                    last_err = e
+                    break
+                except StragglerTimeout as e:
+                    # a round missed its deadline twice: the mesh can't
+                    # make progress — descend to the single-device rungs
+                    report.attempts.append(RungAttempt(
+                        rung.name, "straggler-timeout", str(e), retries,
+                        shrinks))
+                    last_err = e
+                    break
+                except CheckpointCorrupt as e:
+                    # recovery state is unusable; rungs below need none
+                    report.attempts.append(RungAttempt(
+                        rung.name, "checkpoint-corrupt", str(e), retries,
                         shrinks))
                     last_err = e
                     break

@@ -18,10 +18,20 @@ __all__ = [
     "make_production_mesh",
     "make_test_mesh",
     "abstract_mesh",
+    "available_devices",
     "HAS_AXIS_TYPE",
 ]
 
 HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+
+
+def available_devices() -> int:
+    """Visible device count (forced-host devices included) — the mesh
+    width benchmarks and tests hand to the ``devices=`` knob of the
+    distributed peeling supervisor. Launch-layer only: core code takes
+    an explicit integer (or resolves ``"auto"`` itself) so it never
+    imports this module."""
+    return len(jax.devices())
 
 
 def _axis_type_kwargs(n_axes: int) -> dict:

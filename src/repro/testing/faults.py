@@ -17,7 +17,13 @@ Injection points are threaded through the dispatch layers:
     the ladder must descend), and ``maybe_poison`` on the device
     engines' count buffers.
   - ``core/distributed.py``: ``worker_env`` marks a subprocess device
-    worker for death (exit or hang) on its next launch attempt.
+    worker for death (exit or hang) or a configurable startup delay
+    (``slow``) on its next launch attempt; the in-process peeling
+    supervisor asks ``maybe_device_loss`` / ``maybe_slow`` at every
+    per-device round dispatch (sites
+    ``distributed.peel.round<r>.dev<d>``), which is how the chaos
+    matrix kills a worker at an exact round boundary or makes one
+    device straggle past the supervisor's per-round deadline.
 
 **Hook-placement rule (jit caches!):** value-level hooks
 (``maybe_poison``, overrides) are only installed where data is
@@ -52,6 +58,8 @@ __all__ = [
     "should_fire",
     "maybe_oom",
     "maybe_poison",
+    "maybe_device_loss",
+    "maybe_slow",
     "hash_bits_override",
     "capacity_override",
     "worker_env",
@@ -69,6 +77,7 @@ KINDS = (
     "hash_overflow",  # shrink the bounded-probe hash table
     "capacity_overflow",  # shrink the frontier/tile capacity budget
     "device_loss",  # kill/hang the subprocess device worker
+    "slow",  # delay a device worker (straggler; configurable seconds)
 )
 
 
@@ -193,17 +202,12 @@ def capacity_override(site: str, default) -> Any:
     return int(f.params.get("budget", 1))
 
 
-def worker_env(env: dict, *, device: int = 0,
-               site: str = "distributed.worker") -> dict:
-    """``device_loss`` fault: mark a subprocess device worker for death
-    on this launch attempt via the env var its preamble checks —
-    ``mode="exit"`` (default) dies immediately with a nonzero code,
-    ``mode="hang"`` sleeps past the per-attempt timeout. A ``device``
-    param restricts the fault to one device index."""
-    if not _active:
-        return env
+def _fire_device_fault(kind: str, site: str, device: int) -> Optional[Fault]:
+    """Match-and-consume for per-device fault kinds: like
+    :func:`should_fire` plus an optional ``device`` param filter so one
+    armed fault can target a single mesh device."""
     for f in _active:
-        if f.kind != "device_loss":
+        if f.kind != kind:
             continue
         if f.site is not None and f.site not in site:
             continue
@@ -213,7 +217,62 @@ def worker_env(env: dict, *, device: int = 0,
             continue
         f.fired += 1
         f.hits.append(site)
+        return f
+    return None
+
+
+def maybe_device_loss(site: str, *, device: int = 0) -> None:
+    """``device_loss`` fault, in-process flavor: raise a typed
+    :class:`~repro.core.resilience.DeviceLost` at a supervisor dispatch
+    site (the subprocess flavor is :func:`worker_env`). Site labels
+    carry the round and device index
+    (``distributed.peel.round<r>.dev<d>``), so ``site="round3"`` kills
+    exactly one round boundary and ``device=1`` exactly one device."""
+    if not _active:
+        return
+    f = _fire_device_fault("device_loss", site, device)
+    if f is not None:
+        from ..core.resilience import DeviceLost
+
+        raise DeviceLost(
+            f"injected device loss at {site}", device=device, attempts=1
+        )
+
+
+def maybe_slow(site: str, *, device: int = 0) -> None:
+    """``slow`` fault, in-process flavor: sleep ``delay`` seconds
+    (default 0.25) at a supervisor dispatch site — a straggler the
+    per-round deadline must catch, distinct from the 3600 s ``hang``
+    that only a subprocess timeout can interrupt."""
+    if not _active:
+        return
+    f = _fire_device_fault("slow", site, device)
+    if f is not None:
+        import time
+
+        time.sleep(float(f.params.get("delay", 0.25)))
+
+
+def worker_env(env: dict, *, device: int = 0,
+               site: str = "distributed.worker") -> dict:
+    """``device_loss`` / ``slow`` faults, subprocess flavor: mark a
+    device worker's next launch attempt via the env vars its preamble
+    checks. ``device_loss`` → ``mode="exit"`` (default) dies
+    immediately with a nonzero code, ``mode="hang"`` sleeps past the
+    per-attempt timeout; ``slow`` → the worker sleeps ``delay``
+    seconds (default 0.25) before running its payload. A ``device``
+    param restricts either fault to one device index."""
+    if not _active:
+        return env
+    f = _fire_device_fault("device_loss", site, device)
+    if f is not None:
         env = dict(env)
         env["REPRO_FAULT_DEVICE_LOSS"] = str(f.params.get("mode", "exit"))
         return env
+    f = _fire_device_fault("slow", site, device)
+    if f is not None:
+        env = dict(env)
+        env["REPRO_FAULT_DEVICE_SLOW"] = str(
+            float(f.params.get("delay", 0.25))
+        )
     return env

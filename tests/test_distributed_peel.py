@@ -1,0 +1,358 @@
+"""Fault-tolerant distributed peeling: the supervised, checkpointable
+bucket-range round loop (``distributed.PeelSupervisor``).
+
+Parity discipline: the supervisor fans each range round's fine pass out
+across a device mesh along the peeling plan's entity tiles and reduces
+per-device partial subtracts — so on 1, 2, and 4 devices every
+decomposition must be **bitwise-identical** to the single-device
+engines (numbers vs both ``peel_mode="exact"`` and ``"range"``; round
+trajectory vs range mode), including with a device killed at a round
+boundary, a straggling device, or a mid-run mesh shrink. The
+exhaustive chaos cells (kill at *every* round boundary, subprocess
+workers) are gated on ``REPRO_FAULTS=1``; one representative cell of
+each failure mode runs in tier-1.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import BipartiteGraph, CheckpointStore, RoundCheckpoint
+from repro.core import checkpoint as ckpt
+from repro.core import pipeline
+from repro.core.distributed import PeelSupervisor, launch_device_worker
+from repro.core.peel import peel_tips, peel_tips_stored, peel_wings
+from repro.core.resilience import (
+    CheckpointCorrupt,
+    ExecutionReport,
+    ResultInvariantViolation,
+    Rung,
+    RungUnavailable,
+    StragglerTimeout,
+    resolve_policy,
+)
+from repro.testing import faults
+
+FAULTS_ENABLED = os.environ.get("REPRO_FAULTS") == "1"
+needs_faults_job = pytest.mark.skipif(
+    not FAULTS_ENABLED,
+    reason="exhaustive chaos cells run in the REPRO_FAULTS=1 CI job",
+)
+
+
+def rand_graph(nu, nv, m, seed):
+    rng = np.random.default_rng(seed)
+    e = np.stack([rng.integers(0, nu, m), rng.integers(0, nv, m)], axis=1)
+    return BipartiteGraph(nu, nv, e)
+
+
+GRAPH = rand_graph(40, 30, 300, 11)
+
+DECOMPS = {
+    "tips": lambda g, **kw: peel_tips(g, side=0, **kw),
+    "tips_stored": lambda g, **kw: peel_tips_stored(g, side=0, **kw),
+    "wings": lambda g, **kw: peel_wings(g, **kw),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parity: N devices == single device, bitwise
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(DECOMPS))
+@pytest.mark.parametrize("devices", [1, 2, 4])
+def test_distributed_parity(name, devices):
+    run = DECOMPS[name]
+    exact = run(GRAPH, peel_mode="exact")
+    rng = run(GRAPH, peel_mode="range")
+    d = run(GRAPH, devices=devices)
+    assert np.array_equal(d.numbers, exact.numbers)
+    assert np.array_equal(d.numbers, rng.numbers)
+    # round trajectory follows range mode; re-settles follow exact ρ
+    assert d.rounds == rng.rounds
+    assert d.sub_rounds == exact.rounds == rng.sub_rounds
+    assert np.array_equal(
+        np.asarray(d.round_sizes), np.asarray(rng.round_sizes)
+    )
+    assert d.report.final_rung == "distributed"
+    assert not d.report.degraded
+    assert len(d.report.children) == devices
+
+
+def test_distributed_report_has_device_rows():
+    r = peel_tips(GRAPH, side=0, devices=2)
+    s = r.report.summary()
+    assert "@dev0" in s and "@dev1" in s
+    assert [c.workload for c in r.report.children] == [
+        "peel_tips@dev0", "peel_tips@dev1"
+    ]
+    assert all(c.attempts[0].outcome == "ok" for c in r.report.children)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoints: capture / verify / tamper / persistence / resume
+# ---------------------------------------------------------------------------
+
+
+def _sample_checkpoint(ph="x" * 64):
+    return RoundCheckpoint.capture(
+        plan_hash=ph,
+        round_index=3,
+        sub_rounds=7,
+        kappa=5,
+        bucket_hi=8,
+        support=np.array([4, 0, 9], np.int64),
+        alive=np.array([True, False, True]),
+        numbers=np.array([0, 2, 0], np.int64),
+        round_sizes=[1, 0, 1],
+    )
+
+
+def test_checkpoint_json_roundtrip_and_verify():
+    cp = _sample_checkpoint()
+    again = RoundCheckpoint.from_json(cp.to_json())
+    assert again == cp
+    again.verify(plan_hash="x" * 64)
+    s, a, n = again.arrays()
+    assert s.dtype == np.int64 and np.array_equal(s, [4, 0, 9])
+    assert a.dtype == bool and np.array_equal(a, [True, False, True])
+    assert np.array_equal(n, [0, 2, 0])
+
+
+def test_checkpoint_tamper_is_typed():
+    cp = _sample_checkpoint()
+    d = cp.to_dict()
+    d["support"] = [4, 1, 9]  # flip one count
+    with pytest.raises(CheckpointCorrupt, match="digest mismatch"):
+        RoundCheckpoint.from_dict(d).verify()
+    with pytest.raises(CheckpointCorrupt, match="belongs to plan"):
+        cp.verify(plan_hash="y" * 64)
+    with pytest.raises(CheckpointCorrupt, match="unparseable"):
+        RoundCheckpoint.from_json("{not json")
+    with pytest.raises(CheckpointCorrupt, match="unknown checkpoint"):
+        RoundCheckpoint.from_dict({**cp.to_dict(), "extra": 1})
+
+
+def test_checkpoint_store_persists_and_reloads(tmp_path):
+    d = str(tmp_path / "ck")
+    store = CheckpointStore(directory=d)
+    store.save(_sample_checkpoint())
+    path = tmp_path / "ck" / "checkpoint_round_000003.json"
+    assert path.exists()
+    assert json.loads(path.read_text())["schema"] == ckpt.CHECKPOINT_SCHEMA
+    fresh = CheckpointStore(directory=d)
+    assert fresh.latest() == store.latest()
+    with pytest.raises(CheckpointCorrupt, match="empty"):
+        CheckpointStore().restore()
+
+
+def test_peel_with_checkpoint_dir_writes_rounds(tmp_path):
+    d = str(tmp_path / "run")
+    host = peel_tips(GRAPH, side=0)
+    r = peel_tips(GRAPH, side=0, devices=2, checkpoint=d)
+    assert np.array_equal(r.numbers, host.numbers)
+    files = sorted(os.listdir(d))
+    # round-0 anchor + one snapshot per committed bucket round
+    assert len(files) == r.rounds + 1
+    assert files[0] == "checkpoint_round_000000.json"
+
+
+def test_cross_process_style_resume(tmp_path):
+    """A supervisor constructed over a non-empty store continues from
+    the stored snapshot and still converges on the exact numbers."""
+    d = str(tmp_path / "resume")
+    host = peel_tips(GRAPH, side=0)
+    first = peel_tips(GRAPH, side=0, devices=2, checkpoint=d)
+    files = sorted(os.listdir(d))
+    # rewind the store to a mid-run snapshot: drop the last rounds
+    for f in files[3:]:
+        os.remove(os.path.join(d, f))
+    again = peel_tips(GRAPH, side=0, devices=2, checkpoint=d)
+    assert np.array_equal(again.numbers, host.numbers)
+    assert np.array_equal(again.numbers, first.numbers)
+    # the resumed run replays only the tail, not the whole decomposition
+    assert again.rounds == first.rounds
+
+
+def test_resume_rejects_other_plans_checkpoint(tmp_path):
+    """A snapshot from a different plan must not resume: restore is
+    keyed by the plan hash and surfaces as a typed error (here the
+    ladder has no lower rung configured... so assert at store level)."""
+    plan_a = pipeline.plan_peel(
+        "peel_tips", expansion="peel_tips_2hop", engine="host",
+        aggregation="sort", n_out=3,
+    )
+    store = CheckpointStore()
+    store.save(_sample_checkpoint(ph=ckpt.plan_hash(plan_a)))
+    with pytest.raises(CheckpointCorrupt, match="belongs to plan"):
+        store.restore("f" * 64)
+
+
+# ---------------------------------------------------------------------------
+# Recovery: device loss, stragglers, mesh shrink, full descent
+# ---------------------------------------------------------------------------
+
+
+def test_kill_one_device_at_round_boundary_recovers():
+    host = peel_tips(GRAPH, side=0)
+    with faults.inject("device_loss", site="round1", times=1, device=1):
+        r = peel_tips(GRAPH, side=0, devices=4)
+    assert np.array_equal(r.numbers, host.numbers)
+    assert r.report.checkpoint_restores == 1
+    assert r.report.final_rung == "distributed"
+    assert "restores=1" in r.report.summary()
+    # the lost device's child row records the loss
+    dev1 = [c for c in r.report.children if c.workload.endswith("@dev1")]
+    assert dev1 and dev1[0].attempts[0].outcome == "device-lost"
+
+
+def test_slow_straggler_redispatch_keeps_parity():
+    host = peel_wings(GRAPH)
+    # first dispatch of device 0 straggles past the 0.2 s deadline;
+    # the supervisor re-dispatches its sub-plan and keeps whichever
+    # completion lands first
+    with faults.inject("slow", times=1, device=0, delay=1.0) as f:
+        r = peel_wings(GRAPH, devices=2, round_deadline_s=0.2)
+    assert f.fired == 1
+    assert np.array_equal(r.numbers, host.numbers)
+    assert r.report.final_rung == "distributed"
+    assert r.report.retries >= 1  # the re-dispatch shows up as a retry
+
+
+def test_persistent_straggler_descends_ladder():
+    host = peel_tips_stored(GRAPH, side=0)
+    with faults.inject("slow", times=None, delay=0.5):
+        r = peel_tips_stored(
+            GRAPH, side=0, devices=2, round_deadline_s=0.05
+        )
+    assert np.array_equal(r.numbers, host.numbers)
+    assert r.report.attempts[0].outcome == "straggler-timeout"
+    assert r.report.final_rung == "host"
+    assert r.report.degraded
+
+
+def test_all_devices_lost_descends_ladder():
+    host = peel_tips(GRAPH, side=0)
+    with faults.inject("device_loss", times=None):
+        r = peel_tips(GRAPH, side=0, devices=2)
+    assert np.array_equal(r.numbers, host.numbers)
+    assert r.report.attempts[0].outcome == "unavailable"
+    assert r.report.final_rung == "host"
+
+
+def test_straggler_timeout_is_ladder_degradable():
+    """Unit cell: StragglerTimeout (and CheckpointCorrupt) descend the
+    policy ladder like capacity faults — never propagate past a
+    lower rung."""
+    policy = resolve_policy(None)
+
+    def flaky(shrinks):
+        raise StragglerTimeout("dev 0 missed", device=0, deadline_s=0.1)
+
+    def corrupt(shrinks):
+        raise CheckpointCorrupt("digest mismatch")
+
+    out, report = policy.execute(
+        "w", [Rung("distributed", flaky), Rung("mid", corrupt),
+              Rung("host", lambda s: 42)], None
+    )
+    assert out == 42
+    assert [a.outcome for a in report.attempts] == [
+        "straggler-timeout", "checkpoint-corrupt", "ok"
+    ]
+    # an exhausted ladder re-raises the last typed error
+    with pytest.raises(StragglerTimeout):
+        policy.execute("w", [Rung("distributed", flaky)], None)
+
+
+def test_invalid_devices_rejected():
+    with pytest.raises(ValueError, match="devices"):
+        PeelSupervisor(
+            "w", pipeline.plan_peel(
+                "w", expansion="peel_tips_2hop", engine="host",
+                aggregation="sort", n_out=1,
+            ),
+            np.zeros(1, np.int64), expand=None, subtract=None, devices=0,
+        )
+
+
+def test_report_child_merge_and_retries():
+    parent = ExecutionReport(workload="p", requested="distributed")
+    child = ExecutionReport(workload="p@dev0", requested="worker")
+    child.attempts.append(
+        __import__("repro.core.resilience", fromlist=["RungAttempt"])
+        .RungAttempt(rung="dev0", outcome="ok", retries=2)
+    )
+    parent.merge_child(child)
+    assert parent.retries == 2
+    assert "\n  p@dev0" in parent.summary()
+
+
+# ---------------------------------------------------------------------------
+# REPRO_FAULTS=1 chaos cells: exhaustive round-boundary kills, mesh
+# shrink, subprocess slow workers
+# ---------------------------------------------------------------------------
+
+
+@needs_faults_job
+@pytest.mark.parametrize("name", sorted(DECOMPS))
+def test_kill_at_every_round_boundary(name):
+    """Kill a worker at each round boundary in turn: every cell must
+    recover to bitwise parity with exactly one rollback."""
+    run = DECOMPS[name]
+    clean = run(GRAPH, devices=4)
+    assert clean.report.checkpoint_restores == 0
+    hit = 0
+    for rnd in range(clean.rounds):
+        with faults.inject(
+            "device_loss", site=f"round{rnd}.", times=1, device=rnd % 4
+        ) as f:
+            r = run(GRAPH, devices=4)
+        assert np.array_equal(r.numbers, clean.numbers), f"round {rnd}"
+        # a round whose frontier is empty never dispatches, so its
+        # fault stays unfired — parity must hold either way
+        want = 1 if f.fired else 0
+        assert r.report.checkpoint_restores == want, f"round {rnd}"
+        assert r.report.final_rung == "distributed"
+        hit += f.fired
+    assert hit >= 1  # the matrix exercised at least one real kill
+
+
+@needs_faults_job
+@pytest.mark.parametrize("name", sorted(DECOMPS))
+def test_mesh_shrink_mid_run(name):
+    """Repeated single-device losses shrink the mesh 4 -> 2 mid-run;
+    the survivors re-partition and finish with parity."""
+    run = DECOMPS[name]
+    clean = run(GRAPH)
+    with faults.inject("device_loss", site="round0.", times=1, device=3) \
+            as f0, \
+         faults.inject("device_loss", site="round1.", times=1, device=2) \
+            as f1:
+        r = run(GRAPH, devices=4)
+    fired = f0.fired + f1.fired
+    assert np.array_equal(r.numbers, clean.numbers)
+    assert r.report.checkpoint_restores == fired
+    lost = [c for c in r.report.children
+            if c.attempts[0].outcome == "device-lost"]
+    assert len(lost) == fired
+    assert fired >= 1
+
+
+@needs_faults_job
+def test_subprocess_worker_slow_preamble():
+    """The subprocess flavor of the ``slow`` fault: the worker answers
+    late but correct (distinct from ``hang``, which only the
+    per-attempt timeout can interrupt)."""
+    import time
+
+    with faults.inject("slow", delay=1.5, times=1):
+        t0 = time.monotonic()
+        out = launch_device_worker(
+            "print(6 * 7)", devices=1, timeout_s=120.0, retries=0
+        )
+        dt = time.monotonic() - t0
+    assert out.strip() == "42"
+    assert dt >= 1.5

@@ -258,13 +258,49 @@ def test_partition_excess_devices_get_empty_plans():
     assert cap == plan.chunk_cap
 
 
-def test_partition_envelope_plan_rejected():
+def test_partition_envelope_plan_yields_empty_subplans():
+    """A tile-less peeling envelope partitions into n empty sub-plans
+    (regression: this used to raise ``ValueError: ... no tile list`` —
+    the seam the distributed peeling rung removed)."""
     plan = pipeline.plan_peel(
         "peel_wings", expansion="peel_wings_triples", engine="host",
         aggregation="sort", n_out=5,
     )
-    with pytest.raises(ValueError, match="no tile list"):
-        pipeline.plan_partition(plan, 2)
+    parts = pipeline.plan_partition(plan, 2)
+    assert [p.n_tiles for p in parts] == [0, 0]
+    assert all(p == plan for p in parts)
+    # the old hard-error message must be gone from the partition seam
+    import inspect
+
+    assert "no tile list" not in inspect.getsource(pipeline.plan_partition)
+
+
+def test_plan_peel_entity_work_gains_tiles():
+    """``entity_work=`` gives peeling plans real coarse entity tiles:
+    contiguous, covering, and wedge-balanced enough to partition."""
+    work = np.array([5, 0, 3, 9, 1, 1, 7, 0, 2, 4], dtype=np.int64)
+    plan = pipeline.plan_peel(
+        "peel_tips", expansion="peel_tips_2hop", engine="host",
+        aggregation="sort", n_out=10, entity_work=work, coarse_tiles=4,
+    )
+    assert plan.n_tiles >= 1
+    bounds = np.asarray(plan.bounds)
+    assert bounds[0] == 0 and bounds[-1] == 10
+    assert np.all(np.diff(bounds) > 0)
+    assert sum(plan.tile_wedges) == int(work.sum())
+    for i, (lo, hi) in enumerate(zip(bounds[:-1], bounds[1:])):
+        assert plan.tile_wedges[i] == int(work[lo:hi].sum())
+    parts = pipeline.plan_partition(plan, 3)
+    assert sum(p.n_tiles for p in parts) == plan.n_tiles
+    # round-trips like any other plan
+    assert pipeline.WedgePlan.from_json(plan.to_json()) == plan
+
+
+def test_peel_tile_bounds_zero_work_still_covers():
+    bounds, tw = pipeline.peel_tile_bounds(np.zeros(7, np.int64), n_tiles=3)
+    b = np.asarray(bounds)
+    assert b[0] == 0 and b[-1] == 7 and np.all(np.diff(b) > 0)
+    assert all(w == 0 for w in tw) and len(tw) == len(bounds) - 1
 
 
 def test_partitioned_execution_sums_to_total():
