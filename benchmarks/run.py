@@ -11,6 +11,8 @@ Prints ``name,us_per_call,derived`` CSV (see DESIGN.md §9 index).
   distributed -> shard_map engine on the host mesh
   distributed_peeling -> supervised mesh peeling scaling curve
                  (1/2/4 workers) + device-loss / straggler overlay
+  serving     -> deadline-aware ButterflyService closed-loop load
+                 curve + overload / slow_rung chaos overlay
 
 The counting section additionally writes the machine-readable
 ``BENCH_counting.json`` perf baseline (``--json-out``; see
@@ -21,8 +23,11 @@ time + temp-memory footprint), and the peeling section writes
 rounds / wall time / host-sync counts), and the distributed_peeling
 section writes ``BENCH_distributed_peeling.json``
 (``--json-out-distpeel``; 1/2/4-worker scaling + fault-recovery
-overlay, every row carrying a bitwise-parity bit) so future PRs have
-trajectories to compare against.
+overlay, every row carrying a bitwise-parity bit), and the serving
+section writes ``BENCH_serving.json`` (``--json-out-serving``;
+closed-loop p50/p99 vs client concurrency + overload / slow_rung
+chaos overlay with typed-shed and cache-hit-parity gates) so future
+PRs have trajectories to compare against.
 
 ``python -m benchmarks.run [section ...] [--quick | --smoke]``
 
@@ -41,10 +46,11 @@ import argparse
 import sys
 
 SECTIONS = ("counting", "fused", "ranking", "sparsify", "peeling",
-            "kernels", "distributed", "distributed_peeling")
+            "kernels", "distributed", "distributed_peeling", "serving")
 # the sections that write machine-readable BENCH_*.json baselines;
 # `python -m benchmarks.run all` runs exactly these
-JSON_SECTIONS = ("counting", "fused", "peeling", "distributed_peeling")
+JSON_SECTIONS = ("counting", "fused", "peeling", "distributed_peeling",
+                 "serving")
 
 
 def main() -> None:
@@ -77,6 +83,9 @@ def main() -> None:
                     default="BENCH_distributed_peeling.json",
                     help="path for the supervised mesh-peeling scaling "
                          "curve + fault overlay (empty string disables)")
+    ap.add_argument("--json-out-serving", default="BENCH_serving.json",
+                    help="path for the serving load curve + chaos "
+                         "overlay (empty string disables)")
     args = ap.parse_args()
     sections = args.sections or list(SECTIONS)
     if "all" in sections:
@@ -111,6 +120,13 @@ def main() -> None:
                 args.json_out_distpeel, graphs=("peel_small",), repeats=1
             )
             print(f"# wrote {args.json_out_distpeel}", file=sys.stderr)
+        if "serving" in sections and args.json_out_serving:
+            from . import bench_serving
+            bench_serving.write_json(
+                args.json_out_serving, graphs=("serve_small",),
+                repeats=1, concurrency=(2, 4), iters=4,
+            )
+            print(f"# wrote {args.json_out_serving}", file=sys.stderr)
         if args.faults:
             if "counting" in sections and args.json_out:
                 from . import bench_counting
@@ -190,6 +206,16 @@ def main() -> None:
         bench_distributed_peeling.main(dp_args)
         if args.json_out_distpeel:
             print(f"# wrote {args.json_out_distpeel}", file=sys.stderr)
+    if "serving" in sections:
+        from . import bench_serving
+        sv_args = ["--graphs", "serve_small"]
+        if args.quick:
+            sv_args += ["--smoke"]
+        if args.json_out_serving:
+            sv_args += ["--json", args.json_out_serving]
+        bench_serving.main(sv_args)
+        if args.json_out_serving:
+            print(f"# wrote {args.json_out_serving}", file=sys.stderr)
 
 
 if __name__ == '__main__':

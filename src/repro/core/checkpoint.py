@@ -181,10 +181,25 @@ class CheckpointStore:
     resume path. ``restores`` counts how many times a supervisor
     rolled back to this store's snapshot (the recovery metric the
     per-run :class:`~repro.core.resilience.ExecutionReport` records).
+
+    ``retain_last=N`` bounds the directory: after each committed save
+    only the newest N round files are kept (oldest pruned first, the
+    just-written newest never pruned). Recovery only ever restores the
+    *latest* snapshot, so pruning older rounds loses nothing a rollback
+    could use; without it a ρ-round decomposition leaves ρ files behind
+    (ρ is 10^2-10^5 on the paper's graphs — unbounded growth in a
+    service that peels on every query). ``retain_last=None`` keeps the
+    historical keep-everything behavior; ``retain_last >= 1``.
     """
 
-    def __init__(self, directory: Optional[str] = None):
+    def __init__(self, directory: Optional[str] = None, *,
+                 retain_last: Optional[int] = None):
+        if retain_last is not None and int(retain_last) < 1:
+            raise ValueError(
+                f"retain_last must be None or >= 1, got {retain_last}"
+            )
         self.directory = directory
+        self.retain_last = None if retain_last is None else int(retain_last)
         self._latest: Optional[RoundCheckpoint] = None
         self.saved = 0
         self.restores = 0
@@ -221,6 +236,21 @@ class CheckpointStore:
             with open(tmp, "w") as fh:
                 fh.write(cp.to_json())
             os.replace(tmp, path)
+            self._prune()
+
+    def _prune(self) -> None:
+        """Drop all but the newest ``retain_last`` round files. Runs
+        after the atomic replace, so the newest snapshot is always on
+        disk before anything is deleted; a prune interrupted mid-way
+        leaves extra (older) files, never a missing latest."""
+        if not self.directory or self.retain_last is None:
+            return
+        files = self._round_files()
+        for name in files[:-self.retain_last]:
+            try:
+                os.remove(os.path.join(self.directory, name))
+            except FileNotFoundError:
+                pass  # a concurrent store pruned it first
 
     def latest(self) -> Optional[RoundCheckpoint]:
         return self._latest

@@ -116,6 +116,8 @@ __all__ = [
     "CountResult",
     "count_butterflies",
     "count_from_ranked",
+    "count_validator",
+    "interpret_counts",
     "default_count_dtype",
     "ENGINES",
     "MODES",
@@ -428,6 +430,9 @@ def count_from_ranked(
     if mode not in MODES:
         raise ValueError(f"mode must be {'|'.join(MODES)}, got {mode}")
     _faults.maybe_oom(f"count.{engine}")
+    # slow_rung fault: burn deadline budget at this rung's entry (host
+    # side, pre-trace) so budget-aware ladder walks must skip or degrade
+    _faults.maybe_slow_rung(f"count.{engine}")
     # hash_overflow fault: shrink the bounded-probe table so the
     # in-graph sort fallback (the ladder's in-program rung) must fire
     hash_bits = _faults.hash_bits_override(f"count.{engine}", hash_bits)
@@ -493,7 +498,7 @@ def count_from_ranked(
     return out
 
 
-def _count_validator(g: BipartiteGraph, mode: str):
+def count_validator(g: BipartiteGraph, mode: str):
     """Result-invariant check for the counting ladder: Σ C(d, 2) over
     endpoint-pair groups with Σ d = W is maximized by one group holding
     all W wedges (convexity), so every count — total, per-vertex,
@@ -533,6 +538,53 @@ def _count_validator(g: BipartiteGraph, mode: str):
         return _bad(name, host_out)
 
     return check
+
+
+# historical private name, kept for in-tree callers
+_count_validator = count_validator
+
+
+def interpret_counts(
+    rg: RankedGraph,
+    g: BipartiteGraph,
+    mode: str,
+    out,
+    aggregation: str,
+    order: str,
+) -> CountResult:
+    """Interpret a rank-space engine output (the host-side value a
+    counting rung returns) into a :class:`CountResult` in the caller's
+    vertex numbering. Split out of :func:`count_butterflies` so the
+    serving layer can run the ladder itself (with its own deadline /
+    breaker hooks over :func:`count_from_ranked` rungs) and still get
+    the same result shape the one-shot entry point produces."""
+
+    def _scatter_vertex(bv: np.ndarray):
+        per_u = np.zeros(g.n_u, bv.dtype)
+        per_v = np.zeros(g.n_v, bv.dtype)
+        per_u[:] = bv[rg.rank_of_u]
+        per_v[:] = bv[rg.rank_of_v]
+        return per_u, per_v
+
+    if mode == "all":
+        total, bv, be = out
+        per_u, per_v = _scatter_vertex(np.asarray(bv))
+        return CountResult(
+            mode, np.asarray(total), per_u, per_v, np.asarray(be),
+            aggregation, order,
+        )
+    if mode == "global":
+        return CountResult(
+            mode, np.asarray(out), None, None, None, aggregation, order
+        )
+    if mode == "vertex":
+        per_u, per_v = _scatter_vertex(np.asarray(out))
+        return CountResult(
+            mode, None, per_u, per_v, None, aggregation, order
+        )
+    return CountResult(
+        mode, None, None, None, np.asarray(out), aggregation, order
+    )
 
 
 def count_butterflies(
@@ -622,35 +674,8 @@ def count_butterflies(
         "count",
         policy,
         [_make_rung(e) for e in ladder],
-        _count_validator(g, mode),
+        count_validator(g, mode),
         plan=plan,
     )
-
-    def _scatter_vertex(bv: np.ndarray):
-        per_u = np.zeros(g.n_u, bv.dtype)
-        per_v = np.zeros(g.n_v, bv.dtype)
-        per_u[:] = bv[rg.rank_of_u]
-        per_v[:] = bv[rg.rank_of_v]
-        return per_u, per_v
-
-    if mode == "all":
-        total, bv, be = out
-        per_u, per_v = _scatter_vertex(np.asarray(bv))
-        res = CountResult(
-            mode, np.asarray(total), per_u, per_v, np.asarray(be),
-            aggregation, order,
-        )
-    elif mode == "global":
-        res = CountResult(
-            mode, np.asarray(out), None, None, None, aggregation, order
-        )
-    elif mode == "vertex":
-        per_u, per_v = _scatter_vertex(np.asarray(out))
-        res = CountResult(
-            mode, None, per_u, per_v, None, aggregation, order
-        )
-    else:
-        res = CountResult(
-            mode, None, None, None, np.asarray(out), aggregation, order
-        )
+    res = interpret_counts(rg, g, mode, out, aggregation, order)
     return policy.attach(res, report)

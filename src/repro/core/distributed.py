@@ -55,6 +55,8 @@ from .aggregate import aggregate_sort
 from .graph import BipartiteGraph, RankedGraph, preprocess
 from .ranking import make_order
 from .resilience import (
+    Deadline,
+    DeadlineExceeded,
     DeviceLost,
     ExecutionReport,
     RungAttempt,
@@ -112,6 +114,7 @@ def launch_device_worker(
     retries: int = 1,
     backoff_s: float = 0.5,
     env: Optional[dict] = None,
+    deadline_s: Optional[float] = None,
 ) -> str:
     """Run a Python worker payload against a forced ``devices``-wide
     host platform, with bounded retry + exponential backoff and a
@@ -129,6 +132,13 @@ def launch_device_worker(
     attempts the failure surfaces as :class:`DeviceLost` carrying the
     failed ``device_index``, the attempt count, and the last stderr
     tail — never a silent empty result. Returns the worker's stdout.
+
+    ``deadline_s`` bounds the *whole* dispatch (all attempts plus
+    backoffs) for deadline-aware callers: each attempt's timeout is
+    clamped to the remaining budget, backoff sleeps never overrun it,
+    and an exhausted budget raises
+    :class:`~repro.core.resilience.DeadlineExceeded` (the budget ran
+    out — the device may be fine) rather than :class:`DeviceLost`.
     """
     src_root = os.path.dirname(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -145,7 +155,21 @@ def launch_device_worker(
     payload = _WORKER_FAULT_PREAMBLE + code
     attempts = int(retries) + 1
     last_detail = ""
+    deadline = (
+        None if deadline_s is None
+        else Deadline(float(deadline_s))
+    )
     for attempt in range(attempts):
+        attempt_timeout = timeout_s
+        if deadline is not None:
+            remaining = deadline.remaining_s()
+            if remaining <= 0:
+                raise deadline.exceeded(
+                    f"device worker {device_index}: dispatch budget "
+                    f"{deadline.budget_s:.3f}s exhausted after "
+                    f"{attempt} attempt(s); last: {last_detail or 'none'}"
+                )
+            attempt_timeout = min(timeout_s, remaining)
         attempt_env = _faults.worker_env(
             dict(base_env), device=device_index
         )
@@ -155,10 +179,10 @@ def launch_device_worker(
                 env=attempt_env,
                 capture_output=True,
                 text=True,
-                timeout=timeout_s,
+                timeout=attempt_timeout,
             )
         except subprocess.TimeoutExpired:
-            last_detail = f"timed out after {timeout_s}s"
+            last_detail = f"timed out after {attempt_timeout}s"
         else:
             if out.returncode == 0:
                 return out.stdout
@@ -167,7 +191,10 @@ def launch_device_worker(
                 f"{out.stderr[-2000:]}"
             )
         if attempt + 1 < attempts and backoff_s > 0:
-            time.sleep(backoff_s * (2 ** attempt))
+            pause = backoff_s * (2 ** attempt)
+            if deadline is not None:
+                pause = min(pause, max(0.0, deadline.remaining_s()))
+            time.sleep(pause)
     raise DeviceLost(
         f"device worker {device_index} failed after {attempts} "
         f"attempt(s): {last_detail}",
@@ -513,6 +540,7 @@ class PeelSupervisor:
         devices: int,
         checkpoint=None,
         round_deadline_s: Optional[float] = None,
+        deadline_s: Optional[float] = None,
     ):
         self.workload = workload
         self.plan = plan
@@ -535,6 +563,12 @@ class PeelSupervisor:
         if round_deadline_s is None:
             round_deadline_s = max(5.0, 1e-6 * float(plan.total_wedges))
         self.round_deadline_s = float(round_deadline_s)
+        # overall run budget for deadline-aware callers (the serving
+        # layer): the countdown starts at run(), clamps every per-round
+        # straggler deadline, and raises DeadlineExceeded (degradable —
+        # the ladder descends to a cheaper rung) when it runs out
+        self.deadline_s = None if deadline_s is None else float(deadline_s)
+        self._deadline: Optional[Deadline] = None
         self.plan_hash = _ckpt.plan_hash(plan)
         self._stats = {
             d: {"rounds": 0, "redispatch": 0, "lost": 0}
@@ -565,6 +599,22 @@ class PeelSupervisor:
 
     # -- fine-pass fan-out with straggler re-dispatch -----------------
 
+    def _round_budget_s(self) -> float:
+        """Per-round straggler deadline, clamped to the remaining
+        overall ``deadline_s`` budget when one is active; an exhausted
+        budget raises :class:`DeadlineExceeded` (degradable — the
+        caller's ladder descends instead of waiting out a round the
+        query can no longer afford)."""
+        if self._deadline is None:
+            return self.round_deadline_s
+        remaining = self._deadline.remaining_s()
+        if remaining <= 0:
+            raise self._deadline.exceeded(
+                f"{self.workload}: run budget "
+                f"{self._deadline.budget_s:.3f}s exhausted mid-round"
+            )
+        return min(self.round_deadline_s, remaining)
+
     def _fanout(self, pool, round_ix: int, live: list, ranges: list,
                 owner: np.ndarray, payload: tuple) -> list:
         slices = {}
@@ -581,7 +631,7 @@ class PeelSupervisor:
         pending = dict(primary)
         dups: dict = {}
         results: dict = {}
-        deadline = time.monotonic() + self.round_deadline_s
+        deadline = time.monotonic() + self._round_budget_s()
         while pending:
             waitset = [
                 f
@@ -607,7 +657,7 @@ class PeelSupervisor:
                 dups.pop(d, None)
                 progressed = True
             if progressed:
-                deadline = time.monotonic() + self.round_deadline_s
+                deadline = time.monotonic() + self._round_budget_s()
                 continue
             if time.monotonic() < deadline:
                 continue
@@ -629,7 +679,7 @@ class PeelSupervisor:
                 dups[d] = nf
                 fut_dev[nf] = d
                 self._stats[d]["redispatch"] += 1
-            deadline = time.monotonic() + self.round_deadline_s
+            deadline = time.monotonic() + self._round_budget_s()
         # fixed ascending-device reduction order (immaterial for the
         # integer sums, deterministic for everything else)
         return [results[d] for d in sorted(results)]
@@ -713,12 +763,24 @@ class PeelSupervisor:
         live = list(range(self.devices))
         ranges = self._entity_ranges(live)
         restores = 0
+        self._deadline = (
+            None if self.deadline_s is None else Deadline(self.deadline_s)
+        )
         pool = _cf.ThreadPoolExecutor(
             max_workers=self.devices + 1,
             thread_name_prefix="peel-dev",
         )
         try:
             while st.alive.any():
+                if (self._deadline is not None
+                        and self._deadline.expired()):
+                    # the committed rounds live in the checkpoint store;
+                    # a re-run with more budget resumes, doesn't restart
+                    raise self._deadline.exceeded(
+                        f"{self.workload}: run budget "
+                        f"{self._deadline.budget_s:.3f}s exhausted after "
+                        f"{st.rounds} committed round(s)"
+                    )
                 try:
                     self._bucket_round(pool, st, live, ranges)
                 except DeviceLost as e:

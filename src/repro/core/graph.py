@@ -14,6 +14,7 @@ Vertex convention after preprocessing (paper Alg. 1 PREPROCESS):
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Optional
 
 import numpy as np
@@ -158,6 +159,19 @@ class BipartiteGraph:
         w_u = int((dv.astype(np.int64) * (dv - 1) // 2).sum())
         w_v = int((du.astype(np.int64) * (du - 1) // 2).sum())
         return w_u, w_v
+
+    def content_hash(self) -> str:
+        """Stable content identity: sha256 over ``(n_u, n_v)`` and the
+        canonical (validated, dedup-resolved, int64) edge array. Two
+        graphs hash equal iff they are the same bipartite graph in the
+        same vertex numbering — the serving layer's graph *version* key,
+        so re-registering identical data is a no-op while any edit
+        invalidates that version's cached results."""
+        e = np.ascontiguousarray(self.edges, dtype=np.int64)
+        h = hashlib.sha256()
+        h.update(f"bipartite/{self.n_u}/{self.n_v}/{e.shape[0]}".encode())
+        h.update(e.tobytes())
+        return h.hexdigest()
 
     def accumulator_preflight(self, budget_bits: int = 63) -> int:
         """Worst-case butterfly bound vs. the accumulator budget.

@@ -203,6 +203,7 @@ __all__ = [
     "peel_tips",
     "peel_tips_stored",
     "peel_wings",
+    "peel_validator",
     "PEEL_ENGINES",
     "PEEL_SUBTRACTS",
     "PEEL_DECREASE_KEYS",
@@ -811,6 +812,11 @@ def _peel_validator(counts: np.ndarray):
     return validate
 
 
+# public name: the serving layer runs the peeling ladders itself (with
+# deadline / breaker hooks) and needs the same result-invariant check
+peel_validator = _peel_validator
+
+
 # ---------------------------------------------------------------------------
 # Distributed peeling rung: numpy frontier expansion + partial subtracts
 # for the supervised device mesh (distributed.PeelSupervisor). The
@@ -1053,6 +1059,7 @@ def peel_tips(
     devices=None,
     checkpoint=None,
     round_deadline_s: Optional[float] = None,
+    deadline_s: Optional[float] = None,
     resilience=None,
 ) -> PeelResult:
     """Tip decomposition (PEEL-V, Alg. 5).
@@ -1125,6 +1132,7 @@ def peel_tips(
 
     def run_device(shrinks: int):
         _faults.maybe_oom("peel_tips.device")
+        _faults.maybe_slow_rung("peel_tips.device")
         mf = _faults.capacity_override("peel_tips.device", max_frontier)
         c = _faults.maybe_poison("peel_tips.device", counts)
         notes: list = []
@@ -1138,6 +1146,7 @@ def peel_tips(
 
     def run_host(shrinks: int):
         _faults.maybe_oom("peel_tips.host")
+        _faults.maybe_slow_rung("peel_tips.host")
         return _peel_tips_host(
             g, counts, side, aggregation, hash_bits, subtract,
             tile_budget, peel_mode, off, nbr, w2,
@@ -1164,6 +1173,7 @@ def peel_tips(
 
     def run_distributed(shrinks: int):
         _faults.maybe_oom("peel_tips.distributed")
+        _faults.maybe_slow_rung("peel_tips.distributed")
         sup = _dist.PeelSupervisor(
             "peel_tips", plan, counts,
             expand=_tips_expand_fn(off, nbr, base, n_side),
@@ -1171,6 +1181,7 @@ def peel_tips(
             devices=_resolve_devices(devices),
             checkpoint=checkpoint,
             round_deadline_s=round_deadline_s,
+            deadline_s=deadline_s,
         )
         sp = sup.run()
         dist_audit.append(sp)
@@ -1209,6 +1220,7 @@ def peel_tips_stored(
     devices=None,
     checkpoint=None,
     round_deadline_s: Optional[float] = None,
+    deadline_s: Optional[float] = None,
     resilience=None,
 ) -> PeelResult:
     """WPEEL-V (paper Alg. 7): store all side-oriented wedges upfront,
@@ -1238,6 +1250,7 @@ def peel_tips_stored(
 
     def run_device(shrinks: int):
         _faults.maybe_oom("peel_tips_stored.device")
+        _faults.maybe_slow_rung("peel_tips_stored.device")
         mf = _faults.capacity_override("peel_tips_stored.device",
                                        max_frontier)
         c = _faults.maybe_poison("peel_tips_stored.device", counts)
@@ -1252,6 +1265,7 @@ def peel_tips_stored(
 
     def run_host(shrinks: int):
         _faults.maybe_oom("peel_tips_stored.host")
+        _faults.maybe_slow_rung("peel_tips_stored.host")
         return _peel_tips_stored_host(
             counts, side, n_side, aggregation, hash_bits, subtract,
             tile_budget, peel_mode, woff, w_u2,
@@ -1279,6 +1293,7 @@ def peel_tips_stored(
 
     def run_distributed(shrinks: int):
         _faults.maybe_oom("peel_tips_stored.distributed")
+        _faults.maybe_slow_rung("peel_tips_stored.distributed")
         sup = _dist.PeelSupervisor(
             "peel_tips_stored", plan, counts,
             expand=_stored_expand_fn(woff, w_u2),
@@ -1286,6 +1301,7 @@ def peel_tips_stored(
             devices=_resolve_devices(devices),
             checkpoint=checkpoint,
             round_deadline_s=round_deadline_s,
+            deadline_s=deadline_s,
         )
         sp = sup.run()
         dist_audit.append(sp)
@@ -1770,6 +1786,7 @@ def peel_wings(
     devices=None,
     checkpoint=None,
     round_deadline_s: Optional[float] = None,
+    deadline_s: Optional[float] = None,
     resilience=None,
 ) -> PeelResult:
     """Wing decomposition (PEEL-E, Alg. 6).
@@ -1820,6 +1837,7 @@ def peel_wings(
 
     def run_device(shrinks: int):
         _faults.maybe_oom("peel_wings.device")
+        _faults.maybe_slow_rung("peel_wings.device")
         mf = _faults.capacity_override("peel_wings.device", max_frontier)
         c = _faults.maybe_poison("peel_wings.device", counts)
         notes: list = []
@@ -1834,6 +1852,7 @@ def peel_wings(
 
     def run_host(shrinks: int):
         _faults.maybe_oom("peel_wings.host")
+        _faults.maybe_slow_rung("peel_wings.host")
         return _peel_wings_host(g, counts, off, nbr, uid, peel_mode)
 
     plan = _plan_peel(
@@ -1857,6 +1876,7 @@ def peel_wings(
 
     def run_distributed(shrinks: int):
         _faults.maybe_oom("peel_wings.distributed")
+        _faults.maybe_slow_rung("peel_wings.distributed")
         sup = _dist.PeelSupervisor(
             "peel_wings", plan, counts,
             expand=_wings_expand_fn(g, off, nbr, uid),
@@ -1864,6 +1884,7 @@ def peel_wings(
             devices=_resolve_devices(devices),
             checkpoint=checkpoint,
             round_deadline_s=round_deadline_s,
+            deadline_s=deadline_s,
         )
         sp = sup.run()
         dist_audit.append(sp)

@@ -53,6 +53,9 @@ __all__ = [
     "ResourceExhausted",
     "RungUnavailable",
     "ResultInvariantViolation",
+    "AdmissionRejected",
+    "DeadlineExceeded",
+    "Deadline",
     "is_resource_exhausted",
     "RungAttempt",
     "ExecutionReport",
@@ -142,6 +145,68 @@ class ResultInvariantViolation(ResilienceError, RuntimeError):
     workload's invariants — surfaced instead of a silent wrong answer."""
 
 
+class AdmissionRejected(ResilienceError, RuntimeError):
+    """The serving layer's admission controller shed this query: the
+    bounded worker pool plus queue is full, so the service refuses
+    synchronously instead of letting latency grow without bound.
+    Carries the observed ``queue_depth`` and configured ``capacity``."""
+
+    def __init__(self, message: str, *, queue_depth: int = 0,
+                 capacity: int = 0):
+        super().__init__(message)
+        self.queue_depth = queue_depth
+        self.capacity = capacity
+
+
+class DeadlineExceeded(ResilienceError, TimeoutError):
+    """A query's deadline budget ran out before any remaining rung
+    could plausibly finish — the ladder stops descending and the
+    serving layer falls back to a cached-stale result (if allowed) or
+    surfaces this typed error. Carries the requested ``deadline_s``
+    and the ``elapsed_s`` at the point of exhaustion."""
+
+    def __init__(self, message: str, *, deadline_s: float = 0.0,
+                 elapsed_s: float = 0.0):
+        super().__init__(message)
+        self.deadline_s = deadline_s
+        self.elapsed_s = elapsed_s
+
+
+class Deadline:
+    """A monotonic countdown threaded from the service front door into
+    :meth:`ResiliencePolicy.execute`. Created when a query is
+    *admitted* (queue wait consumes budget too), consulted at every
+    rung boundary. ``clock`` is injectable so tests can drive time."""
+
+    __slots__ = ("budget_s", "clock", "started_at")
+
+    def __init__(self, budget_s: float,
+                 clock: Callable[[], float] = time.monotonic):
+        if budget_s is None or budget_s <= 0:
+            raise ValueError(f"deadline budget must be > 0, got {budget_s}")
+        self.budget_s = float(budget_s)
+        self.clock = clock
+        self.started_at = clock()
+
+    def elapsed_s(self) -> float:
+        return self.clock() - self.started_at
+
+    def remaining_s(self) -> float:
+        return self.budget_s - self.elapsed_s()
+
+    def expired(self) -> bool:
+        return self.remaining_s() <= 0.0
+
+    def exceeded(self, message: str) -> "DeadlineExceeded":
+        return DeadlineExceeded(
+            message, deadline_s=self.budget_s, elapsed_s=self.elapsed_s()
+        )
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return (f"Deadline(budget_s={self.budget_s:.3f}, "
+                f"remaining_s={self.remaining_s():.3f})")
+
+
 def is_resource_exhausted(e: BaseException) -> bool:
     """True for our typed :class:`ResourceExhausted` and for real XLA
     allocator failures (matched on the canonical status string, so a
@@ -176,10 +241,13 @@ class RungAttempt:
     rung: str
     outcome: str  # ok | unavailable | capacity-overflow |
     #               resource-exhausted | invalid-result |
-    #               straggler-timeout | checkpoint-corrupt
+    #               straggler-timeout | checkpoint-corrupt |
+    #               deadline-skipped | deadline-exceeded |
+    #               device-lost | skipped
     detail: str = ""
     retries: int = 0  # RESOURCE_EXHAUSTED retries burned on this rung
     budget_shrinks: int = 0  # budget halvings applied by those retries
+    wall_s: float = 0.0  # elapsed seconds spent inside this rung
 
 
 @dataclasses.dataclass
@@ -194,6 +262,9 @@ class ExecutionReport:
     final_rung: Optional[str] = None  # rung that produced the result
     plan: Optional[str] = None  # WedgePlan.summary() (set by the pipeline)
     checkpoint_restores: int = 0  # supervisor rollbacks to a snapshot
+    wall_s: float = 0.0  # total seconds across all rung attempts
+    deadline_s: Optional[float] = None  # requested budget (if any)
+    deadline_slack_s: Optional[float] = None  # budget left at completion
     # Per-device worker reports from a distributed rung. The supervisor
     # produces one small report per mesh device (rounds served, losses,
     # straggler re-dispatches); the parent frontend merges them here so
@@ -234,6 +305,10 @@ class ExecutionReport:
         base = f"{self.workload}: requested={self.requested} {path}"
         if self.checkpoint_restores:
             base += f" restores={self.checkpoint_restores}"
+        if self.wall_s:
+            base += f" wall={self.wall_s:.3f}s"
+        if self.deadline_slack_s is not None:
+            base += f" slack={self.deadline_slack_s:.3f}s"
         if self.plan:
             base += f" | plan: {self.plan}"
         if self.children:
@@ -253,6 +328,9 @@ class Rung:
     name: str
     run: Callable[[int], Any]
     shrinkable: bool = True
+    # zero_cost rungs (e.g. a cached-result lookup) are never
+    # deadline-skipped: even an expired budget can afford them
+    zero_cost: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -277,101 +355,196 @@ class ResiliencePolicy:
     validate_results: bool = True
     attach_report: bool = True
     sleep: Callable[[float], None] = time.sleep
+    clock: Callable[[], float] = time.monotonic
+
+    def _finalize(self, report: ExecutionReport,
+                  deadline: Optional[Deadline]) -> None:
+        report.wall_s = sum(a.wall_s for a in report.attempts)
+        if deadline is not None:
+            report.deadline_s = deadline.budget_s
+            report.deadline_slack_s = deadline.remaining_s()
 
     def execute(
         self,
         workload: str,
         rungs: Sequence[Rung],
         validate: Optional[Callable[[Any], Optional[str]]] = None,
+        *,
+        deadline: Optional[Deadline] = None,
+        rung_gate: Optional[Callable[[Rung], Optional[str]]] = None,
+        on_rung: Optional[Callable[[RungAttempt], None]] = None,
     ):
         """Run ``rungs`` in order until one returns a valid result.
 
         Returns ``(result, report)``. Degradable failures
         (:class:`CapacityOverflow`, :class:`RungUnavailable`,
-        :class:`StragglerTimeout`, :class:`CheckpointCorrupt`, exhausted
+        :class:`StragglerTimeout`, :class:`CheckpointCorrupt`,
+        :class:`DeadlineExceeded` raised *by a rung*, exhausted
         RESOURCE_EXHAUSTED retries, invariant violations) descend;
         input/world errors (:class:`GraphValidationError`,
         :class:`AccumulatorOverflowRisk`, :class:`DeviceLost`) and
         unknown exceptions propagate — no rung fixes a malformed graph
         and masking a genuine bug as a fallback would hide corruption.
+
+        ``deadline`` threads a remaining-time budget through the walk:
+        once it expires, non-``zero_cost`` rungs are *skipped* (outcome
+        ``deadline-skipped``) rather than started, retry backoff sleeps
+        are clamped to the remaining budget, and an exhausted ladder
+        raises :class:`DeadlineExceeded` instead of the last rung
+        error. ``rung_gate(rung) -> reason | None`` lets a caller (the
+        serving layer's circuit breakers / cost model) veto a rung
+        before it runs (outcome ``skipped``). ``on_rung(attempt)``
+        observes every recorded :class:`RungAttempt` as it lands —
+        the breaker-feedback hook. Every exception raised out of this
+        method carries the partial audit trail as ``e.report``.
         """
         if not rungs:
             raise ValueError("resilience ladder needs at least one rung")
         report = ExecutionReport(workload=workload, requested=rungs[0].name)
         last_err: Optional[BaseException] = None
         last_invalid: Optional[str] = None
+        deadline_skips = 0
+
+        def record(attempt: RungAttempt) -> None:
+            report.attempts.append(attempt)
+            if on_rung is not None:
+                on_rung(attempt)
+
+        def raise_with_report(err: BaseException) -> None:
+            self._finalize(report, deadline)
+            try:
+                err.report = report
+            except Exception:
+                pass  # exotic __slots__ exceptions: lose the audit trail
+            raise err
+
         for rung in rungs:
+            # deadline check precedes the gate: an expired budget must
+            # not consume a half-open breaker's single probe slot
+            if (deadline is not None and deadline.expired()
+                    and not rung.zero_cost):
+                deadline_skips += 1
+                record(RungAttempt(
+                    rung.name, "deadline-skipped",
+                    f"budget {deadline.budget_s:.3f}s exhausted "
+                    f"({deadline.elapsed_s():.3f}s elapsed)"))
+                continue
+            if rung_gate is not None:
+                reason = rung_gate(rung)
+                if reason is not None:
+                    record(RungAttempt(rung.name, "skipped", reason))
+                    continue
             shrinks = 0
             retries = 0
+            t_rung = self.clock()
             while True:
                 try:
                     out = rung.run(shrinks)
                 except RungUnavailable as e:
-                    report.attempts.append(RungAttempt(
-                        rung.name, "unavailable", str(e), retries, shrinks))
+                    record(RungAttempt(
+                        rung.name, "unavailable", str(e), retries, shrinks,
+                        self.clock() - t_rung))
                     last_err = e
                     break
                 except CapacityOverflow as e:
-                    report.attempts.append(RungAttempt(
+                    record(RungAttempt(
                         rung.name, "capacity-overflow", str(e), retries,
-                        shrinks))
+                        shrinks, self.clock() - t_rung))
                     last_err = e
                     break
                 except StragglerTimeout as e:
                     # a round missed its deadline twice: the mesh can't
                     # make progress — descend to the single-device rungs
-                    report.attempts.append(RungAttempt(
+                    record(RungAttempt(
                         rung.name, "straggler-timeout", str(e), retries,
-                        shrinks))
+                        shrinks, self.clock() - t_rung))
                     last_err = e
                     break
                 except CheckpointCorrupt as e:
                     # recovery state is unusable; rungs below need none
-                    report.attempts.append(RungAttempt(
+                    record(RungAttempt(
                         rung.name, "checkpoint-corrupt", str(e), retries,
-                        shrinks))
+                        shrinks, self.clock() - t_rung))
                     last_err = e
                     break
-                except (GraphValidationError, AccumulatorOverflowRisk,
-                        DeviceLost):
-                    raise
+                except DeadlineExceeded as e:
+                    # the rung itself ran out of budget mid-flight
+                    # (e.g. a supervisor round): cheaper rungs may still
+                    # fit what little remains — descend, don't abort
+                    record(RungAttempt(
+                        rung.name, "deadline-exceeded", str(e), retries,
+                        shrinks, self.clock() - t_rung))
+                    deadline_skips += 1
+                    last_err = e
+                    break
+                except DeviceLost as e:
+                    # propagates (the mesh supervisor already burned its
+                    # retries), but the breaker needs to see it: record
+                    # the attempt before re-raising
+                    record(RungAttempt(
+                        rung.name, "device-lost", str(e), retries, shrinks,
+                        self.clock() - t_rung))
+                    raise_with_report(e)
+                except (GraphValidationError, AccumulatorOverflowRisk) as e:
+                    raise_with_report(e)
                 except Exception as e:
                     if not is_resource_exhausted(e):
-                        raise
-                    if rung.shrinkable and retries < self.max_retries:
+                        raise_with_report(e)
+                    expired = deadline is not None and deadline.expired()
+                    if (rung.shrinkable and retries < self.max_retries
+                            and not expired):
                         retries += 1
                         shrinks += 1
                         if self.backoff_base_s > 0:
-                            self.sleep(
-                                self.backoff_base_s * (2 ** (retries - 1))
-                            )
+                            pause = self.backoff_base_s * (2 ** (retries - 1))
+                            if deadline is not None:
+                                pause = min(
+                                    pause, max(0.0, deadline.remaining_s())
+                                )
+                            self.sleep(pause)
                         continue
-                    report.attempts.append(RungAttempt(
+                    record(RungAttempt(
                         rung.name, "resource-exhausted", str(e), retries,
-                        shrinks))
+                        shrinks, self.clock() - t_rung))
                     last_err = e
                     break
                 if validate is not None and self.validate_results:
                     problem = validate(out)
                     if problem is not None:
-                        report.attempts.append(RungAttempt(
+                        record(RungAttempt(
                             rung.name, "invalid-result", problem, retries,
-                            shrinks))
+                            shrinks, self.clock() - t_rung))
                         last_invalid = f"{rung.name}: {problem}"
                         last_err = None
                         break
-                report.attempts.append(RungAttempt(
-                    rung.name, "ok", "", retries, shrinks))
+                record(RungAttempt(
+                    rung.name, "ok", "", retries, shrinks,
+                    self.clock() - t_rung))
                 report.final_rung = rung.name
+                self._finalize(report, deadline)
                 return out, report
+        if deadline is not None and deadline.expired() and deadline_skips:
+            detail = f"; last error: {last_err}" if last_err else ""
+            raise_with_report(deadline.exceeded(
+                f"{workload}: deadline {deadline.budget_s:.3f}s exhausted "
+                f"after {deadline.elapsed_s():.3f}s with "
+                f"{deadline_skips} rung(s) skipped{detail} "
+                f"({report.summary()})"
+            ))
         if last_invalid is not None and last_err is None:
-            raise ResultInvariantViolation(
+            raise_with_report(ResultInvariantViolation(
                 f"{workload}: every rung failed or violated result "
                 f"invariants; last violation: {last_invalid} "
                 f"({report.summary()})"
-            )
-        assert last_err is not None
-        raise last_err
+            ))
+        if last_err is None:
+            # every rung was vetoed by the gate (open breakers) or
+            # deadline-skipped without the budget having expired yet
+            raise_with_report(RungUnavailable(
+                f"{workload}: every rung was skipped "
+                f"({report.summary()})"
+            ))
+        raise_with_report(last_err)
 
     def attach(self, result, report: ExecutionReport):
         """``result._replace(report=...)`` honoring ``attach_report``."""

@@ -1,38 +1,60 @@
-"""Approximate butterfly counting via graph sparsification (paper §4.4).
+"""Approximate butterfly counting via graph sparsification (paper §4.4)
+— **not yet implemented** (ROADMAP item 2).
 
-Edge sparsification keeps each edge independently with probability p and
-scales the exact count of the sparsified graph by 1/p^4. Colorful
-sparsification assigns each vertex a color in [0, ceil(1/p)) and keeps
-an edge iff its endpoints' colors match; scale is 1/p^3.
-
-Both are O(m) filters with O(log m) span; estimates are unbiased
-(Sanei-Mehri et al.). The filter itself runs in numpy on the host
-(construction-side, like graph loading); counting reuses the exact
-engine on the sparsified graph.
+The seed shipped host-side numpy filters here (edge sparsification:
+keep each edge w.p. p, scale by 1/p^4; colorful: keep an edge iff its
+endpoints' colors match, scale 1/p^3 — Sanei-Mehri et al.) that were
+never wired to the engine matrix: no plan/execute integration, no
+fused-tile routing, no resilience ladder, no accumulator-width
+guarantees on the scaled estimate, and estimator-mean tests loose
+enough to pass vacuously. Rather than let that half-surface masquerade
+as the paper's §6 capability, every entry point now raises the typed
+:class:`SparsifyNotImplemented` until ROADMAP item 2 (approximate
+analytics tier: sparsification through the fused tile loop + a
+sublinear sampling estimator with concentration-bound error bars)
+lands for real. ``tests/test_sparsify.py`` carries strict
+xfail-with-reason marks against exactly this error, so the suite
+records the gap instead of green-washing it.
 """
 from __future__ import annotations
 
-import numpy as np
-
-from .count import count_butterflies
 from .graph import BipartiteGraph
+from .resilience import ResilienceError
 
-__all__ = ["sparsify_edges", "sparsify_colorful", "approx_count"]
+__all__ = [
+    "SparsifyNotImplemented",
+    "sparsify_edges",
+    "sparsify_colorful",
+    "approx_count",
+]
+
+_ROADMAP_MSG = (
+    "repro.core.sparsify is a seed-state stub that was never wired to "
+    "the engine matrix; the approximate analytics tier is ROADMAP item "
+    "2 (sparsification routed through the fused tile loop + sublinear "
+    "sampling estimator). Until it lands, use the exact engines: "
+    "count_butterflies(g, mode=...)."
+)
 
 
-def sparsify_edges(g: BipartiteGraph, p: float, seed: int = 0) -> BipartiteGraph:
-    rng = np.random.default_rng(seed)
-    keep = rng.random(g.m) < p
-    return BipartiteGraph(g.n_u, g.n_v, g.edges[keep])
+class SparsifyNotImplemented(ResilienceError, NotImplementedError):
+    """Typed marker for the unimplemented approximate tier: part of the
+    :class:`~repro.core.resilience.ResilienceError` taxonomy (callers
+    holding a degradation ladder catch it like any other
+    rung-unavailable condition) and a :class:`NotImplementedError` for
+    everyone else."""
 
 
-def sparsify_colorful(g: BipartiteGraph, p: float, seed: int = 0) -> BipartiteGraph:
-    rng = np.random.default_rng(seed)
-    ncol = int(np.ceil(1.0 / p))
-    cu = rng.integers(0, ncol, g.n_u)
-    cv = rng.integers(0, ncol, g.n_v)
-    keep = cu[g.edges[:, 0]] == cv[g.edges[:, 1]]
-    return BipartiteGraph(g.n_u, g.n_v, g.edges[keep])
+def sparsify_edges(g: BipartiteGraph, p: float,
+                   seed: int = 0) -> BipartiteGraph:
+    """Edge sparsification (keep w.p. ``p``) — ROADMAP item 2."""
+    raise SparsifyNotImplemented(f"sparsify_edges: {_ROADMAP_MSG}")
+
+
+def sparsify_colorful(g: BipartiteGraph, p: float,
+                      seed: int = 0) -> BipartiteGraph:
+    """Colorful sparsification (color-match filter) — ROADMAP item 2."""
+    raise SparsifyNotImplemented(f"sparsify_colorful: {_ROADMAP_MSG}")
 
 
 def approx_count(
@@ -44,22 +66,5 @@ def approx_count(
     aggregation: str = "sort",
     count_dtype=None,
 ) -> float:
-    """Unbiased estimate of the total butterfly count."""
-    if method == "edge":
-        gs = sparsify_edges(g, p, seed)
-        scale = 1.0 / p**4
-    elif method == "colorful":
-        gs = sparsify_colorful(g, p, seed)
-        # Colorful keeps a butterfly iff all four vertices share a color
-        # class pairing: probability p^3 (Sanei-Mehri et al.).
-        scale = 1.0 / p**3
-    else:
-        raise ValueError(f"method must be edge|colorful, got {method}")
-    r = count_butterflies(
-        gs,
-        order=order,
-        aggregation=aggregation,
-        mode="global",
-        count_dtype=count_dtype,
-    )
-    return float(r.total) * scale
+    """Unbiased estimate of the total butterfly count — ROADMAP item 2."""
+    raise SparsifyNotImplemented(f"approx_count: {_ROADMAP_MSG}")

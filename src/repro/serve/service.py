@@ -1,0 +1,611 @@
+"""The butterfly analytics service: a concurrent, deadline-aware front
+door over resident device graphs.
+
+Layering (docs/ARCHITECTURE.md §serving): the service owns *queries*
+— admission, deadlines, caching, breakers — and delegates *execution*
+to the same ladder substrate the one-shot entry points use:
+
+::
+
+   ButterflyService.query()
+     ├─ AdmissionController.try_admit()      (shed-on-full, typed)
+     ├─ ResultCache.get(version, qkey)       (O(1) repeat queries)
+     ├─ ResiliencePolicy.execute(            (core/resilience.py)
+     │      rungs       = engine ladder over the *resident* RankedGraph
+     │      deadline    = remaining per-request budget
+     │      rung_gate   = CircuitBreaker.allow() + EWMA cost estimate
+     │      on_rung     = breaker feedback + EWMA update)
+     │        └─ count_from_ranked / peel_* (core pipeline + kernels)
+     └─ stale fallback                       (ResultCache.stale_get)
+
+Graphs are registered once: preprocessing (ranking + CSR upload) runs
+at ``register()`` time and every query hits the resident
+:class:`~repro.core.graph.RankedGraph`, keyed by the graph's
+content-hash *version*. Every response carries the engine-level
+:class:`~repro.core.resilience.ExecutionReport` (which rungs ran) and
+a :class:`ServiceReport` (what the service did around them: queue
+wait, cache tier, breaker snapshots, deadline slack).
+
+Degradation order under deadline pressure mirrors the ISSUE:
+``fused_pallas -> fused -> xla`` for counting, ``exact -> range`` and
+``device -> host`` for peeling, and — when no live rung fits the
+remaining budget — the last good *stale* result for the same query
+shape, explicitly marked with the version it was computed against.
+Every rung is bitwise-identical where it applies, so degradation never
+changes accepted answers, only how (or whether) they are computed.
+"""
+from __future__ import annotations
+
+import concurrent.futures as _cf
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from ..core import count as _count
+from ..core import peel as _peel
+from ..core import resilience as _res
+from ..core.graph import BipartiteGraph, RankedGraph, preprocess
+from ..core.ranking import make_order
+from ..testing import faults as _faults
+from .admission import AdmissionController
+from .breaker import CircuitBreaker
+from .cache import ResultCache
+
+__all__ = [
+    "Query",
+    "ServiceReport",
+    "ServiceResponse",
+    "ButterflyService",
+    "QUERY_KINDS",
+]
+
+QUERY_KINDS = ("count", "peel_tips", "peel_tips_stored", "peel_wings")
+
+# service-side engine defaults: the fused engine is the fastest rung
+# that stays fast on a CPU host (fused_pallas runs interpret-mode
+# kernels off-TPU — callers on real accelerators ask for it per query)
+DEFAULT_COUNT_ENGINE = "fused"
+DEFAULT_PEEL_ENGINE = "host"
+
+
+@dataclasses.dataclass(frozen=True)
+class Query:
+    """One analytics request against a registered graph.
+
+    ``deadline_s=None`` takes the service default; the countdown
+    starts at *admission*, so queue wait spends the same budget
+    execution does. ``allow_stale`` opts into the cached-stale bottom
+    rung when the budget dies before any live rung."""
+
+    graph: str
+    kind: str = "count"
+    mode: str = "global"  # count only: global | vertex | edge | all
+    engine: Optional[str] = None  # None -> service default for the kind
+    aggregation: str = "sort"
+    side: Optional[int] = None  # tips only: force the peeled side
+    peel_mode: str = "exact"  # peel only: exact | range
+    deadline_s: Optional[float] = None
+    allow_stale: bool = True
+
+    def validate(self) -> None:
+        if self.kind not in QUERY_KINDS:
+            raise ValueError(
+                f"kind must be one of {QUERY_KINDS}, got {self.kind!r}"
+            )
+        if self.kind == "count":
+            if self.mode not in _count.MODES:
+                raise ValueError(
+                    f"mode must be {'|'.join(_count.MODES)}, "
+                    f"got {self.mode!r}"
+                )
+            eng = self.engine or DEFAULT_COUNT_ENGINE
+            if eng not in _count.ENGINES:
+                raise ValueError(
+                    f"count engine must be {'|'.join(_count.ENGINES)}, "
+                    f"got {eng!r}"
+                )
+        else:
+            eng = self.engine or DEFAULT_PEEL_ENGINE
+            if eng not in _peel.PEEL_ENGINES:
+                raise ValueError(
+                    f"peel engine must be "
+                    f"{'|'.join(_peel.PEEL_ENGINES)}, got {eng!r}"
+                )
+            if self.peel_mode not in _peel.PEEL_MODES:
+                raise ValueError(
+                    f"peel_mode must be {'|'.join(_peel.PEEL_MODES)}, "
+                    f"got {self.peel_mode!r}"
+                )
+        if self.deadline_s is not None and self.deadline_s <= 0:
+            raise ValueError(
+                f"deadline_s must be > 0, got {self.deadline_s}"
+            )
+
+    def resolved_engine(self) -> str:
+        if self.engine is not None:
+            return self.engine
+        return (DEFAULT_COUNT_ENGINE if self.kind == "count"
+                else DEFAULT_PEEL_ENGINE)
+
+    def cache_key(self) -> tuple:
+        """The knobs that name a result. The requested engine is part
+        of the key on purpose: rungs are bitwise-identical so sharing
+        across engines would be sound, but keeping keys engine-exact
+        makes cache behavior trivially auditable (a hit always came
+        from an identically-shaped query)."""
+        return (self.kind, self.mode, self.resolved_engine(),
+                self.aggregation, self.side, self.peel_mode)
+
+
+@dataclasses.dataclass
+class ServiceReport:
+    """What the service did around engine execution for one query."""
+
+    graph: str
+    version: str
+    kind: str
+    cache: str  # "hit" | "miss" | "stale"
+    stale_version: Optional[str] = None  # version a stale result is from
+    queue_wait_s: float = 0.0
+    exec_wall_s: float = 0.0
+    total_wall_s: float = 0.0
+    deadline_s: Optional[float] = None
+    deadline_slack_s: Optional[float] = None  # remaining at completion
+    rungs_tried: List[str] = dataclasses.field(default_factory=list)
+    final_rung: Optional[str] = None
+    degraded: bool = False
+    breakers: Dict[str, dict] = dataclasses.field(default_factory=dict)
+
+    def summary(self) -> str:
+        parts = [
+            f"{self.kind}@{self.graph}[{self.version[:8]}]",
+            f"cache={self.cache}",
+            f"wait={self.queue_wait_s:.3f}s",
+            f"wall={self.exec_wall_s:.3f}s",
+        ]
+        if self.rungs_tried:
+            parts.append("rungs=" + "->".join(self.rungs_tried))
+        if self.final_rung:
+            parts.append(f"final={self.final_rung}"
+                         + ("(degraded)" if self.degraded else ""))
+        if self.deadline_slack_s is not None:
+            parts.append(f"slack={self.deadline_slack_s:.3f}s")
+        if self.stale_version:
+            parts.append(f"stale_from={self.stale_version[:8]}")
+        return " ".join(parts)
+
+
+@dataclasses.dataclass
+class ServiceResponse:
+    """``result`` is the engine-shaped CountResult/PeelResult;
+    ``execution`` its ExecutionReport (None on an exact cache hit);
+    ``service`` the serving-layer audit."""
+
+    result: Any
+    service: ServiceReport
+    execution: Optional[_res.ExecutionReport] = None
+
+
+@dataclasses.dataclass
+class _Registration:
+    """One resident graph version."""
+
+    key: str
+    version: str
+    graph: BipartiteGraph
+    rg: RankedGraph
+    order: str
+    lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock
+    )
+    # lazily-computed resident peel inputs, shared across queries
+    tip_side: Optional[int] = None
+    tip_counts: Optional[np.ndarray] = None
+    wing_counts: Optional[np.ndarray] = None
+
+
+class ButterflyService:
+    """Concurrent deadline-aware butterfly analytics over resident
+    graphs. See the module docstring for the execution pipeline; knob
+    reference lives in README.md.
+
+    ``workers`` bounds concurrent execution; ``queue_cap`` bounds the
+    line behind them (admission capacity = workers + queue_cap).
+    ``default_deadline_s`` applies when a query carries none
+    (``None`` = no deadline). Breaker knobs are per-(version, rung);
+    ``clock`` injects monotonic time for deterministic tests.
+    """
+
+    def __init__(
+        self,
+        *,
+        workers: int = 2,
+        queue_cap: int = 8,
+        default_deadline_s: Optional[float] = None,
+        breaker_threshold: int = 3,
+        breaker_cooldown_s: float = 5.0,
+        ewma_alpha: float = 0.4,
+        order: str = "degree",
+        clock: Callable[[], float] = time.monotonic,
+        policy: Optional[_res.ResiliencePolicy] = None,
+    ):
+        if int(workers) < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        if int(queue_cap) < 0:
+            raise ValueError(f"queue_cap must be >= 0, got {queue_cap}")
+        self.workers = int(workers)
+        self.default_deadline_s = default_deadline_s
+        self.breaker_threshold = int(breaker_threshold)
+        self.breaker_cooldown_s = float(breaker_cooldown_s)
+        self.ewma_alpha = float(ewma_alpha)
+        self.order = order
+        self._clock = clock
+        self._policy = policy or _res.ResiliencePolicy(clock=clock)
+        self.admission = AdmissionController(self.workers + int(queue_cap))
+        self.cache = ResultCache()
+        self._graphs: Dict[str, _Registration] = {}
+        self._breakers: Dict[Tuple[str, str], CircuitBreaker] = {}
+        self._cost_ewma: Dict[Tuple[str, str], float] = {}
+        self._lock = threading.Lock()
+        self._pool = _cf.ThreadPoolExecutor(
+            max_workers=self.workers, thread_name_prefix="bfly-serve"
+        )
+        self.shed = 0
+        self.served = 0
+        self.stale_served = 0
+
+    # -- registration --------------------------------------------------
+
+    def register(self, key: str, graph: BipartiteGraph) -> str:
+        """Make ``graph`` resident under ``key``; returns its version
+        (content hash). Re-registering identical content is a no-op;
+        new content preprocesses the new version and invalidates the
+        old version's exact cache entries (stale entries survive as
+        the explicitly-marked fallback tier)."""
+        version = graph.content_hash()
+        with self._lock:
+            existing = self._graphs.get(key)
+            if existing is not None and existing.version == version:
+                return version
+        # preprocess outside the lock: O(m log m) ranking + CSR build
+        graph.accumulator_preflight()
+        ordering = make_order(graph, self.order)
+        rg = preprocess(graph, ordering, order_name=self.order)
+        rec = _Registration(
+            key=key, version=version, graph=graph, rg=rg, order=self.order
+        )
+        with self._lock:
+            existing = self._graphs.get(key)
+            if existing is not None and existing.version == version:
+                return version  # raced with an identical register
+            if existing is not None:
+                self.cache.invalidate_version(existing.version)
+            self._graphs[key] = rec
+        return version
+
+    def registered(self) -> Dict[str, str]:
+        with self._lock:
+            return {k: r.version for k, r in self._graphs.items()}
+
+    def _registration(self, key: str) -> _Registration:
+        with self._lock:
+            rec = self._graphs.get(key)
+        if rec is None:
+            raise KeyError(
+                f"graph {key!r} is not registered "
+                f"(known: {sorted(self._graphs)})"
+            )
+        return rec
+
+    # -- breakers / cost model ----------------------------------------
+
+    def _breaker(self, version: str, rung: str) -> CircuitBreaker:
+        with self._lock:
+            br = self._breakers.get((version, rung))
+            if br is None:
+                br = CircuitBreaker(
+                    threshold=self.breaker_threshold,
+                    cooldown_s=self.breaker_cooldown_s,
+                    clock=self._clock,
+                )
+                self._breakers[(version, rung)] = br
+            return br
+
+    def _estimate_s(self, version: str, rung: str) -> Optional[float]:
+        with self._lock:
+            return self._cost_ewma.get((version, rung))
+
+    def _observe_cost(self, version: str, rung: str, wall_s: float) -> None:
+        with self._lock:
+            prev = self._cost_ewma.get((version, rung))
+            self._cost_ewma[(version, rung)] = (
+                wall_s if prev is None
+                else self.ewma_alpha * wall_s
+                + (1.0 - self.ewma_alpha) * prev
+            )
+
+    def breaker_snapshot(self, version: str) -> Dict[str, dict]:
+        with self._lock:
+            items = [
+                (rung, br) for (v, rung), br in self._breakers.items()
+                if v == version
+            ]
+        return {rung: br.snapshot() for rung, br in items}
+
+    # -- query entry points -------------------------------------------
+
+    def submit(self, query: Query) -> "_cf.Future[ServiceResponse]":
+        """Admit-or-shed, then enqueue on the bounded pool. Raises
+        :class:`~repro.core.resilience.AdmissionRejected`
+        *synchronously* when the house is full — shedding must cost
+        the caller nothing but the refusal."""
+        query.validate()
+        rec = self._registration(query.graph)  # typed KeyError pre-admit
+        try:
+            self.admission.try_admit()
+        except _res.AdmissionRejected:
+            self.shed += 1
+            raise
+        budget = (query.deadline_s if query.deadline_s is not None
+                  else self.default_deadline_s)
+        deadline = (None if budget is None
+                    else _res.Deadline(budget, clock=self._clock))
+        t_submit = self._clock()
+        fut = self._pool.submit(self._run, query, rec, deadline, t_submit)
+
+        def _release(_f):
+            self.admission.release()
+
+        fut.add_done_callback(_release)
+        return fut
+
+    def query(self, query: Query) -> ServiceResponse:
+        """Synchronous :meth:`submit`; raises the worker's typed error
+        (AdmissionRejected / DeadlineExceeded / ResilienceError)
+        directly rather than wrapped in a concurrent.futures error."""
+        return self.submit(query).result()
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=True)
+
+    def __enter__(self) -> "ButterflyService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- resident peel inputs -----------------------------------------
+
+    def _tip_inputs(self, rec: _Registration, side: Optional[int]):
+        """Resident per-vertex counts for tip peeling (computed once
+        per version; the engines treat them as read-only)."""
+        with rec.lock:
+            if rec.tip_counts is None:
+                w_u, w_v = rec.graph.wedge_totals()
+                rec.tip_side = 0 if w_u <= w_v else 1
+                r = _count.count_butterflies(
+                    rec.graph, mode="vertex", order=rec.order,
+                    count_dtype=_count.default_count_dtype(),
+                )
+                rec.tip_counts = np.asarray(
+                    r.per_u if rec.tip_side == 0 else r.per_v
+                )
+            if side is not None and side != rec.tip_side:
+                # forced off-default side: compute on demand, uncached
+                r = _count.count_butterflies(
+                    rec.graph, mode="vertex", order=rec.order,
+                    count_dtype=_count.default_count_dtype(),
+                )
+                return side, np.asarray(r.per_u if side == 0 else r.per_v)
+            return rec.tip_side, rec.tip_counts
+
+    def _wing_inputs(self, rec: _Registration) -> np.ndarray:
+        with rec.lock:
+            if rec.wing_counts is None:
+                r = _count.count_butterflies(
+                    rec.graph, mode="edge", order=rec.order,
+                    count_dtype=_count.default_count_dtype(),
+                )
+                rec.wing_counts = np.asarray(r.per_edge)
+            return rec.wing_counts
+
+    # -- ladder construction ------------------------------------------
+
+    def _count_rungs(self, rec: _Registration, q: Query):
+        engine = q.resolved_engine()
+        ladder = _count.COUNT_LADDERS.get(engine, (engine,))
+
+        def make(eng):
+            def run(shrinks):
+                mc = None
+                if shrinks:
+                    base = _count.auto_chunk_budget()
+                    mc = _count.shrink_budget(base, shrinks)
+                out = _count.count_from_ranked(
+                    rec.rg,
+                    aggregation=q.aggregation,
+                    mode=q.mode,
+                    engine=eng,
+                    max_chunk=mc,
+                )
+                return jax.device_get(out)
+
+            return _res.Rung(eng, run)
+
+        validate = _count.count_validator(rec.graph, q.mode)
+        interpret = lambda out: _count.interpret_counts(  # noqa: E731
+            rec.rg, rec.graph, q.mode, out, q.aggregation, rec.order
+        )
+        return [make(e) for e in ladder], validate, interpret
+
+    def _peel_rungs(self, rec: _Registration, q: Query):
+        engine = q.resolved_engine()
+        engines = ("device", "host") if engine == "device" else ("host",)
+        modes = (("exact", "range") if q.peel_mode == "exact"
+                 else ("range",))
+        # deadline degradation order: cheapen the round structure
+        # first (exact -> range collapses ladder rounds), then give up
+        # the device round loop (device -> host)
+        combos = [(e, m) for e in engines for m in modes]
+
+        if q.kind == "peel_wings":
+            counts = self._wing_inputs(rec)
+            frontend, kwargs = _peel.peel_wings, {}
+        else:
+            side, counts = self._tip_inputs(rec, q.side)
+            frontend = (_peel.peel_tips if q.kind == "peel_tips"
+                        else _peel.peel_tips_stored)
+            kwargs = {"side": side}
+
+        def make(eng, pm):
+            def run(shrinks):
+                # resilience=False: the service ladder owns descent,
+                # retries, validation, and reporting for this rung
+                return frontend(
+                    rec.graph, counts=counts, engine=eng,
+                    aggregation=q.aggregation, peel_mode=pm,
+                    resilience=False, **kwargs,
+                )
+
+            return _res.Rung(f"{eng}/{pm}", run, shrinkable=False)
+
+        validate = _peel.peel_validator(counts)
+        return ([make(e, m) for e, m in combos], validate,
+                lambda out: out)
+
+    # -- the worker ---------------------------------------------------
+
+    def _run(self, q: Query, rec: _Registration,
+             deadline: Optional[_res.Deadline],
+             t_submit: float) -> ServiceResponse:
+        queue_wait = self._clock() - t_submit
+        _faults.maybe_overload("serve.worker")
+        qkey = q.cache_key()
+        version = rec.version
+
+        def finish(report: ServiceReport) -> ServiceReport:
+            report.queue_wait_s = queue_wait
+            report.total_wall_s = self._clock() - t_submit
+            report.deadline_s = (
+                None if deadline is None else deadline.budget_s
+            )
+            if deadline is not None:
+                report.deadline_slack_s = deadline.remaining_s()
+            report.breakers = self.breaker_snapshot(version)
+            return report
+
+        cached = self.cache.get(version, qkey)
+        if cached is not None:
+            self.served += 1
+            return ServiceResponse(
+                result=cached,
+                service=finish(ServiceReport(
+                    graph=q.graph, version=version, kind=q.kind,
+                    cache="hit",
+                )),
+                execution=None,
+            )
+
+        if q.kind == "count":
+            rungs, validate, interpret = self._count_rungs(rec, q)
+        else:
+            rungs, validate, interpret = self._peel_rungs(rec, q)
+
+        def gate(rung: _res.Rung) -> Optional[str]:
+            br = self._breaker(version, rung.name)
+            reason = br.allow()
+            if reason is not None:
+                return reason
+            if deadline is not None:
+                est = self._estimate_s(version, rung.name)
+                if est is not None and est > deadline.remaining_s():
+                    br.record_neutral()  # return an unused probe slot
+                    return (f"estimated {est:.3f}s exceeds remaining "
+                            f"budget {deadline.remaining_s():.3f}s")
+            return None
+
+        def on_rung(attempt: _res.RungAttempt) -> None:
+            br = self._breaker(version, attempt.rung)
+            if attempt.outcome == "ok":
+                br.record_success()
+                self._observe_cost(version, attempt.rung, attempt.wall_s)
+            elif attempt.outcome in ("resource-exhausted", "device-lost"):
+                br.record_failure()
+                self._observe_cost(version, attempt.rung, attempt.wall_s)
+            elif attempt.outcome in ("skipped", "deadline-skipped"):
+                pass  # never ran: no health or cost signal
+            else:
+                # degradable non-breaker outcomes (capacity, validation,
+                # straggler, checkpoint, deadline-exceeded): clear any
+                # probe slot, leave failure counts alone
+                br.record_neutral()
+                if attempt.wall_s:
+                    self._observe_cost(
+                        version, attempt.rung, attempt.wall_s
+                    )
+
+        try:
+            out, report = self._policy.execute(
+                f"serve.{q.kind}", rungs, validate,
+                deadline=deadline, rung_gate=gate, on_rung=on_rung,
+            )
+        except _res.AdmissionRejected:
+            raise
+        except _res.ResilienceError as e:
+            stale = (self.cache.stale_get(q.graph, qkey)
+                     if q.allow_stale else None)
+            if stale is None:
+                raise
+            stale_version, result = stale
+            self.stale_served += 1
+            self.served += 1
+            return ServiceResponse(
+                result=result,
+                service=finish(ServiceReport(
+                    graph=q.graph, version=version, kind=q.kind,
+                    cache="stale", stale_version=stale_version,
+                    exec_wall_s=getattr(
+                        getattr(e, "report", None), "wall_s", 0.0
+                    ) or 0.0,
+                    rungs_tried=[
+                        f"{a.rung}[{a.outcome}]"
+                        for a in getattr(
+                            getattr(e, "report", None), "attempts", []
+                        )
+                    ],
+                )),
+                execution=getattr(e, "report", None),
+            )
+
+        result = interpret(out)
+        result = self._policy.attach(result, report)
+        self.cache.put(version, q.graph, qkey, result)
+        self.served += 1
+        return ServiceResponse(
+            result=result,
+            service=finish(ServiceReport(
+                graph=q.graph, version=version, kind=q.kind,
+                cache="miss",
+                exec_wall_s=report.wall_s,
+                rungs_tried=[
+                    f"{a.rung}[{a.outcome}]" for a in report.attempts
+                ],
+                final_rung=report.final_rung,
+                degraded=report.degraded,
+            )),
+            execution=report,
+        )
+
+    def stats(self) -> dict:
+        return {
+            "admission": self.admission.stats(),
+            "cache": self.cache.stats(),
+            "served": self.served,
+            "stale_served": self.stale_served,
+            "shed": self.shed,
+            "graphs": self.registered(),
+        }

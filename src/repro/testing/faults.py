@@ -60,6 +60,8 @@ __all__ = [
     "maybe_poison",
     "maybe_device_loss",
     "maybe_slow",
+    "maybe_slow_rung",
+    "maybe_overload",
     "hash_bits_override",
     "capacity_override",
     "worker_env",
@@ -78,6 +80,8 @@ KINDS = (
     "capacity_overflow",  # shrink the frontier/tile capacity budget
     "device_loss",  # kill/hang the subprocess device worker
     "slow",  # delay a device worker (straggler; configurable seconds)
+    "slow_rung",  # delay an engine rung's entry (deadline-pressure)
+    "overload",  # delay the serving worker path (admission-pressure)
 )
 
 
@@ -251,6 +255,40 @@ def maybe_slow(site: str, *, device: int = 0) -> None:
         import time
 
         time.sleep(float(f.params.get("delay", 0.25)))
+
+
+def maybe_slow_rung(site: str) -> None:
+    """``slow_rung`` fault: sleep ``delay`` seconds (default 0.05) at
+    an engine rung's entry (sites ``count.<engine>`` /
+    ``<peel_frontend>.<rung>``). This is the deadline-pressure fault:
+    it burns a query's budget inside a specific rung so the serving
+    layer's budget-aware ladder walk must skip the remaining slow
+    rungs (or fall back to a cached-stale result) instead of blowing
+    the deadline. Host-level dispatch only — the sleep happens before
+    any traced code, so jit caches never see it."""
+    if not _active:
+        return
+    f = should_fire("slow_rung", site)
+    if f is not None:
+        import time
+
+        time.sleep(float(f.params.get("delay", 0.05)))
+
+
+def maybe_overload(site: str) -> None:
+    """``overload`` fault: sleep ``delay`` seconds (default 0.05) on
+    the serving layer's worker path (site ``serve.worker``), pinning
+    workers so the bounded queue fills and the admission controller
+    must shed with typed :class:`AdmissionRejected` — the chaos
+    matrix's way of offering ≥ 2x capacity without needing wall-clock
+    scale."""
+    if not _active:
+        return
+    f = should_fire("overload", site)
+    if f is not None:
+        import time
+
+        time.sleep(float(f.params.get("delay", 0.05)))
 
 
 def worker_env(env: dict, *, device: int = 0,

@@ -148,6 +148,43 @@ def test_checkpoint_store_persists_and_reloads(tmp_path):
         CheckpointStore().restore()
 
 
+def test_checkpoint_store_retain_last_bounds_directory(tmp_path):
+    """retain_last=N keeps only the newest N round files (the newest is
+    never pruned; recovery only ever restores the latest snapshot)."""
+    d = str(tmp_path / "bounded")
+    store = CheckpointStore(directory=d, retain_last=2)
+    for idx in (1, 2, 3, 4, 5):
+        cp = _sample_checkpoint()
+        store.save(RoundCheckpoint.from_dict(
+            {**cp.to_dict(), "round_index": idx}
+        ))
+        files = sorted(os.listdir(d))
+        assert len(files) <= 2
+        assert files[-1] == f"checkpoint_round_{idx:06d}.json"
+    # latest survives and reloads; restore still verifies clean
+    fresh = CheckpointStore(directory=d)
+    assert fresh.latest().round_index == 5
+    fresh.restore()
+    with pytest.raises(ValueError, match="retain_last"):
+        CheckpointStore(directory=d, retain_last=0)
+
+
+def test_peel_checkpoint_dir_stays_bounded_with_retain_last(tmp_path):
+    """A long supervised peel run's checkpoint dir stays bounded when
+    the caller hands the frontends a pruning store — and the numbers
+    stay bitwise-identical to the unbounded run."""
+    d = str(tmp_path / "bounded_run")
+    host = peel_tips(GRAPH, side=0)
+    store = CheckpointStore(directory=d, retain_last=3)
+    r = peel_tips(GRAPH, side=0, devices=2, checkpoint=store)
+    assert np.array_equal(r.numbers, host.numbers)
+    assert r.rounds + 1 > 3  # the run really outgrew the bound
+    files = sorted(os.listdir(d))
+    assert len(files) == 3
+    # the newest snapshot is the final round's and still verifies
+    assert CheckpointStore(directory=d).restore() is not None
+
+
 def test_peel_with_checkpoint_dir_writes_rounds(tmp_path):
     d = str(tmp_path / "run")
     host = peel_tips(GRAPH, side=0)

@@ -1,13 +1,53 @@
-"""Approximate counting (paper §4.4): estimator sanity + scaling."""
+"""Approximate counting (paper §4.4): strict xfail markers.
+
+``core/sparsify.py`` is a seed-state stub that was never wired to the
+engine matrix; its entry points now raise the typed
+:class:`SparsifyNotImplemented` (ROADMAP item 2) instead of returning
+half-supported estimates. These tests xfail *strictly* against exactly
+that error: the moment the approximate tier really lands, the xpass
+turns the marks into failures and forces this file back into real
+assertions (the pre-stub estimator checks are kept in the bodies for
+that day).
+"""
 import numpy as np
 import pytest
 
-from repro.core import BipartiteGraph
+from repro.core import BipartiteGraph  # noqa: F401 - future real tests
 from repro.core.oracle import global_count
-from repro.core.sparsify import approx_count, sparsify_colorful, sparsify_edges
+from repro.core.sparsify import (
+    SparsifyNotImplemented,
+    approx_count,
+    sparsify_colorful,
+    sparsify_edges,
+)
 from repro.data.graphs import powerlaw_bipartite
 
+NOT_WIRED = pytest.mark.xfail(
+    raises=SparsifyNotImplemented,
+    reason="core/sparsify.py is a seed-state stub pending ROADMAP item 2 "
+           "(approximate analytics tier); entry points raise the typed "
+           "SparsifyNotImplemented instead of passing vacuously",
+    strict=True,
+)
 
+
+def test_sparsify_error_is_typed():
+    """The stub must fail *typed*: catchable both as the resilience
+    taxonomy and as builtin NotImplementedError, with the ROADMAP
+    pointer in the message."""
+    from repro.core.resilience import ResilienceError
+
+    g = powerlaw_bipartite(50, 40, 200, seed=0)
+    with pytest.raises(ResilienceError):
+        sparsify_edges(g, 0.5)
+    with pytest.raises(NotImplementedError) as ei:
+        approx_count(g, 0.5)
+    assert "ROADMAP item" in str(ei.value)
+    with pytest.raises(NotImplementedError):
+        sparsify_colorful(g, 0.5)
+
+
+@NOT_WIRED
 def test_sparsified_graph_is_subgraph():
     g = powerlaw_bipartite(200, 150, 1200, seed=0)
     for fn in (sparsify_edges, sparsify_colorful):
@@ -17,6 +57,7 @@ def test_sparsified_graph_is_subgraph():
         assert all(tuple(e) in full for e in gs.edges)
 
 
+@NOT_WIRED
 @pytest.mark.parametrize("method", ["edge", "colorful"])
 def test_estimator_mean_close(method):
     g = powerlaw_bipartite(300, 250, 2500, seed=2)
@@ -26,6 +67,7 @@ def test_estimator_mean_close(method):
     assert err < 0.35, (np.mean(ests), exact)
 
 
+@NOT_WIRED
 def test_p_one_is_exact():
     g = powerlaw_bipartite(100, 80, 500, seed=3)
     exact = global_count(g)
