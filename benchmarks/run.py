@@ -5,7 +5,8 @@ Prints ``name,us_per_call,derived`` CSV (see DESIGN.md §9 index).
   fused       -> zero-materialization fused engine vs materialize-then-
                  aggregate (wall time + compiled peak-temp bytes)
   ranking     -> paper Table 3
-  sparsify    -> paper Fig. 11
+  approx      -> paper Fig. 11 / accuracy tier: sparsified + sampled
+                 estimators, speed-vs-error frontier + fault overlay
   peeling     -> paper Table 4 / Figs. 12-13
   kernels     -> Pallas kernel validation timings
   distributed -> shard_map engine on the host mesh
@@ -26,8 +27,11 @@ section writes ``BENCH_distributed_peeling.json``
 overlay, every row carrying a bitwise-parity bit), and the serving
 section writes ``BENCH_serving.json`` (``--json-out-serving``;
 closed-loop p50/p99 vs client concurrency + overload / slow_rung
-chaos overlay with typed-shed and cache-hit-parity gates) so future
-PRs have trajectories to compare against.
+chaos overlay with typed-shed and cache-hit-parity gates), and the
+approx section writes ``BENCH_approx.json`` (``--json-out-approx``;
+the accuracy tier's speed-vs-error frontier with per-row coverage
+bits, a sample-vs-exact speedup gate, and a fused-OOM fault overlay)
+so future PRs have trajectories to compare against.
 
 ``python -m benchmarks.run [section ...] [--quick | --smoke]``
 
@@ -45,12 +49,12 @@ straight to its ``write_json`` so a clean checkout refreshes all four
 import argparse
 import sys
 
-SECTIONS = ("counting", "fused", "ranking", "sparsify", "peeling",
+SECTIONS = ("counting", "fused", "ranking", "approx", "peeling",
             "kernels", "distributed", "distributed_peeling", "serving")
 # the sections that write machine-readable BENCH_*.json baselines;
 # `python -m benchmarks.run all` runs exactly these
-JSON_SECTIONS = ("counting", "fused", "peeling", "distributed_peeling",
-                 "serving")
+JSON_SECTIONS = ("counting", "fused", "approx", "peeling",
+                 "distributed_peeling", "serving")
 
 
 def main() -> None:
@@ -86,6 +90,9 @@ def main() -> None:
     ap.add_argument("--json-out-serving", default="BENCH_serving.json",
                     help="path for the serving load curve + chaos "
                          "overlay (empty string disables)")
+    ap.add_argument("--json-out-approx", default="BENCH_approx.json",
+                    help="path for the approximate-tier speed-vs-error "
+                         "frontier (empty string disables)")
     args = ap.parse_args()
     sections = args.sections or list(SECTIONS)
     if "all" in sections:
@@ -127,6 +134,12 @@ def main() -> None:
                 repeats=1, concurrency=(2, 4), iters=4,
             )
             print(f"# wrote {args.json_out_serving}", file=sys.stderr)
+        if "approx" in sections and args.json_out_approx:
+            from . import bench_approx
+            bench_approx.write_json(
+                args.json_out_approx, graphs=("pl_small",), repeats=1
+            )
+            print(f"# wrote {args.json_out_approx}", file=sys.stderr)
         if args.faults:
             if "counting" in sections and args.json_out:
                 from . import bench_counting
@@ -179,9 +192,15 @@ def main() -> None:
     if "ranking" in sections:
         from . import bench_ranking
         bench_ranking.main(["--graphs", "pl_small"] if args.quick else [])
-    if "sparsify" in sections:
-        from . import bench_sparsify
-        bench_sparsify.main(["--graphs", "pl_small"] if args.quick else [])
+    if "approx" in sections:
+        from . import bench_approx
+        ax_args = ["--graphs", "pl_small"] if args.quick else [
+            "--graphs", "pl_small", "pl_medium"]
+        if args.json_out_approx:
+            ax_args += ["--json", args.json_out_approx]
+        bench_approx.main(ax_args)
+        if args.json_out_approx:
+            print(f"# wrote {args.json_out_approx}", file=sys.stderr)
     if "peeling" in sections:
         from . import bench_peeling
         peel_args = ["--graphs", "peel_small"] if args.quick else []

@@ -1,0 +1,158 @@
+#!/usr/bin/env python
+"""Documentation link / code-reference checker.
+
+Docs rot silently: a renamed module or a deleted knob leaves README
+and docs/*.md pointing at nothing, and no test notices. CI runs this
+checker over every tracked markdown file. Four rules:
+
+D1  Relative markdown links ``[text](path)`` must resolve to a file or
+    directory in the repo (external http(s)/mailto links and pure
+    ``#anchors`` are skipped; a ``path#anchor`` suffix is stripped
+    before the existence check).
+
+D2  ``path:symbol`` code references in backticks — e.g.
+    ``core/sparsify.py:approx_count`` — must name an existing file
+    (repo-relative, or under ``src/repro/`` for bare core paths) that
+    actually defines the symbol (``def``/``class``/assignment).
+
+D3  Bare backticked paths that look repo-rooted (``src/...``,
+    ``docs/...``, ``scripts/...``, ``tests/...``, ``benchmarks/...``,
+    ``.github/...``) must exist. Generated artifacts (``BENCH_*.json``)
+    are exempt: they are build outputs, not tracked files.
+
+D4  Every ``docs/*.md`` must be reachable from README.md through
+    relative links (no orphaned design docs).
+
+Stdlib-only (re + pathlib); exits nonzero listing every violation.
+Usage: ``python scripts/check_docs.py [REPO_ROOT]``.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# [text](target) — target captured up to the closing paren. Image
+# links ``![alt](src)`` are exempt: PAPERS.md carries figure refs
+# extracted from papers whose assets are deliberately not shipped.
+_MD_LINK = re.compile(r"(?<!!)\[[^\]]*\]\(([^)\s]+)\)")
+# `path/to/file.py:symbol` (symbol: a python identifier)
+_CODE_REF = re.compile(r"`([\w./-]+\.py):([A-Za-z_]\w*)`")
+# bare `path` mentions that claim to be repo-rooted
+_BARE_PATH = re.compile(
+    r"`((?:src|docs|scripts|tests|benchmarks|\.github)/[\w./-]+)`"
+)
+_ROOTS = ("src", "docs", "scripts", "tests", "benchmarks", ".github")
+
+
+def _md_files(root: Path):
+    yield from sorted(root.glob("*.md"))
+    yield from sorted((root / "docs").glob("*.md"))
+
+
+def _resolve_code_path(root: Path, raw: str) -> Path | None:
+    """D2 path resolution: repo-root-relative first, then the
+    ``src/repro/`` shorthand used throughout the docs."""
+    for cand in (root / raw, root / "src" / "repro" / raw):
+        if cand.is_file():
+            return cand
+    return None
+
+
+def _defines(path: Path, symbol: str) -> bool:
+    text = path.read_text(encoding="utf-8")
+    pat = re.compile(
+        rf"^\s*(?:def|class)\s+{re.escape(symbol)}\b"
+        rf"|^{re.escape(symbol)}\s*(?::[^=]+)?=",
+        re.MULTILINE,
+    )
+    return bool(pat.search(text))
+
+
+def check(root: Path) -> list[str]:
+    errors: list[str] = []
+    linked_docs: set[Path] = set()
+
+    for md in _md_files(root):
+        rel = md.relative_to(root)
+        text = md.read_text(encoding="utf-8")
+
+        # D1: relative links resolve
+        for m in _MD_LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            plain = target.split("#", 1)[0]
+            if not plain:
+                continue
+            dest = (md.parent / plain).resolve()
+            if not dest.exists():
+                errors.append(f"{rel}: broken link -> {target}")
+                continue
+            if dest.suffix == ".md":
+                linked_docs.add(dest)
+
+        # D2: path:symbol refs point at real definitions
+        for m in _CODE_REF.finditer(text):
+            raw, symbol = m.groups()
+            path = _resolve_code_path(root, raw)
+            if path is None:
+                errors.append(f"{rel}: code ref to missing file "
+                              f"`{raw}:{symbol}`")
+            elif not _defines(path, symbol):
+                errors.append(f"{rel}: `{raw}` does not define "
+                              f"`{symbol}`")
+
+        # D3: bare repo-rooted paths exist (skip globs and artifacts)
+        for m in _BARE_PATH.finditer(text):
+            raw = m.group(1).rstrip("/")
+            if "*" in raw or raw.startswith("docs/BENCH"):
+                continue
+            if ":" in raw:
+                continue  # D2 territory
+            if not (root / raw).exists():
+                errors.append(f"{rel}: referenced path does not exist "
+                              f"`{raw}`")
+
+    # D4: no orphaned docs — reachable from README via relative links
+    # (transitively: ARCHITECTURE.md linking APPROXIMATION.md counts)
+    frontier = [root / "README.md"]
+    reachable: set[Path] = set()
+    while frontier:
+        doc = frontier.pop()
+        if doc in reachable or not doc.is_file():
+            continue
+        reachable.add(doc)
+        for m in _MD_LINK.finditer(doc.read_text(encoding="utf-8")):
+            target = m.group(1).split("#", 1)[0]
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            if target.endswith(".md"):
+                frontier.append((doc.parent / target).resolve())
+    for md in sorted((root / "docs").glob("*.md")):
+        if md.resolve() not in reachable:
+            errors.append(
+                f"docs/{md.name}: orphaned — not reachable from "
+                f"README.md via relative links"
+            )
+    return errors
+
+
+def main() -> int:
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else (
+        Path(__file__).resolve().parent.parent
+    )
+    errors = check(root)
+    n_files = len(list(_md_files(root)))
+    if errors:
+        print(f"check_docs: {len(errors)} problem(s) across "
+              f"{n_files} markdown file(s):", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    print(f"check_docs: OK ({n_files} markdown files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

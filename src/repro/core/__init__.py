@@ -2,6 +2,8 @@
 from .graph import BipartiteGraph, RankedGraph, preprocess
 from .ranking import RANKINGS, make_order, wedges_processed
 from .count import CountResult, count_butterflies, count_from_ranked
+from .approx import ApproxCount, SampleState, sample_count
+from .sparsify import approx_count, sparsify_colorful, sparsify_edges
 from .resilience import (
     AccumulatorOverflowRisk,
     CapacityOverflow,
@@ -28,6 +30,12 @@ __all__ = [
     "CountResult",
     "count_butterflies",
     "count_from_ranked",
+    "ApproxCount",
+    "SampleState",
+    "sample_count",
+    "approx_count",
+    "sparsify_edges",
+    "sparsify_colorful",
     "ResilienceError",
     "GraphValidationError",
     "CapacityOverflow",

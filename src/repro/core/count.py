@@ -129,11 +129,22 @@ MODES = _pipeline.MODES
 # Degradation ladder per requested engine (resilience.ResiliencePolicy
 # descends left to right; every rung is bitwise-identical where it
 # applies, so descent changes strategy, never results).
+#
+# The "sample" entry is the approximate tier's zero-cost rung
+# (core/approx.py): NOT part of any exact ladder — an estimate is not
+# bitwise-identical to an exact count — but appended below the exact
+# rungs when a caller opts into accuracy="approx" (serve/service.py),
+# so a deadline too tight for any exact engine still gets a seeded
+# sampled answer with error bars instead of a stale result or a typed
+# failure. Estimates are explicitly marked (ApproxCount + the
+# response's approximate flag); degradation still never silently
+# changes what an *exact* answer means.
 COUNT_LADDERS = {
     "fused_pallas": ("fused_pallas", "fused", "xla"),
     "fused": ("fused", "xla"),
     "pallas": ("pallas", "xla"),
     "xla": ("xla",),
+    "sample": ("sample",),
 }
 
 # Pre-pipeline private names, re-bound for compatibility: tests,

@@ -1241,15 +1241,21 @@ def execute_ladder(
     rungs,
     validate=None,
     plan: Optional[WedgePlan] = None,
+    estimator: Optional[str] = None,
 ):
     """The single resilience wrapper of the pipeline: run a degradation
     ladder under ``policy`` and stamp the plan summary onto the
     resulting :class:`~repro.core.resilience.ExecutionReport`
     (``report.plan``) — engines call this once instead of wiring
-    ``policy.execute`` per call site. Returns ``(result, report)``."""
+    ``policy.execute`` per call site. ``estimator`` records the
+    approximate tier's parameters (``report.estimator``) when the
+    ladder computes an estimate rather than an exact result. Returns
+    ``(result, report)``."""
     out, report = policy.execute(workload, rungs, validate)
     if plan is not None:
         report.plan = (
             plan.summary() if isinstance(plan, WedgePlan) else str(plan)
         )
+    if estimator is not None:
+        report.estimator = estimator
     return out, report

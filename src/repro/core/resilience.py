@@ -261,6 +261,10 @@ class ExecutionReport:
     attempts: List[RungAttempt] = dataclasses.field(default_factory=list)
     final_rung: Optional[str] = None  # rung that produced the result
     plan: Optional[str] = None  # WedgePlan.summary() (set by the pipeline)
+    # estimator parameters when the result is an approximate-tier
+    # estimate (ApproxCount.describe(): method, p/eps, samples, seed,
+    # applied scale) — None for exact results
+    estimator: Optional[str] = None
     checkpoint_restores: int = 0  # supervisor rollbacks to a snapshot
     wall_s: float = 0.0  # total seconds across all rung attempts
     deadline_s: Optional[float] = None  # requested budget (if any)
@@ -309,6 +313,8 @@ class ExecutionReport:
             base += f" wall={self.wall_s:.3f}s"
         if self.deadline_slack_s is not None:
             base += f" slack={self.deadline_slack_s:.3f}s"
+        if self.estimator:
+            base += f" | estimator: {self.estimator}"
         if self.plan:
             base += f" | plan: {self.plan}"
         if self.children:

@@ -45,9 +45,11 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from ..core import approx as _approx
 from ..core import count as _count
 from ..core import peel as _peel
 from ..core import resilience as _res
+from ..core import sparsify as _sparsify
 from ..core.graph import BipartiteGraph, RankedGraph, preprocess
 from ..core.ranking import make_order
 from ..testing import faults as _faults
@@ -79,7 +81,16 @@ class Query:
     ``deadline_s=None`` takes the service default; the countdown
     starts at *admission*, so queue wait spends the same budget
     execution does. ``allow_stale`` opts into the cached-stale bottom
-    rung when the budget dies before any live rung."""
+    rung when the budget dies before any live rung.
+
+    ``accuracy="approx"`` (count/global only) opts into the
+    approximate tier: the exact engine ladder gains a zero-cost
+    ``sample`` rung at the bottom (``COUNT_LADDERS["sample"]``), so a
+    deadline too tight for any exact engine still gets a seeded
+    sampled :class:`~repro.core.approx.ApproxCount` with error bars —
+    explicitly marked via ``ServiceReport.approximate`` — while the
+    service refines the exact answer in the background. ``eps`` is the
+    sampling budget's relative-error target."""
 
     graph: str
     kind: str = "count"
@@ -90,8 +101,27 @@ class Query:
     peel_mode: str = "exact"  # peel only: exact | range
     deadline_s: Optional[float] = None
     allow_stale: bool = True
+    accuracy: str = "exact"  # exact | approx (count/global only)
+    eps: float = 0.1  # approx only: relative-error target
 
     def validate(self) -> None:
+        if self.accuracy not in ("exact", "approx"):
+            raise ValueError(
+                f"accuracy must be 'exact' or 'approx', "
+                f"got {self.accuracy!r}"
+            )
+        if self.accuracy == "approx":
+            if self.kind != "count" or self.mode != "global":
+                raise ValueError(
+                    "accuracy='approx' is only defined for "
+                    "kind='count', mode='global' (the sampling "
+                    f"estimator targets the global total), got "
+                    f"kind={self.kind!r} mode={self.mode!r}"
+                )
+            if not (0.0 < float(self.eps) < 1.0):
+                raise ValueError(
+                    f"eps must be in (0, 1), got {self.eps}"
+                )
         if self.kind not in QUERY_KINDS:
             raise ValueError(
                 f"kind must be one of {QUERY_KINDS}, got {self.kind!r}"
@@ -137,8 +167,21 @@ class Query:
         across engines would be sound, but keeping keys engine-exact
         makes cache behavior trivially auditable (a hit always came
         from an identically-shaped query)."""
-        return (self.kind, self.mode, self.resolved_engine(),
-                self.aggregation, self.side, self.peel_mode)
+        key = (self.kind, self.mode, self.resolved_engine(),
+               self.aggregation, self.side, self.peel_mode)
+        if self.accuracy == "approx":
+            # approx results never share keys with exact ones: an
+            # estimate must not satisfy a later exact query, and a
+            # background refine overwrites only the exact-keyed entry
+            key = key + ("approx", float(self.eps))
+        return key
+
+    def exact_equivalent(self) -> "Query":
+        """The exact-accuracy query this approx query is a stand-in
+        for — used for the cache-upgrade lookup and refine-behind."""
+        return dataclasses.replace(
+            self, accuracy="exact", deadline_s=None, allow_stale=False
+        )
 
 
 @dataclasses.dataclass
@@ -159,6 +202,12 @@ class ServiceReport:
     final_rung: Optional[str] = None
     degraded: bool = False
     breakers: Dict[str, dict] = dataclasses.field(default_factory=dict)
+    # approximate tier: True when the answer is a sampled estimate
+    # (final_rung == "sample"), with the estimator's parameters and
+    # whether an exact refine was kicked off behind the response
+    approximate: bool = False
+    estimator: Optional[str] = None
+    refining: bool = False
 
     def summary(self) -> str:
         parts = [
@@ -176,6 +225,13 @@ class ServiceReport:
             parts.append(f"slack={self.deadline_slack_s:.3f}s")
         if self.stale_version:
             parts.append(f"stale_from={self.stale_version[:8]}")
+        if self.approximate:
+            tag = "approximate"
+            if self.refining:
+                tag += "(refining)"
+            parts.append(tag)
+            if self.estimator:
+                parts.append(self.estimator)
         return " ".join(parts)
 
 
@@ -206,6 +262,8 @@ class _Registration:
     tip_side: Optional[int] = None
     tip_counts: Optional[np.ndarray] = None
     wing_counts: Optional[np.ndarray] = None
+    # lazily-built host CSR for the sampling estimator (approx tier)
+    sample_state: Optional[_approx.SampleState] = None
 
 
 class ButterflyService:
@@ -232,6 +290,7 @@ class ButterflyService:
         order: str = "degree",
         clock: Callable[[], float] = time.monotonic,
         policy: Optional[_res.ResiliencePolicy] = None,
+        refine_approx: bool = True,
     ):
         if int(workers) < 1:
             raise ValueError(f"workers must be >= 1, got {workers}")
@@ -257,6 +316,9 @@ class ButterflyService:
         self.shed = 0
         self.served = 0
         self.stale_served = 0
+        self.approx_served = 0
+        self.refine_approx = bool(refine_approx)
+        self._refining: set = set()
 
     # -- registration --------------------------------------------------
 
@@ -413,6 +475,14 @@ class ButterflyService:
                 rec.wing_counts = np.asarray(r.per_edge)
             return rec.wing_counts
 
+    def _sample_state(self, rec: _Registration) -> _approx.SampleState:
+        """Resident host CSR for the sampling estimator (built once
+        per version, like the peel inputs)."""
+        with rec.lock:
+            if rec.sample_state is None:
+                rec.sample_state = _approx.SampleState.build(rec.graph)
+            return rec.sample_state
+
     # -- ladder construction ------------------------------------------
 
     def _count_rungs(self, rec: _Registration, q: Query):
@@ -436,11 +506,43 @@ class ButterflyService:
 
             return _res.Rung(eng, run)
 
-        validate = _count.count_validator(rec.graph, q.mode)
-        interpret = lambda out: _count.interpret_counts(  # noqa: E731
-            rec.rg, rec.graph, q.mode, out, q.aggregation, rec.order
-        )
-        return [make(e) for e in ladder], validate, interpret
+        exact_validate = _count.count_validator(rec.graph, q.mode)
+        rungs = [make(e) for e in ladder]
+
+        if q.accuracy != "approx":
+            interpret = lambda out: _count.interpret_counts(  # noqa: E731
+                rec.rg, rec.graph, q.mode, out, q.aggregation, rec.order
+            )
+            return rungs, exact_validate, interpret
+
+        # approx tier: the exact ladder keeps first claim on the
+        # budget; the zero-cost sample rung sits underneath so a
+        # deadline too tight for any engine still yields an estimate
+        # rather than a ResilienceError (COUNT_LADDERS["sample"])
+        def run_sample(shrinks):
+            state = self._sample_state(rec)
+            return _approx.sample_count(state, eps=q.eps, seed=0)
+
+        for name in _count.COUNT_LADDERS["sample"]:
+            rungs.append(_res.Rung(
+                name, run_sample, shrinkable=False, zero_cost=True
+            ))
+
+        approx_validate = _sparsify.approx_validator(rec.graph)
+
+        def validate(out) -> Optional[str]:
+            if isinstance(out, _approx.ApproxCount):
+                return approx_validate(out)
+            return exact_validate(out)
+
+        def interpret(out):
+            if isinstance(out, _approx.ApproxCount):
+                return out  # already host-side, nothing to rank-unmap
+            return _count.interpret_counts(
+                rec.rg, rec.graph, q.mode, out, q.aggregation, rec.order
+            )
+
+        return rungs, validate, interpret
 
     def _peel_rungs(self, rec: _Registration, q: Query):
         engine = q.resolved_engine()
@@ -498,6 +600,24 @@ class ButterflyService:
             report.breakers = self.breaker_snapshot(version)
             return report
 
+        if q.accuracy == "approx":
+            # upgrade path: a finished exact answer (possibly from an
+            # earlier refine-behind) beats re-sampling — serve it and
+            # drop the "approximate" marking entirely
+            exact_hit = self.cache.get(
+                version, q.exact_equivalent().cache_key()
+            )
+            if exact_hit is not None:
+                self.served += 1
+                return ServiceResponse(
+                    result=exact_hit,
+                    service=finish(ServiceReport(
+                        graph=q.graph, version=version, kind=q.kind,
+                        cache="hit",
+                    )),
+                    execution=None,
+                )
+
         cached = self.cache.get(version, qkey)
         if cached is not None:
             self.served += 1
@@ -506,6 +626,9 @@ class ButterflyService:
                 service=finish(ServiceReport(
                     graph=q.graph, version=version, kind=q.kind,
                     cache="hit",
+                    approximate=isinstance(cached, _approx.ApproxCount),
+                    estimator=getattr(cached, "describe", lambda: None)()
+                    if isinstance(cached, _approx.ApproxCount) else None,
                 )),
                 execution=None,
             )
@@ -516,6 +639,11 @@ class ButterflyService:
             rungs, validate, interpret = self._peel_rungs(rec, q)
 
         def gate(rung: _res.Rung) -> Optional[str]:
+            if rung.zero_cost:
+                # mirror the policy's own deadline rule: an expired
+                # budget can always afford a zero-cost rung, so the
+                # breaker/EWMA veto never applies to it either
+                return None
             br = self._breaker(version, rung.name)
             reason = br.allow()
             if reason is not None:
@@ -581,10 +709,18 @@ class ButterflyService:
                 execution=getattr(e, "report", None),
             )
 
+        is_approx = isinstance(out, _approx.ApproxCount)
+        if is_approx:
+            report.estimator = out.describe()
         result = interpret(out)
         result = self._policy.attach(result, report)
         self.cache.put(version, q.graph, qkey, result)
         self.served += 1
+        refining = False
+        if is_approx:
+            self.approx_served += 1
+            if self.refine_approx:
+                refining = self._refine_behind(q, rec)
         return ServiceResponse(
             result=result,
             service=finish(ServiceReport(
@@ -596,9 +732,39 @@ class ButterflyService:
                 ],
                 final_rung=report.final_rung,
                 degraded=report.degraded,
+                approximate=is_approx,
+                estimator=report.estimator,
+                refining=refining,
             )),
             execution=report,
         )
+
+    def _refine_behind(self, q: Query, rec: _Registration) -> bool:
+        """Best-effort background exact recount after an approximate
+        answer: submit the exact-equivalent query (no deadline, no
+        stale fallback) so the next identical approx query upgrades
+        to the cached exact result. Deduped per (version, exact key);
+        admission rejection just means the house is busy — the
+        estimate already answered the caller."""
+        exact_q = q.exact_equivalent()
+        token = (rec.version, exact_q.cache_key())
+        with self._lock:
+            if token in self._refining:
+                return False
+            self._refining.add(token)
+
+        def _done(f: "_cf.Future") -> None:
+            with self._lock:
+                self._refining.discard(token)
+            f.exception()  # swallow: refinement is best-effort
+
+        try:
+            self.submit(exact_q).add_done_callback(_done)
+        except Exception:
+            with self._lock:
+                self._refining.discard(token)
+            return False
+        return True
 
     def stats(self) -> dict:
         return {
@@ -606,6 +772,7 @@ class ButterflyService:
             "cache": self.cache.stats(),
             "served": self.served,
             "stale_served": self.stale_served,
+            "approx_served": self.approx_served,
             "shed": self.shed,
             "graphs": self.registered(),
         }

@@ -1,0 +1,49 @@
+"""The docs checker is itself tier-1: the repo's markdown must pass
+it (so a stale link fails the suite, not just the CI docs job), and
+the checker must actually catch each class of rot it claims to."""
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+CHECKER = ROOT / "scripts" / "check_docs.py"
+
+
+def _run(root: Path) -> subprocess.CompletedProcess:
+    return subprocess.run(
+        [sys.executable, str(CHECKER), str(root)],
+        capture_output=True, text=True,
+    )
+
+
+def test_repo_docs_pass():
+    r = _run(ROOT)
+    assert r.returncode == 0, r.stderr
+
+
+def test_checker_catches_each_rot_class(tmp_path):
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "README.md").write_text(
+        "[gone](docs/MISSING.md)\n"            # D1 broken link
+        "`core/nope.py:approx_count`\n"        # D2 missing file
+        "`scripts/check_docs.py:no_such_fn`\n"  # D2 missing symbol
+        "`src/vanished.py`\n"                  # D3 missing bare path
+    )
+    (tmp_path / "docs" / "ORPHAN.md").write_text("unlinked\n")  # D4
+    (tmp_path / "scripts").mkdir()
+    (tmp_path / "scripts" / "check_docs.py").write_text("def main():\n    pass\n")
+    r = _run(tmp_path)
+    assert r.returncode == 1
+    for needle in ("broken link", "missing file", "does not define",
+                   "does not exist", "orphaned"):
+        assert needle in r.stderr, (needle, r.stderr)
+
+
+def test_checker_exempts_images_and_artifacts(tmp_path):
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "README.md").write_text(
+        "![fig](_page_0_Picture_2.jpeg)\n"     # image: exempt
+        "`docs/BENCH_approx.json`\n"           # build artifact: exempt
+    )
+    r = _run(tmp_path)
+    assert r.returncode == 0, r.stderr

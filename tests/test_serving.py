@@ -19,11 +19,13 @@ control flow, not throughput — the closed-loop latency story lives in
 import concurrent.futures as cf
 import os
 import threading
+import time
 
 import numpy as np
 import pytest
 
 from repro.core import count_butterflies
+from repro.core.approx import ApproxCount
 from repro.core.peel import peel_tips, peel_tips_stored, peel_wings
 from repro.core import resilience as res
 from repro.data.graphs import powerlaw_bipartite
@@ -607,5 +609,100 @@ def test_slow_rung_under_deadline_degrades_never_corrupts():
                     _check_against_oracle(q, r.result, oracle)
         assert f.fired > 0
         assert sum(outcomes.values()) == 4
+    finally:
+        service.close()
+
+
+# ---------------------------------------------------------------------------
+# the approximate tier (accuracy="approx"): sampled answers under
+# deadline pressure, marked explicitly, refined behind the response
+# ---------------------------------------------------------------------------
+
+
+def test_approx_query_validation_is_typed():
+    with pytest.raises(ValueError, match="accuracy"):
+        Query(graph="g", accuracy="nope").validate()
+    with pytest.raises(ValueError, match="approx"):
+        Query(graph="g", kind="peel_tips", accuracy="approx").validate()
+    with pytest.raises(ValueError, match="approx"):
+        Query(graph="g", mode="vertex", accuracy="approx").validate()
+    with pytest.raises(ValueError, match="eps"):
+        Query(graph="g", accuracy="approx", eps=0.0).validate()
+    # approx keys never collide with exact keys
+    qa = Query(graph="g", accuracy="approx")
+    assert qa.cache_key() != Query(graph="g").cache_key()
+    assert qa.exact_equivalent().cache_key() == Query(graph="g").cache_key()
+
+
+def test_approx_tight_deadline_answers_from_sample():
+    service = ButterflyService(workers=1, refine_approx=False)
+    service.register("g", G1)
+    exact = int(count_butterflies(G1, mode="global").total)
+    try:
+        q = Query(graph="g", accuracy="approx", eps=0.1,
+                  deadline_s=1e-6, allow_stale=False)
+        r = service.query(q)
+        assert isinstance(r.result, ApproxCount)
+        assert r.service.approximate
+        assert r.service.final_rung == "sample"
+        assert r.service.estimator.startswith("approx(method=sample")
+        assert not r.service.refining  # refine_approx=False
+        assert any("deadline-skipped" in t for t in r.service.rungs_tried)
+        # routing test, not a statistics test (tests/test_sparsify.py
+        # owns coverage): just require a sane same-ballpark estimate
+        assert abs(r.result.estimate - exact) / exact < 0.5
+        assert r.result.ci95 > 0
+        assert "approximate" in r.service.summary()
+        # the estimate is cached under its own approx-suffixed key...
+        r2 = service.query(q)
+        assert r2.service.cache == "hit" and r2.service.approximate
+        # ...and never satisfies the exact-keyed query
+        r3 = service.query(Query(graph="g"))
+        assert r3.service.cache == "miss"
+        assert int(r3.result.total) == exact
+        # once the exact answer exists, the same approx query upgrades
+        r4 = service.query(q)
+        assert r4.service.cache == "hit" and not r4.service.approximate
+        assert int(r4.result.total) == exact
+        assert service.stats()["approx_served"] == 1
+    finally:
+        service.close()
+
+
+def test_approx_without_pressure_stays_exact():
+    service = ButterflyService(workers=1, refine_approx=False)
+    service.register("g", G1)
+    try:
+        r = service.query(Query(graph="g", accuracy="approx"))
+        assert not r.service.approximate
+        assert r.service.final_rung == "fused"
+        ref = int(count_butterflies(G1, mode="global").total)
+        assert int(r.result.total) == ref
+    finally:
+        service.close()
+
+
+def test_approx_refine_behind_upgrades_to_exact():
+    service = ButterflyService(workers=2, refine_approx=True)
+    service.register("g", G2)
+    try:
+        q = Query(graph="g", accuracy="approx", eps=0.1,
+                  deadline_s=1e-6, allow_stale=False)
+        r = service.query(q)
+        assert r.service.approximate and r.service.refining
+        stop = time.monotonic() + 30.0
+        while time.monotonic() < stop:
+            with service._lock:
+                busy = bool(service._refining)
+            if not busy:
+                break
+            time.sleep(0.01)
+        assert not busy, "refine-behind never completed"
+        r2 = service.query(q)
+        assert r2.service.cache == "hit" and not r2.service.approximate
+        ref = int(count_butterflies(G2, mode="global").total)
+        assert int(r2.result.total) == ref
+        # the refine is deduped: a racing repeat spawns at most one
+        assert service.stats()["served"] >= 3  # approx + refine + hit
     finally:
         service.close()

@@ -1,74 +1,243 @@
-"""Approximate counting (paper §4.4): strict xfail markers.
+"""Approximate counting (paper §6, ROADMAP item 2 — landed).
 
-``core/sparsify.py`` is a seed-state stub that was never wired to the
-engine matrix; its entry points now raise the typed
-:class:`SparsifyNotImplemented` (ROADMAP item 2) instead of returning
-half-supported estimates. These tests xfail *strictly* against exactly
-that error: the moment the approximate tier really lands, the xpass
-turns the marks into failures and forces this file back into real
-assertions (the pre-stub estimator checks are kept in the bodies for
-that day).
+The accuracy tier's contract, exercised end to end:
+
+  - sparsified graphs are honest subgraphs and seeded-deterministic;
+  - every estimator is unbiased enough that a wrong scale factor
+    (1/p^3 vs 1/p^4, N^4 vs N^3, W vs W/2) fails the mean tests;
+  - the reported ci95 actually covers the true count at (at least
+    close to) the stated rate over repeated seeds;
+  - the sparsify methods route through the *exact* fused tile-loop
+    pipeline — asserted on the attached ExecutionReport's plan — and
+    record their estimator parameters on ``report.estimator``;
+  - ``eps`` maps monotonically to sampling budgets, and misuse fails
+    with typed ValueErrors.
+
+Counting passes over thinned graphs recompile per shape (~0.4 s
+each), so the statistical tests budget their seeds deliberately: the
+cheap host-side sampler carries the tight coverage statistics (40
+seeds), the engine-backed sparsifiers a smaller fixed-seed panel.
 """
+import math
+
 import numpy as np
 import pytest
 
-from repro.core import BipartiteGraph  # noqa: F401 - future real tests
+from repro.core import BipartiteGraph
+from repro.core.approx import (
+    ApproxCount,
+    SampleState,
+    sample_count,
+    samples_for_eps,
+)
 from repro.core.oracle import global_count
 from repro.core.sparsify import (
-    SparsifyNotImplemented,
     approx_count,
+    colorful_classes,
     sparsify_colorful,
     sparsify_edges,
 )
 from repro.data.graphs import powerlaw_bipartite
 
-NOT_WIRED = pytest.mark.xfail(
-    raises=SparsifyNotImplemented,
-    reason="core/sparsify.py is a seed-state stub pending ROADMAP item 2 "
-           "(approximate analytics tier); entry points raise the typed "
-           "SparsifyNotImplemented instead of passing vacuously",
-    strict=True,
-)
+G_SMALL = powerlaw_bipartite(200, 150, 1200, seed=0)
+G_MED = powerlaw_bipartite(300, 250, 2500, seed=2)
 
 
-def test_sparsify_error_is_typed():
-    """The stub must fail *typed*: catchable both as the resilience
-    taxonomy and as builtin NotImplementedError, with the ROADMAP
-    pointer in the message."""
-    from repro.core.resilience import ResilienceError
-
-    g = powerlaw_bipartite(50, 40, 200, seed=0)
-    with pytest.raises(ResilienceError):
-        sparsify_edges(g, 0.5)
-    with pytest.raises(NotImplementedError) as ei:
-        approx_count(g, 0.5)
-    assert "ROADMAP item" in str(ei.value)
-    with pytest.raises(NotImplementedError):
-        sparsify_colorful(g, 0.5)
+# ---------------------------------------------------------------------------
+# sparsified graphs
+# ---------------------------------------------------------------------------
 
 
-@NOT_WIRED
 def test_sparsified_graph_is_subgraph():
-    g = powerlaw_bipartite(200, 150, 1200, seed=0)
+    full = {tuple(e) for e in G_SMALL.edges}
     for fn in (sparsify_edges, sparsify_colorful):
-        gs = fn(g, 0.5, seed=1)
-        assert gs.m <= g.m
-        full = {tuple(e) for e in g.edges}
+        gs = fn(G_SMALL, 0.5, seed=1)
+        assert 0 < gs.m < G_SMALL.m
+        assert gs.n_u == G_SMALL.n_u and gs.n_v == G_SMALL.n_v
         assert all(tuple(e) in full for e in gs.edges)
 
 
-@NOT_WIRED
-@pytest.mark.parametrize("method", ["edge", "colorful"])
-def test_estimator_mean_close(method):
-    g = powerlaw_bipartite(300, 250, 2500, seed=2)
-    exact = global_count(g)
-    ests = [approx_count(g, 0.5, method=method, seed=s) for s in range(12)]
-    err = abs(np.mean(ests) - exact) / max(exact, 1)
-    assert err < 0.35, (np.mean(ests), exact)
+def test_sparsify_seeded_determinism():
+    for fn in (sparsify_edges, sparsify_colorful):
+        a = fn(G_SMALL, 0.5, seed=3)
+        b = fn(G_SMALL, 0.5, seed=3)
+        c = fn(G_SMALL, 0.5, seed=4)
+        assert np.array_equal(a.edges, b.edges)
+        assert not np.array_equal(a.edges, c.edges)
+    # the estimator seed covers sub-seeding and sampling too
+    s1 = sample_count(G_SMALL, n_samples=500, seed=9)
+    s2 = sample_count(G_SMALL, n_samples=500, seed=9)
+    assert s1.estimate == s2.estimate and s1.ci95 == s2.ci95
 
 
-@NOT_WIRED
+def test_colorful_classes_rounding():
+    assert colorful_classes(1.0) == 1
+    assert colorful_classes(0.5) == 2
+    assert colorful_classes(0.3) == 3
+    assert colorful_classes(0.24) == 4
+    with pytest.raises(ValueError):
+        colorful_classes(0.0)
+
+
+# ---------------------------------------------------------------------------
+# estimator accuracy: means and coverage
+# ---------------------------------------------------------------------------
+
+
 def test_p_one_is_exact():
-    g = powerlaw_bipartite(100, 80, 500, seed=3)
-    exact = global_count(g)
-    assert int(approx_count(g, 1.0, method="edge", seed=0)) == exact
+    exact = global_count(G_SMALL)
+    for method in ("edges", "colorful", "edge"):  # incl. seed alias
+        r = approx_count(G_SMALL, 1.0, method=method, seed=0)
+        assert isinstance(r, ApproxCount)
+        assert int(r.estimate) == exact
+        assert r.ci95 == 0.0 and r.stddev == 0.0
+
+
+@pytest.mark.parametrize("method", ["edges", "colorful"])
+def test_sparsify_estimator_mean_close(method):
+    """Mean over 10 single-rep seeds within 30% of exact: a wrong
+    survival exponent (p^3 vs p^4 for edges, N^4 vs N^3 for colorful)
+    is a 2x error at p=0.5 and fails by a wide margin."""
+    exact = global_count(G_MED)
+    ests = [
+        approx_count(G_MED, 0.5, method=method, seed=s, reps=1).estimate
+        for s in range(10)
+    ]
+    assert all(e > 0 for e in ests)
+    err = abs(np.mean(ests) - exact) / exact
+    assert err < 0.30, (np.mean(ests), exact, err)
+
+
+def test_sample_estimator_mean_and_coverage():
+    """The sublinear sampler is cheap enough for tight statistics:
+    over 40 seeds the mean lands within 10% of exact (a W vs W/2
+    scale bug is a 2x error) and the stated 95% interval covers the
+    truth at >= 85%."""
+    exact = global_count(G_MED)
+    runs = [sample_count(G_MED, n_samples=2000, seed=s) for s in range(40)]
+    err = abs(np.mean([r.estimate for r in runs]) - exact) / exact
+    assert err < 0.10, err
+    coverage = np.mean([r.covers(exact) for r in runs])
+    assert coverage >= 0.85, coverage
+
+
+@pytest.mark.parametrize("method", ["edges", "colorful"])
+def test_sparsify_ci95_covers(method):
+    """The empirical Student-t interval over ``reps`` sub-seeded
+    sparsifications covers the true count on (almost) every fixed
+    seed — the analytic independent-butterfly interval measurably
+    does not (docs/APPROXIMATION.md §2.3)."""
+    exact = global_count(G_SMALL)
+    covered = sum(
+        approx_count(
+            G_SMALL, 0.5, method=method, seed=s, reps=4
+        ).covers(exact)
+        for s in range(6)
+    )
+    assert covered >= 5, covered
+
+
+def test_derived_p_from_eps_runs():
+    r = approx_count(G_SMALL, method="edges", eps=0.4, reps=1, seed=0)
+    assert 0.0 < r.p <= 1.0
+    assert r.eps == 0.4
+    assert r.estimate >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# routing: the sparsify tier runs the exact fused tile-loop pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_sparsify_routes_through_fused_tile_loop():
+    r = approx_count(G_SMALL, 0.5, method="edges", seed=0, reps=1)
+    rep = r.report
+    assert rep is not None
+    assert rep.final_rung == "fused"
+    assert "engine=fused" in rep.plan
+    assert "count/count_wedges" in rep.plan
+    assert rep.estimator.startswith("approx(method=edges")
+    assert "scale=1/p^4" in rep.estimator
+    assert "kept_m=" in rep.estimator
+    assert "estimator:" in rep.summary()
+
+
+def test_colorful_scale_recorded():
+    r = approx_count(G_SMALL, 0.5, method="colorful", seed=0, reps=1)
+    assert r.p == 0.5  # effective keep probability 1/N
+    assert "scale=N^3=8" in r.report.estimator
+
+
+def test_sample_runs_as_zero_cost_rung():
+    r = approx_count(G_SMALL, method="sample", eps=0.2, seed=0)
+    rep = r.report
+    assert rep is not None
+    assert rep.final_rung == "sample"
+    assert rep.estimator.startswith("approx(method=sample")
+    assert rep.plan is None  # no tile plan: never touches the engines
+
+
+# ---------------------------------------------------------------------------
+# the sampling estimator's surface
+# ---------------------------------------------------------------------------
+
+
+def test_sample_fields_and_describe():
+    r = sample_count(G_MED, eps=0.1, seed=0)
+    assert r.method == "sample"
+    assert r.n_samples == samples_for_eps(0.1)
+    assert r.stddev > 0 and r.ci95 >= 1.9 * r.stddev
+    assert "method=sample" in r.describe()
+    assert f"n={r.n_samples}" in r.describe()
+    assert r.covers(r.estimate)
+    assert not r.covers(r.estimate + 10 * r.ci95 + 1.0)
+
+
+def test_eps_to_samples_monotone():
+    n_loose = samples_for_eps(0.3)
+    n_mid = samples_for_eps(0.1)
+    n_tight = samples_for_eps(0.05)
+    assert n_loose < n_mid < n_tight
+    assert n_loose >= 64
+    assert n_mid == math.ceil(8.0 / 0.1 ** 2)
+    for bad in (0.0, 1.0, -0.1):
+        with pytest.raises(ValueError):
+            samples_for_eps(bad)
+
+
+def test_sample_state_resident_reuse():
+    state = SampleState.build(G_MED)
+    assert state.w_total == min(G_MED.wedge_totals())
+    a = sample_count(state, n_samples=1000, seed=5)
+    b = sample_count(G_MED, n_samples=1000, seed=5)
+    assert a.estimate == b.estimate  # resident state is a pure cache
+
+
+def test_wedgeless_graph_is_exactly_zero():
+    # a perfect matching has no wedges, hence no butterflies
+    edges = np.stack([np.arange(10), np.arange(10)], axis=1)
+    g = BipartiteGraph(10, 10, edges)
+    r = sample_count(g, n_samples=100, seed=0)
+    assert r.estimate == 0.0 and r.ci95 == 0.0
+    r2 = approx_count(g, method="sample", seed=0)
+    assert r2.estimate == 0.0
+
+
+# ---------------------------------------------------------------------------
+# typed misuse
+# ---------------------------------------------------------------------------
+
+
+def test_typed_errors():
+    with pytest.raises(ValueError, match="method"):
+        approx_count(G_SMALL, 0.5, method="magic")
+    with pytest.raises(ValueError, match="p must be in"):
+        approx_count(G_SMALL, 1.5, method="edges")
+    with pytest.raises(ValueError, match="p must be in"):
+        sparsify_edges(G_SMALL, 0.0)
+    with pytest.raises(ValueError, match="eps/n_samples"):
+        approx_count(G_SMALL, 0.5, method="sample")
+    with pytest.raises(ValueError, match="eps"):
+        approx_count(G_SMALL, method="edges", eps=2.0)
+    with pytest.raises(ValueError, match="reps"):
+        approx_count(G_SMALL, 0.5, method="edges", reps=0)
